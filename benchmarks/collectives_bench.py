@@ -1,0 +1,41 @@
+"""Gradient-sync wire accounting + (when dry-run artifacts exist) measured
+collective bytes per mode from the compiled HLO.
+CSV rows: collectives,<case>,0,<bytes or ratio>.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.core.compressors import CompressorConfig
+from repro.dist.collectives import wire_bytes_per_device
+
+RUNS = pathlib.Path(__file__).resolve().parents[1] / "runs" / "dryrun"
+
+
+def main(quick: bool = False):
+    rows = []
+    n = 1_000_000_000  # 1B-element gradient
+    shards = 16
+    fp32 = wire_bytes_per_device(CompressorConfig(method="dsgd"), n, shards, "dsgd")
+    rows.append(f"collectives,dsgd_fp32_bytes_1B,0,{fp32:.3e}")
+    for bits in (2, 3, 4, 8):
+        cfg = CompressorConfig(method="tnqsgd", bits=bits)
+        for mode in ("faithful", "two_phase"):
+            b = wire_bytes_per_device(cfg, n, shards, mode)
+            rows.append(f"collectives,tnqsgd_b{bits}_{mode}_bytes_1B,0,{b:.3e}")
+            rows.append(f"collectives,tnqsgd_b{bits}_{mode}_vs_fp32,0,{fp32/b:.2f}")
+
+    # measured per-device collective bytes from dry-run artifacts, if present
+    if RUNS.exists():
+        for f in sorted(RUNS.glob("*train_4k*16x16*.json"))[:12]:
+            rec = json.loads(f.read_text())
+            r = rec.get("roofline", {})
+            rows.append(
+                f"collectives,measured/{rec['arch']}_{rec.get('sync')},0,{r.get('collective_bytes', 0):.3e}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

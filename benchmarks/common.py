@@ -1,0 +1,74 @@
+"""Shared benchmark utilities: the paper's N-client training loop + timing."""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import CompressorConfig, compress_decompress
+from repro.data.synthetic import client_batches, make_templates, shapes_batch
+from repro.models.smallnet import accuracy, init_smallnet, smallnet_loss
+from repro.optim.optimizers import momentum_sgd
+
+
+def time_us(fn, *args, repeats: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def train_clients(
+    method: str,
+    bits: int,
+    *,
+    rounds: int = 80,
+    n_clients: int = 8,
+    batch: int = 32,
+    lr: float = 0.01,
+    momentum: float = 0.9,
+    weight_decay: float = 5e-4,
+    seed: int = 0,
+    eval_batch: int = 2048,
+):
+    """Paper §V setting: N=8 clients, momentum SGD (0.01/0.9/5e-4), per-layer
+    compression of conv and fc groups.  Returns (accuracy, loss_history)."""
+    templates = make_templates(jax.random.key(42))
+    params = init_smallnet(jax.random.key(seed))
+    opt = momentum_sgd(lr=lr, momentum=momentum, weight_decay=weight_decay)
+    state = opt.init(params)
+    ccfg = CompressorConfig(method=method, bits=bits)
+
+    @jax.jit
+    def round_step(p, s, i):
+        imgs, labels = client_batches(templates, i, n_clients, batch)
+
+        def one_client(c):
+            loss, g = jax.value_and_grad(smallnet_loss)(p, imgs[c], labels[c])
+            if method != "dsgd":
+                key = jax.random.fold_in(jax.random.key(7), i * n_clients + c)
+                leaves, treedef = jax.tree.flatten(g)
+                enc = [
+                    compress_decompress(ccfg, leaf, jax.random.fold_in(key, j))
+                    for j, leaf in enumerate(leaves)
+                ]
+                g = jax.tree.unflatten(treedef, enc)
+            return loss, g
+
+        losses, grads = zip(*[one_client(jnp.uint32(c)) for c in range(n_clients)])
+        gmean = jax.tree.map(lambda *gs: sum(gs) / n_clients, *grads)
+        p, s = opt.update(p, gmean, s, i)
+        return p, s, sum(losses) / n_clients
+
+    hist = []
+    p, s = params, state
+    for i in range(rounds):
+        p, s, l = round_step(p, s, jnp.uint32(i))
+        hist.append(float(l))
+    imgs, labels = shapes_batch(templates, jnp.uint32(10_000), eval_batch)
+    acc = float(accuracy(p, imgs, labels))
+    return acc, hist

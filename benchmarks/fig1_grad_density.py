@@ -1,0 +1,73 @@
+"""Fig. 1 reproduction: gradient density vs Gaussian / Laplace / power-law.
+
+Trains the small conv net briefly, collects per-element gradients, fits all
+three models, and reports tail negative-log-likelihoods — the paper's claim
+is that Gaussian/Laplace tails are far too thin and a power law fits.
+Outputs CSV rows: fig1,<group>,<model>,<tail NLL per element>.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributions import fit_power_law_tail
+from repro.data.synthetic import client_batches, make_templates
+from repro.models.smallnet import grad_groups, init_smallnet, smallnet_loss
+from repro.optim.optimizers import momentum_sgd
+
+
+def collect_gradients(rounds: int = 20, n_clients: int = 8, batch: int = 32):
+    templates = make_templates(jax.random.key(42))
+    params = init_smallnet(jax.random.key(0))
+    opt = momentum_sgd(lr=0.01)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, i):
+        imgs, labels = client_batches(templates, i, n_clients, batch)
+        loss, g = jax.value_and_grad(smallnet_loss)(p, imgs.reshape(-1, 28, 28, 1), labels.reshape(-1))
+        p, s = opt.update(p, g, s, i)
+        return p, s, g
+
+    p, s = params, state
+    g = None
+    for i in range(rounds):
+        p, s, g = step(p, s, jnp.uint32(i))
+    return g
+
+
+def tail_nll(x: np.ndarray, q: float = 0.9) -> dict:
+    """NLL of |x| beyond its q-quantile under each fitted model (per element)."""
+    ax = np.abs(x)
+    gmin = np.quantile(ax, q)
+    tail = ax[ax > gmin]
+    out = {}
+    # Gaussian fitted on all of x: tail density 2*N(t;0,sigma)
+    sigma = x.std()
+    out["gaussian"] = float(np.mean(0.5 * (tail / sigma) ** 2 + np.log(sigma) + 0.5 * np.log(2 * np.pi) - np.log(2)))
+    # Laplace with matched variance (paper Fig. 1 caption)
+    b = x.std() / np.sqrt(2)
+    out["laplace"] = float(np.mean(tail / b + np.log(2 * b) - np.log(2)))
+    # Power law (conditional on exceeding gmin): (gamma-1)/gmin * (t/gmin)^-gamma
+    fit = fit_power_law_tail(jnp.asarray(x), gmin_quantile=q)
+    gamma = float(fit.gamma)
+    out["powerlaw"] = float(np.mean(gamma * np.log(tail / gmin) - np.log((gamma - 1) / gmin)))
+    out["gamma_hat"] = gamma
+    return out
+
+
+def main(quick: bool = False):
+    rows = []
+    g = collect_gradients(rounds=8 if quick else 20)
+    for group, tensors in grad_groups(g).items():
+        x = np.concatenate([np.asarray(t).ravel() for t in tensors])
+        nll = tail_nll(x)
+        for model in ("gaussian", "laplace", "powerlaw"):
+            rows.append(f"fig1_grad_density,{group}/{model},0,{nll[model]:.4f}")
+        rows.append(f"fig1_grad_density,{group}/gamma_hat,0,{nll['gamma_hat']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,26 @@
+"""Fig. 3 reproduction: test accuracy of DSGD vs Q/NQ/TQ/TNQ/TBQ-SGD at b=3,
+N=8 clients, momentum SGD — the paper's headline comparison.
+CSV rows: fig3_accuracy,<method>,<us_per_round>,<accuracy>.
+"""
+from __future__ import annotations
+
+import time
+
+from .common import train_clients
+
+METHODS = ("dsgd", "qsgd", "nqsgd", "tqsgd", "tnqsgd", "tbqsgd")
+
+
+def main(quick: bool = False):
+    rounds = 30 if quick else 120
+    rows = []
+    for m in METHODS:
+        t0 = time.perf_counter()
+        acc, hist = train_clients(m, bits=3, rounds=rounds)
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        rows.append(f"fig3_accuracy,{m},{us:.0f},{acc:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

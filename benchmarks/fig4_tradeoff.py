@@ -1,0 +1,29 @@
+"""Fig. 4 reproduction: communication budget (bits) vs test accuracy.
+CSV rows: fig4_tradeoff,<method>@b<bits>,<wire_bytes_per_param>,<accuracy>.
+"""
+from __future__ import annotations
+
+from repro.core.compressors import CompressorConfig, wire_bytes
+
+from .common import train_clients
+
+METHODS = ("qsgd", "tqsgd", "tnqsgd")
+BITS = (2, 3, 4)
+
+
+def main(quick: bool = False):
+    rounds = 25 if quick else 100
+    rows = []
+    for m in METHODS:
+        for b in BITS:
+            acc, _ = train_clients(m, bits=b, rounds=rounds)
+            bpp = wire_bytes(CompressorConfig(method=m, bits=b), 100_000) / 100_000
+            rows.append(f"fig4_tradeoff,{m}@b{b},0,{acc:.4f}")
+            rows.append(f"fig4_tradeoff,{m}@b{b}_bytes_per_param,0,{bpp:.4f}")
+    acc, _ = train_clients("dsgd", bits=8, rounds=rounds)  # bits unused for dsgd
+    rows.append(f"fig4_tradeoff,dsgd@b32,0,{acc:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

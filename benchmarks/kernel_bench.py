@@ -1,0 +1,47 @@
+"""Kernel micro-benchmarks: fused Pallas encode/decode (interpret on CPU —
+timings are correctness-path numbers, not TPU perf) vs the jnp reference.
+CSV rows: kernels,<name>,<us_per_call>,<gbps_effective>.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sample_power_law
+from repro.kernels import ops, ref
+from repro.kernels.ops import _to_2d
+
+from .common import time_us
+
+
+def main(quick: bool = False):
+    n = 2**18 if quick else 2**20
+    g = sample_power_law(jax.random.key(0), (n,), gamma=4.0, g_min=0.01, rho=0.1)
+    alpha = jnp.float32(0.05)
+    key = jax.random.key(1)
+    levels = jnp.linspace(-0.05, 0.05, 8)
+    rows = []
+
+    f_kern = jax.jit(lambda g: ops.uniform_encode(g, alpha, 3, key))
+    us = time_us(f_kern, g, repeats=5)
+    rows.append(f"kernels,pallas_uniform_encode_{n},{us:.0f},{n*4/us/1e3:.2f}")
+
+    g2, _ = _to_2d(g)
+    rnd = jax.random.uniform(key, g2.shape)
+    f_ref = jax.jit(lambda g2: ref.uniform_encode(g2, alpha, 3, rnd))
+    us = time_us(f_ref, g2, repeats=5)
+    rows.append(f"kernels,ref_uniform_encode_{n},{us:.0f},{n*4/us/1e3:.2f}")
+
+    f_kern2 = jax.jit(lambda g: ops.codebook_encode(g, levels, key))
+    us = time_us(f_kern2, g, repeats=5)
+    rows.append(f"kernels,pallas_codebook_encode_{n},{us:.0f},{n*4/us/1e3:.2f}")
+
+    codes = f_kern(g)
+    f_dec = jax.jit(lambda c: ops.codebook_decode(c, levels))
+    us = time_us(f_dec, codes, repeats=5)
+    rows.append(f"kernels,pallas_codebook_decode_{n},{us:.0f},{n/us/1e3:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

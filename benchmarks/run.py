@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` uses the paper-scale
+round counts (slow on CPU); the default quick mode validates the orderings.
+"""
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale round counts")
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from . import collectives_bench, fig1_grad_density, fig3_accuracy, fig4_tradeoff, kernel_bench, quant_error
+
+    suites = {
+        "quant_error": quant_error.main,
+        "kernels": kernel_bench.main,
+        "collectives": collectives_bench.main,
+        "fig1_grad_density": fig1_grad_density.main,
+        "fig3_accuracy": fig3_accuracy.main,
+        "fig4_tradeoff": fig4_tradeoff.main,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.perf_counter()
+        try:
+            rows = fn(quick=quick)
+        except Exception as e:  # pragma: no cover
+            print(f"{name},ERROR,0,{type(e).__name__}:{e}", flush=True)
+            raise
+        for r in rows:
+            print(r, flush=True)
+        print(f"{name}__total,{(time.perf_counter()-t0)*1e6:.0f},", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

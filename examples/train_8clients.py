@@ -1,0 +1,28 @@
+"""End-to-end driver: the paper's §V experiment shape — 8 clients, momentum
+SGD, per-layer truncated quantization — on the synthetic shapes dataset.
+
+Run:  PYTHONPATH=src python examples/train_8clients.py --method tnqsgd --rounds 120
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "benchmarks") if False else None  # benchmarks is a package
+
+from benchmarks.common import train_clients
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--method", default="tnqsgd",
+                    choices=["dsgd", "qsgd", "nqsgd", "tqsgd", "tnqsgd", "tbqsgd"])
+    ap.add_argument("--bits", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--clients", type=int, default=8)
+    args = ap.parse_args()
+    acc, hist = train_clients(args.method, args.bits, rounds=args.rounds, n_clients=args.clients)
+    print(f"loss: {hist[0]:.3f} -> {hist[-1]:.3f} over {args.rounds} rounds")
+    print(f"test accuracy ({args.method}, b={args.bits}, N={args.clients}): {acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

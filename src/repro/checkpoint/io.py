@@ -1,0 +1,74 @@
+"""Minimal pytree checkpointing (npz-based, no external deps).
+
+Layout: <dir>/step_<N>/arrays.npz + tree.json (treedef via flattened key
+paths).  Multi-host is out of scope for the CPU container; sharded arrays
+are gathered on save (callers checkpoint from unsharded copies in tests).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save_checkpoint(directory: str | pathlib.Path, step: int, tree: Any) -> pathlib.Path:
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    items = _flatten_with_paths(tree)
+    arrays = {}
+    dtypes = {}
+    for i, (k, v) in enumerate(items):
+        a = np.asarray(v)
+        dtypes[f"a{i}"] = str(a.dtype)
+        if a.dtype == jax.numpy.bfloat16:
+            a = a.view(np.uint16)  # numpy.savez cannot serialize bf16
+        arrays[f"a{i}"] = a
+    np.savez(d / "arrays.npz", **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    (d / "tree.json").write_text(json.dumps({
+        "paths": [k for k, _ in items],
+        "dtypes": dtypes,
+        "treedef": str(treedef),
+        "step": step,
+    }))
+    return d
+
+
+def load_checkpoint(directory: str | pathlib.Path, tree_like: Any, step: int | None = None) -> tuple[Any, int]:
+    """Restore into the structure of ``tree_like``; returns (tree, step)."""
+    root = pathlib.Path(directory)
+    if step is None:
+        steps = sorted(p.name for p in root.glob("step_*"))
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+        d = root / steps[-1]
+        step = int(steps[-1].split("_")[1])
+    else:
+        d = root / f"step_{step:08d}"
+    data = np.load(d / "arrays.npz")
+    meta = json.loads((d / "tree.json").read_text())
+    dtypes = meta.get("dtypes", {})
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    if len(data.files) != len(leaves):
+        raise ValueError(f"checkpoint has {len(data.files)} leaves, expected {len(leaves)}")
+    restored = []
+    for i in range(len(leaves)):
+        a = data[f"a{i}"]
+        if dtypes.get(f"a{i}") == "bfloat16":
+            a = a.view(jax.numpy.bfloat16)
+        restored.append(jax.numpy.asarray(a))
+    return jax.tree_util.tree_unflatten(treedef, restored), step
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    root = pathlib.Path(directory)
+    steps = sorted(p.name for p in root.glob("step_*"))
+    return int(steps[-1].split("_")[1]) if steps else None

@@ -1,0 +1,33 @@
+"""Core of the paper's contribution: truncated quantization for DSGD.
+
+Public API:
+- distributions: power-law tail fitting (Hill/MLE), empirical densities
+- quantizers:    truncation + stochastic codebook quantization + bit packing
+- optimal:       α / λ_s solvers for TQSGD / TNQSGD / TBQSGD
+- compressors:   method registry with plan/encode/decode over pytrees
+- theory:        closed-form error expressions for validation
+"""
+from . import compressors, distributions, optimal, quantizers, theory
+from .compressors import METHODS, CompressorConfig, compress_decompress, tree_compress_decompress
+from .distributions import PowerLawTail, fit_power_law_tail, sample_power_law
+from .quantizers import QuantMeta, decode, num_levels, stochastic_encode, truncate
+
+__all__ = [
+    "METHODS",
+    "CompressorConfig",
+    "PowerLawTail",
+    "QuantMeta",
+    "compress_decompress",
+    "compressors",
+    "decode",
+    "distributions",
+    "fit_power_law_tail",
+    "num_levels",
+    "optimal",
+    "quantizers",
+    "sample_power_law",
+    "stochastic_encode",
+    "theory",
+    "tree_compress_decompress",
+    "truncate",
+]

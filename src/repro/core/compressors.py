@@ -1,0 +1,161 @@
+"""Gradient compressor registry — the paper's algorithms as composable ops.
+
+A compressor turns a gradient tensor into (packed codes, QuantMeta) and back.
+Methods:
+
+- ``dsgd``   : identity (no compression, fp32 wire format);
+- ``qsgd``   : uniform quantization, α = max|g| (Alistarh et al. baseline);
+- ``nqsgd``  : non-uniform (λ ∝ p^(1/3)), no truncation (α = max|g|);
+- ``tqsgd``  : truncated uniform, α from Eq. 12;
+- ``tnqsgd`` : truncated non-uniform, λ from Eq. 18, α from Eq. 19;
+- ``tbqsgd`` : truncated bi-scaled (Appendix D), α/k from Eq. 29-33.
+
+Everything is jit-able and shape-static.  ``plan`` computes the per-tensor
+codebook (the expensive statistics pass); ``encode``/``decode`` are the wire
+ops.  The Pallas fast path (repro.kernels) is used automatically for encode/
+decode of uniform codebooks when enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import distributions as dist
+from . import optimal
+from .quantizers import (
+    QuantMeta,
+    decode as _decode,
+    num_levels,
+    pack_codes,
+    stochastic_encode,
+    unpack_codes,
+    uniform_levels,
+)
+
+METHODS = ("dsgd", "qsgd", "nqsgd", "tqsgd", "tnqsgd", "tbqsgd")
+TRUNCATED = ("tqsgd", "tnqsgd", "tbqsgd")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorConfig:
+    method: str = "tnqsgd"
+    bits: int = 3
+    gmin_quantile: float = 0.9     # |g| quantile used as g_min for the tail fit
+    hist_bins: int = 128           # empirical-density resolution
+    alpha_iters: int = 10          # fixed-point iterations for α
+    use_pallas: bool = False       # fused encode kernel for uniform codebooks
+    pack: bool = True              # bit-pack codes into uint32 words on the wire
+    plan_sample: int = 65536       # max elements used for the statistics pass
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; expected one of {METHODS}")
+        if not (1 <= self.bits <= 8):
+            raise ValueError("bits must be in [1, 8]")
+
+    @property
+    def s(self) -> int:
+        return num_levels(self.bits)
+
+
+def plan(cfg: CompressorConfig, g: jax.Array) -> QuantMeta:
+    """Build the per-tensor quantization plan (codebook + α) for ``g``.
+
+    This is the statistics pass of Alg. 1 line 6: fit the power-law tail,
+    solve for α per the method, construct the codebook.  Tensors beyond
+    ``plan_sample`` elements are strided-subsampled for the statistics (the
+    tail fit is estimation; the encode itself always sees every element).
+    """
+    g32 = g.reshape(-1).astype(jnp.float32)
+    if cfg.plan_sample and g32.size > cfg.plan_sample:
+        stride = -(-g32.size // cfg.plan_sample)
+        g32 = g32[::stride]
+    tail = dist.fit_power_law_tail(g32, gmin_quantile=cfg.gmin_quantile)
+    if cfg.method == "qsgd":
+        alpha = tail.g_max
+        levels = uniform_levels(alpha, cfg.bits)
+    elif cfg.method == "nqsgd":
+        dens = dist.fit_empirical_density(g32, num_bins=cfg.hist_bins)
+        alpha = tail.g_max
+        levels = optimal.nonuniform_codebook(dens, alpha, cfg.bits)
+    elif cfg.method == "tqsgd":
+        alpha = optimal.solve_alpha_uniform(tail, cfg.bits, iters=cfg.alpha_iters)
+        levels = uniform_levels(alpha, cfg.bits)
+    elif cfg.method == "tnqsgd":
+        dens = dist.fit_empirical_density(g32, num_bins=cfg.hist_bins)
+        alpha = optimal.solve_alpha_nonuniform(tail, dens, cfg.bits, iters=cfg.alpha_iters)
+        levels = optimal.nonuniform_codebook(dens, alpha, cfg.bits)
+    elif cfg.method == "tbqsgd":
+        dens = dist.fit_empirical_density(g32, num_bins=cfg.hist_bins)
+        alpha, k = optimal.solve_biscaled(tail, dens, cfg.bits, iters=cfg.alpha_iters)
+        levels = optimal.biscaled_codebook(dens, alpha, k, cfg.bits)
+    else:  # dsgd
+        alpha = tail.g_max
+        levels = uniform_levels(alpha, cfg.bits)
+    return QuantMeta(levels=levels.astype(jnp.float32), alpha=jnp.asarray(alpha, jnp.float32))
+
+
+def encode(cfg: CompressorConfig, g: jax.Array, meta: QuantMeta, key: jax.Array) -> jax.Array:
+    """Encode ``g`` to the wire format (packed uint32 words, or uint8 codes)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    if cfg.use_pallas and cfg.method in ("qsgd", "tqsgd", "dsgd"):
+        from repro.kernels import ops as kops
+
+        codes = kops.uniform_encode(flat, meta.alpha, cfg.bits, key)
+    elif cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        codes = kops.codebook_encode(flat, meta.levels, key)
+    else:
+        codes = stochastic_encode(flat, meta, key)
+    if cfg.pack:
+        return pack_codes(codes, cfg.bits)
+    return codes
+
+
+def decode(cfg: CompressorConfig, wire: jax.Array, meta: QuantMeta, shape: tuple[int, ...]) -> jax.Array:
+    n = 1
+    for d in shape:
+        n *= d
+    codes = unpack_codes(wire, n, cfg.bits) if cfg.pack else wire
+    return _decode(codes, meta).reshape(shape)
+
+
+def compress_decompress(cfg: CompressorConfig, g: jax.Array, key: jax.Array) -> jax.Array:
+    """One-shot quantization surrogate  C_b[g]  (what the server receives)."""
+    if cfg.method == "dsgd":
+        return g
+    meta = plan(cfg, g)
+    wire = encode(cfg, g, meta, key)
+    return decode(cfg, wire, meta, g.shape).astype(g.dtype)
+
+
+def wire_bytes(cfg: CompressorConfig, n_elements: int) -> int:
+    """Bytes on the wire for one tensor of ``n_elements`` (payload + meta)."""
+    if cfg.method == "dsgd":
+        return 4 * n_elements
+    from .quantizers import packed_size
+
+    payload = 4 * packed_size(n_elements, cfg.bits) if cfg.pack else n_elements
+    meta = 4 * (cfg.s + 2)
+    return payload + meta
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level API: per-tensor plans over a gradient pytree (the paper
+# quantizes conv and fc layers independently; we generalise to per-tensor).
+# ---------------------------------------------------------------------------
+
+
+def tree_compress_decompress(cfg: CompressorConfig, grads: Any, key: jax.Array) -> Any:
+    """Apply the two-stage quantizer independently to every tensor in a pytree."""
+    if cfg.method == "dsgd":
+        return grads
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = [compress_decompress(cfg, leaf, k) for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)

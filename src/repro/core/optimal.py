@@ -1,0 +1,171 @@
+"""Optimal quantizer-parameter design (paper §IV + Appendix D).
+
+Solves for the truncation threshold α and the quantization density λ_s for
+the three truncated schemes:
+
+- TQSGD  (uniform):     α fixed-point of Eq. 12 with Q_U(α);
+- TNQSGD (non-uniform): λ ∝ p^(1/3) (Eq. 18), α fixed-point of Eq. 19 with Q_N;
+- TBQSGD (bi-scaled):   piecewise-uniform λ (Eq. 25/34), split s_α/s_β
+  (Eq. 29/30), k* by grid search, α fixed-point of Eq. 33 with Q_B.
+
+All solvers run a fixed number of fixed-point iterations (jit-friendly) and
+clamp α into [g_min, g_max]: thresholds above the observed max are pointless,
+below g_min the power-law model does not apply.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .distributions import (
+    EmpiricalDensity,
+    PowerLawTail,
+    cum_p,
+    cum_p_third,
+    interp_cum,
+    q_u,
+)
+from .quantizers import levels_from_density, num_levels, uniform_levels
+
+_EPS = 1e-12
+
+
+def _alpha_fixed_point(tail: PowerLawTail, s: int, q_fn, iters: int) -> jax.Array:
+    """Generic alternating iteration  α ← g_min · [2ρs²/((γ-2)·Q(α))]^{1/(γ-1)}.
+
+    ``q_fn(alpha) -> Q(alpha)`` is Q_U / Q_N / Q_B.  Starts from Q = 1 (the
+    paper's approximation α'); a handful of iterations suffices because Q is
+    monotone in α and bounded in (0, 1].
+    """
+    gamma, g_min, rho = tail.gamma, tail.g_min, tail.rho
+    expo = 1.0 / (gamma - 1.0)
+
+    def base(q):
+        return g_min * jnp.power(2.0 * rho * s * s / ((gamma - 2.0) * jnp.maximum(q, _EPS)), expo)
+
+    def body(_, alpha):
+        alpha = jnp.clip(alpha, tail.g_min, tail.g_max)
+        return base(q_fn(alpha))
+
+    alpha0 = base(jnp.asarray(1.0, jnp.float32))
+    alpha = jax.lax.fori_loop(0, iters, body, alpha0)
+    return jnp.clip(alpha, tail.g_min, tail.g_max)
+
+
+# ---------------------------------------------------------------------------
+# TQSGD: truncated uniform
+# ---------------------------------------------------------------------------
+
+
+def solve_alpha_uniform(tail: PowerLawTail, bits: int, *, iters: int = 10) -> jax.Array:
+    """Optimal α for the truncated *uniform* quantizer (Eq. 12)."""
+    s = num_levels(bits)
+    return _alpha_fixed_point(tail, s, lambda a: q_u(tail, a), iters)
+
+
+def uniform_codebook(alpha: jax.Array, bits: int) -> jax.Array:
+    return uniform_levels(alpha, bits).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# TNQSGD: truncated non-uniform, λ ∝ p^(1/3)
+# ---------------------------------------------------------------------------
+
+
+def q_n(dens: EmpiricalDensity, alpha: jax.Array) -> jax.Array:
+    """Q_N(α) = [ ∫_{-α}^{α} p^(1/3) (1/2α)^(2/3) dg ]^3  (Eq. 19), from the
+    empirical density (the power law only covers the tail; the integral runs
+    over the whole truncation range)."""
+    c13 = cum_p_third(dens)
+    one_sided = interp_cum(c13, dens, alpha)          # ∫_0^α p^(1/3)
+    full = 2.0 * one_sided                            # symmetric
+    return jnp.power(full, 3.0) / jnp.maximum((2.0 * alpha) ** 2, _EPS)
+
+
+def solve_alpha_nonuniform(
+    tail: PowerLawTail, dens: EmpiricalDensity, bits: int, *, iters: int = 10
+) -> jax.Array:
+    """Optimal α for the non-uniform quantizer (Eq. 19 fixed point)."""
+    s = num_levels(bits)
+    return _alpha_fixed_point(tail, s, lambda a: jnp.clip(q_n(dens, a), _EPS, 1.0), iters)
+
+
+def nonuniform_codebook(dens: EmpiricalDensity, alpha: jax.Array, bits: int) -> jax.Array:
+    """Codebook with λ ∝ p^(1/3) on [-α, α] (Eq. 18), from the empirical density.
+
+    A fresh |g| grid over [0, α] is built (jit-friendly: same bin count, α may
+    be traced) and the density is *interpolated* onto it, so only the portion
+    of the histogram inside the truncation range shapes the codebook.
+    """
+    k = dens.num_bins
+    edges = jnp.linspace(0.0, 1.0, k + 1) * alpha
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    centers_src = 0.5 * (dens.edges[:-1] + dens.edges[1:])
+    p = jnp.interp(centers, centers_src, dens.density)
+    lam = jnp.power(jnp.maximum(p, 0.0), 1.0 / 3.0)
+    # Give empty bins a tiny floor so levels stay strictly increasing.
+    lam = jnp.maximum(lam, 1e-6 * jnp.max(lam))
+    return levels_from_density(edges, lam, bits)
+
+
+# ---------------------------------------------------------------------------
+# TBQSGD: truncated bi-scaled (Appendix D)
+# ---------------------------------------------------------------------------
+
+
+def q_b(dens: EmpiricalDensity, alpha: jax.Array, k: jax.Array) -> jax.Array:
+    """Q_B(α, k) of Appendix D:
+    [ (2∫_{kα}^{α} p)^{1/3} (1-k)^{2/3} + (2∫_0^{kα} p)^{1/3} k^{2/3} ]^3.
+    """
+    cp = cum_p(dens)
+    inner = 2.0 * interp_cum(cp, dens, k * alpha)
+    outer = 2.0 * (interp_cum(cp, dens, alpha) - interp_cum(cp, dens, k * alpha))
+    inner = jnp.maximum(inner, 0.0)
+    outer = jnp.maximum(outer, 0.0)
+    term = jnp.power(outer, 1 / 3) * jnp.power(1.0 - k, 2 / 3) + jnp.power(inner, 1 / 3) * jnp.power(k, 2 / 3)
+    return jnp.power(term, 3.0)
+
+
+def solve_biscaled(
+    tail: PowerLawTail,
+    dens: EmpiricalDensity,
+    bits: int,
+    *,
+    iters: int = 10,
+    k_grid: int = 49,
+) -> tuple[jax.Array, jax.Array]:
+    """One-step alternating minimisation of Appendix D: k* = argmin_k Q_B(α, k)
+    on a grid, then α from Eq. 33 (iterated).  Returns (alpha, k_star)."""
+    ks = jnp.linspace(0.02, 0.98, k_grid)
+    s = num_levels(bits)
+
+    def q_best(alpha):
+        qs = jax.vmap(lambda k: q_b(dens, alpha, k))(ks)
+        return jnp.clip(jnp.min(qs), _EPS, 1.0)
+
+    alpha = _alpha_fixed_point(tail, s, q_best, iters)
+    qs = jax.vmap(lambda k: q_b(dens, alpha, k))(ks)
+    k_star = ks[jnp.argmin(qs)]
+    return alpha, k_star
+
+
+def biscaled_codebook(
+    dens: EmpiricalDensity, alpha: jax.Array, k: jax.Array, bits: int
+) -> jax.Array:
+    """Piecewise-uniform codebook per Eq. 34: density λ takes one value on
+    |g| < kα and another on kα <= |g| <= α, with the split given by the
+    cube-root rule (Eq. 29/30)."""
+    cp = cum_p(dens)
+    beta = k * alpha
+    mass_in = 2.0 * interp_cum(cp, dens, beta)
+    mass_out = 2.0 * (interp_cum(cp, dens, alpha) - interp_cum(cp, dens, beta))
+    p1 = jnp.maximum(mass_in, _EPS) / jnp.maximum(2.0 * beta, _EPS)      # avg density inside
+    p2 = jnp.maximum(mass_out, _EPS) / jnp.maximum(2.0 * (alpha - beta), _EPS)
+    lam_in = jnp.power(p1, 1 / 3)
+    lam_out = jnp.power(p2, 1 / 3)
+    nbins = dens.num_bins
+    edges = jnp.linspace(0.0, 1.0, nbins + 1) * alpha
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    lam = jnp.where(centers < beta, lam_in, lam_out)
+    lam = jnp.maximum(lam, 1e-6 * jnp.maximum(lam_in, lam_out))
+    return levels_from_density(edges, lam, bits)

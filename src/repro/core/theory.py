@@ -1,0 +1,81 @@
+"""Closed-form error expressions from the paper, for validation benchmarks.
+
+These mirror Eq. (11), (15), (27) and the theorem bounds so tests/benchmarks
+can compare the *measured* quantization MSE of each scheme against the
+analytical prediction under the power-law model.
+All expressions are per-element (the paper's E_TQ carries a d/N factor which
+is constant across schemes and dropped here unless requested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .distributions import EmpiricalDensity, PowerLawTail, q_u, truncation_bias
+from .optimal import q_b, q_n
+from .quantizers import num_levels
+
+_EPS = 1e-12
+
+
+def quant_variance_uniform(tail: PowerLawTail, alpha: jax.Array, bits: int) -> jax.Array:
+    """First term of Eq. 11 (per element):  Q_U(α) α² / s²  · (1/4·4 = 1)…
+
+    Eq. 11 states  E_var = Q_U(α) α² / s²  after substituting λ = s/2α into
+    (1/4)∫ p/λ²:  (1/4)(2α/s)² ∫ p = α² Q_U / s².
+    """
+    s = num_levels(bits)
+    return q_u(tail, alpha) * alpha**2 / s**2
+
+
+def quant_variance_density(
+    dens: EmpiricalDensity, levels: jax.Array
+) -> jax.Array:
+    """(1/4) Σ_k P_k |Δ_k|²  (Lemma 1 bound) for an arbitrary codebook,
+    evaluated under the empirical density."""
+    from .distributions import cum_p, interp_cum
+
+    cp = cum_p(dens)
+    # Mass in [l_{k-1}, l_k] under the symmetric density: use |g| cumulative.
+    def mass(lo, hi):
+        def one_sided(x):
+            return jnp.sign(x) * interp_cum(cp, dens, jnp.abs(x))
+        return one_sided(hi) - one_sided(lo)
+
+    lo = levels[:-1]
+    hi = levels[1:]
+    pk = jax.vmap(mass)(lo, hi)
+    return 0.25 * jnp.sum(jnp.maximum(pk, 0.0) * (hi - lo) ** 2)
+
+
+def e_tq_uniform(tail: PowerLawTail, alpha: jax.Array, bits: int) -> jax.Array:
+    """Per-element E_TQ for the truncated uniform quantizer (Eq. 11 without d/N)."""
+    return quant_variance_uniform(tail, alpha, bits) + truncation_bias(tail, alpha)
+
+
+def e_tq_bound(tail: PowerLawTail, q_value: jax.Array, bits: int) -> jax.Array:
+    """Theorem 1/2/3 master bound (per element, without d/N):
+
+        (γ-1) Q^{(γ-3)/(γ-1)} · g_min² (2ρ)^{2/(γ-1)} s^{(6-2γ)/(γ-1)}
+        / ((γ-3)(γ-2)^{2/(γ-1)})
+
+    with Q = Q_U, Q_N or Q_B for TQSGD / TNQSGD / TBQSGD respectively.
+    """
+    s = num_levels(bits)
+    ga, gm, rho = tail.gamma, tail.g_min, tail.rho
+    num = (ga - 1.0) * jnp.power(q_value, (ga - 3.0) / (ga - 1.0))
+    num = num * gm**2 * jnp.power(2.0 * rho, 2.0 / (ga - 1.0)) * jnp.power(jnp.asarray(s, jnp.float32), (6.0 - 2.0 * ga) / (ga - 1.0))
+    den = (ga - 3.0) * jnp.power(ga - 2.0, 2.0 / (ga - 1.0))
+    return num / jnp.maximum(den, _EPS)
+
+
+def holder_chain(tail: PowerLawTail, dens: EmpiricalDensity, alpha: jax.Array, k: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (Q_N, Q_B, Q_U) at a common α — the paper's Hölder ordering
+    Q_N ≤ Q_B ≤ Q_U (non-uniform at least as good as bi-scaled, which is at
+    least as good as uniform)."""
+    return q_n(dens, alpha), q_b(dens, alpha, k), q_u(tail, alpha)
+
+
+def dsgd_error(f0_minus_fstar: float, eta: float, T: int, sigma2: float, n_clients: int, batch: int) -> float:
+    """E_DSGD of Eq. 7: 2ΔF/(Tη) + σ²/(NB)."""
+    return 2.0 * f0_minus_fstar / (T * eta) + sigma2 / (n_clients * batch)

@@ -1,0 +1,107 @@
+"""Deterministic synthetic data pipelines.
+
+Two generators:
+- ``lm_batch``: token streams for the LM zoo (Zipf-ish marginals so the loss
+  has structure), plus the modality extras each family needs (patch
+  embeddings + M-RoPE positions for VLM, frame embeddings for audio).
+- ``classification dataset``: 28x28 10-class "shapes" images for the paper's
+  MNIST-style experiments — fixed random class templates + pixel noise +
+  occasional outlier samples (keeps gradients heavy-tailed like Fig. 1).
+
+Everything is pure-functional on a seed: step t of any pipeline is
+reproducible from (seed, t), which is what checkpoint-resume tests rely on.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Batch
+
+
+def _zipf_tokens(key, shape, vocab: int) -> jax.Array:
+    """Zipf-like marginal over the vocab (heavier head, long tail)."""
+    u = jax.random.uniform(key, shape, minval=1e-6, maxval=1.0)
+    r = jnp.power(u, 3.0)  # skew toward 0
+    return jnp.clip((r * vocab).astype(jnp.int32), 0, vocab - 1)
+
+
+def make_mrope_positions(batch: int, seq: int, n_patches: int, grid: int = 16) -> jax.Array:
+    """(3, B, S) positions: image patches get (t=0, h, w); text continues."""
+    hh = jnp.arange(n_patches) // grid
+    ww = jnp.arange(n_patches) % grid
+    t_img = jnp.zeros((n_patches,), jnp.int32)
+    text_start = (jnp.maximum(hh[-1], ww[-1]) + 1).astype(jnp.int32)
+    t_text = text_start + jnp.arange(seq - n_patches, dtype=jnp.int32)
+    tpos = jnp.concatenate([t_img, t_text])
+    hpos = jnp.concatenate([hh.astype(jnp.int32), t_text])
+    wpos = jnp.concatenate([ww.astype(jnp.int32), t_text])
+    pos = jnp.stack([tpos, hpos, wpos])                       # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+
+
+@partial(jax.jit, static_argnames=("cfg", "batch", "seq"))
+def lm_batch(cfg, seed: jax.Array, batch: int, seq: int) -> Batch:
+    """One training batch for any zoo config."""
+    key = jax.random.fold_in(jax.random.key(0), seed)
+    k_tok, k_extra = jax.random.split(key)
+    tokens = _zipf_tokens(k_tok, (batch, seq), cfg.vocab)
+    labels = jnp.roll(tokens, -1, axis=1).at[:, -1].set(-1)
+    positions = None
+    patches = None
+    frames = None
+    if cfg.vlm_patches:
+        patches = jax.random.normal(k_extra, (batch, cfg.vlm_patches, cfg.vlm_vision_dim), jnp.float32)
+        positions = make_mrope_positions(batch, seq, cfg.vlm_patches)
+        labels = labels.at[:, : cfg.vlm_patches].set(-1)
+    if cfg.enc_dec:
+        frames = jax.random.normal(k_extra, (batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return Batch(tokens=tokens, labels=labels, positions=positions, patches=patches, frames=frames)
+
+
+# ---------------------------------------------------------------------------
+# Classification dataset for the paper's experiments (MNIST stand-in).
+# ---------------------------------------------------------------------------
+
+
+def make_templates(key, num_classes: int = 10, hw: int = 28) -> jax.Array:
+    """Fixed smooth class templates (num_classes, hw, hw)."""
+    base = jax.random.normal(key, (num_classes, hw, hw))
+    # Smooth with a small box filter to create structure.
+    kernel = jnp.ones((5, 5)) / 25.0
+    sm = jax.vmap(lambda img: jax.scipy.signal.convolve2d(img, kernel, mode="same"))(base)
+    return sm / jnp.maximum(jnp.std(sm, axis=(1, 2), keepdims=True), 1e-6)
+
+
+@partial(jax.jit, static_argnames=("batch", "hw", "outlier_frac"))
+def shapes_batch(
+    templates: jax.Array,
+    seed: jax.Array,
+    batch: int,
+    hw: int = 28,
+    noise: float = 0.6,
+    outlier_frac: float = 0.02,
+):
+    """Returns (images (B, hw, hw, 1), labels (B,)).  A small fraction of
+    samples get 10x amplified noise — the outliers that make gradients
+    heavy-tailed (paper Fig. 1's regime)."""
+    nc = templates.shape[0]
+    key = jax.random.fold_in(jax.random.key(1), seed)
+    k_lab, k_noise, k_out = jax.random.split(key, 3)
+    labels = jax.random.randint(k_lab, (batch,), 0, nc)
+    imgs = templates[labels]
+    eps = jax.random.normal(k_noise, imgs.shape) * noise
+    is_out = jax.random.uniform(k_out, (batch, 1, 1)) < outlier_frac
+    imgs = imgs + jnp.where(is_out, 10.0 * eps, eps)
+    return imgs[..., None].astype(jnp.float32), labels
+
+
+def client_batches(templates, seed: jax.Array, n_clients: int, batch: int):
+    """Per-client batches for the N-client DSGD experiments."""
+    imgs, labels = shapes_batch(templates, seed, n_clients * batch)
+    return (
+        imgs.reshape(n_clients, batch, *imgs.shape[1:]),
+        labels.reshape(n_clients, batch),
+    )

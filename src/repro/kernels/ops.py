@@ -1,0 +1,72 @@
+"""jit'd public wrappers around the Pallas quantization kernels.
+
+Handles flattening/padding to the (rows, 128) kernel layout, dtype
+narrowing, and the CPU fallback (interpret=True) so the same API runs in
+tests and on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize as _k
+
+LANES = _k.LANES
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_2d(x: jax.Array) -> tuple[jax.Array, int]:
+    n = x.size
+    rows = -(-n // LANES)
+    pad = rows * LANES - n
+    x2 = jnp.pad(x.reshape(-1), (0, pad)).reshape(rows, LANES)
+    return x2, n
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def uniform_encode(
+    g: jax.Array, alpha: jax.Array, bits: int, key: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """Fused truncate + uniform stochastic encode.  Returns flat uint8 codes."""
+    interpret = _use_interpret() if interpret is None else interpret
+    g2, n = _to_2d(g.astype(jnp.float32))
+    rand = jax.random.uniform(key, g2.shape, jnp.float32)
+    codes = _k.uniform_encode_2d(g2, rand, alpha.astype(jnp.float32), bits=bits, interpret=interpret)
+    return codes.reshape(-1)[:n].astype(jnp.uint8)
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def uniform_decode(
+    codes: jax.Array, alpha: jax.Array, bits: int, *, interpret: bool | None = None
+) -> jax.Array:
+    interpret = _use_interpret() if interpret is None else interpret
+    c2, n = _to_2d(codes.astype(jnp.int32))
+    vals = _k.uniform_decode_2d(c2, alpha.astype(jnp.float32), bits=bits, interpret=interpret)
+    return vals.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def codebook_encode(
+    g: jax.Array, levels: jax.Array, key: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """Fused truncate + non-uniform stochastic encode onto ``levels``."""
+    interpret = _use_interpret() if interpret is None else interpret
+    g2, n = _to_2d(g.astype(jnp.float32))
+    rand = jax.random.uniform(key, g2.shape, jnp.float32)
+    codes = _k.codebook_encode_2d(g2, rand, levels.astype(jnp.float32), interpret=interpret)
+    return codes.reshape(-1)[:n].astype(jnp.uint8)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def codebook_decode(
+    codes: jax.Array, levels: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    interpret = _use_interpret() if interpret is None else interpret
+    c2, n = _to_2d(codes.astype(jnp.int32))
+    vals = _k.codebook_decode_2d(c2, levels.astype(jnp.float32), interpret=interpret)
+    return vals.reshape(-1)[:n]

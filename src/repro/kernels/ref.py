@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the quantization kernels.
+
+These mirror ``repro.core.quantizers`` but take an explicit uniform-random
+array (the kernels consume pre-generated random bits so the Pallas and
+reference paths can be compared bit-exactly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import num_levels
+
+
+def uniform_encode(g: jax.Array, alpha: jax.Array, bits: int, rand: jax.Array) -> jax.Array:
+    """Fused truncate + uniform stochastic quantize.  codes in [0, s], uint8.
+
+    code = floor(u) + 1[rand < frac(u)]  with  u = (clip(g, ±α) + α) · s/(2α).
+    """
+    s = num_levels(bits)
+    scale = s / (2.0 * alpha)
+    u = (jnp.clip(g, -alpha, alpha) + alpha) * scale
+    k = jnp.clip(jnp.floor(u), 0, s - 1)
+    frac = u - k
+    code = k + (rand < frac).astype(u.dtype)
+    return jnp.clip(code, 0, s).astype(jnp.uint8)
+
+
+def uniform_decode(codes: jax.Array, alpha: jax.Array, bits: int) -> jax.Array:
+    s = num_levels(bits)
+    step = 2.0 * alpha / s
+    return codes.astype(jnp.float32) * step - alpha
+
+
+def codebook_encode(g: jax.Array, levels: jax.Array, rand: jax.Array) -> jax.Array:
+    """Fused truncate + non-uniform stochastic quantize onto ``levels``.
+
+    k = #{j in 1..s : g >= l_j} clipped to s-1;  pr = (g - l_k)/(l_{k+1}-l_k);
+    code = k + 1[rand < pr].  Matches quantizers.stochastic_encode given the
+    same uniforms.
+    """
+    s = levels.shape[0] - 1
+    alpha = levels[-1]
+    gt = jnp.clip(g, -alpha, alpha)
+    k = jnp.sum(gt[..., None] >= levels[1:][None, :], axis=-1)
+    k = jnp.clip(k, 0, s - 1)
+    lo = levels[k]
+    hi = levels[k + 1]
+    pr = (gt - lo) / jnp.maximum(hi - lo, 1e-12)
+    return (k + (rand < pr).astype(k.dtype)).astype(jnp.uint8)
+
+
+def codebook_decode(codes: jax.Array, levels: jax.Array) -> jax.Array:
+    return jnp.take(levels, codes.astype(jnp.int32))

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_PREFIX", "")
+    + " --xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against the production mesh with 512 placeholder host devices,
+then extract memory/cost/collective analyses for §Dry-run and §Roofline.
+
+The two lines above MUST stay first: JAX locks the device count at first
+initialization, and the dry-run (only) needs 512 fake devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+  python -m repro.launch.dryrun --all   # subprocess per pair (isolation)
+"""
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, get_shape, list_archs, variant_for_shape
+from repro.core.compressors import CompressorConfig
+from repro.dist.serve_step import make_serve_fns
+from repro.dist.train_step import TrainStepConfig, batch_pspecs, make_train_step, _opt_specs
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_mesh_from_spec, make_production_mesh
+from repro.launch.specs import abstract_batch, abstract_init, count_active_params, count_params
+from repro.optim.optimizers import get_optimizer
+
+RUNS_DIR = pathlib.Path(__file__).resolve().parents[3] / "runs" / "dryrun"
+
+
+def _with_sharding(tree_like, spec_tree, mesh):
+    def one(x, s):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, s))
+
+    return jax.tree.map(
+        one, tree_like, spec_tree,
+    )
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        if hasattr(ma, k):
+            out[k] = int(getattr(ma, k))
+    if out:
+        out["total_per_device_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, sync: str, mesh_spec: str | None,
+            bits: int, method: str, seq_rules: bool) -> dict:
+    shape = get_shape(shape_name)
+    cfg = variant_for_shape(get_config(arch), shape)
+    mesh = make_mesh_from_spec(mesh_spec) if mesh_spec else make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    params_like, logical = abstract_init(cfg)
+    n_params = count_params(params_like)
+    n_active = count_active_params(cfg, params_like, logical)
+
+    if shape.kind == "train":
+        if shape.name == "long_500k":
+            raise ValueError("long_500k is decode-only")
+        opt = get_optimizer("momentum_sgd")
+        batch_like = abstract_batch(cfg, shape.global_batch, shape.seq_len)
+        opt_like = jax.eval_shape(opt.init, params_like)
+        ts = TrainStepConfig(sync=sync, compressor=CompressorConfig(method=method, bits=bits))
+        step_fn, pspecs = make_train_step(cfg, mesh, logical, opt, ts, batch_like, opt_state_like=opt_like, params_like=params_like)
+        p_avals = _with_sharding(params_like, pspecs, mesh)
+        o_specs = _opt_specs(opt_like, jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P)))
+        o_avals = _with_sharding(opt_like, o_specs, mesh)
+        dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+        b_avals = _with_sharding(batch_like, batch_pspecs(batch_like, dp), mesh)
+        lowered = step_fn.lower(p_avals, o_avals, b_avals,
+                                jax.ShapeDtypeStruct((), jnp.uint32, sharding=NamedSharding(mesh, P())))
+    elif shape.kind == "prefill":
+        batch_like = abstract_batch(cfg, shape.global_batch, shape.seq_len)
+        prefill_fn, _, pspecs, _ = make_serve_fns(cfg, mesh, logical, batch_like, shape.global_batch, shape.seq_len, params_like=params_like)
+        p_avals = _with_sharding(params_like, pspecs, mesh)
+        lowered = prefill_fn.lower(p_avals, batch_like)
+    else:  # decode
+        from repro.launch.specs import abstract_caches
+
+        _, decode_fn, pspecs, cspecs = make_serve_fns(cfg, mesh, logical, None, shape.global_batch, shape.seq_len, params_like=params_like)
+        p_avals = _with_sharding(params_like, pspecs, mesh)
+        caches_like = abstract_caches(cfg, shape.global_batch, shape.seq_len)
+        c_avals = _with_sharding(caches_like, cspecs, mesh)
+        token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = decode_fn.lower(p_avals, token, c_avals, pos)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = _memory_analysis_dict(compiled)
+    model_flops = rl.model_flops_for(cfg, shape, n_params, n_active) / n_chips
+    roof = rl.build_roofline(compiled, model_flops, default_group=n_chips)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "axes": list(mesh.axis_names),
+        "chips": n_chips,
+        "sync": sync if shape.kind == "train" else None,
+        "kind": shape.kind,
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "roofline": roof.to_dict(),
+        "fsdp": cfg.fsdp,
+        "sliding_window": cfg.sliding_window,
+    }
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default=None, help="override mesh spec, e.g. 4x2")
+    ap.add_argument("--sync", default="faithful", help="train grad sync mode")
+    ap.add_argument("--method", default="tnqsgd")
+    ap.add_argument("--bits", type=int, default=3)
+    ap.add_argument("--seq-rules", action="store_true", help="sequence-parallel activations")
+    ap.add_argument("--all", action="store_true", help="run every (arch x shape) via subprocesses")
+    ap.add_argument("--both-meshes", action="store_true", help="with --all: also run multi-pod")
+    ap.add_argument("--mp-only", action="store_true", help="with --all: multi-pod mesh only")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    RUNS_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        failures = []
+        meshes = [True] if args.mp_only else ([False, True] if args.both_meshes else [False])
+        for arch in list_archs():
+            for shape in INPUT_SHAPES:
+                for mp in meshes:
+                    tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                    out = RUNS_DIR / f"{tag}{args.tag}.json"
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--sync", args.sync,
+                           "--method", args.method, "--bits", str(args.bits),
+                           "--out", str(out)]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    t0 = time.time()
+                    r = subprocess.run(cmd, capture_output=True, text=True)
+                    status = "OK" if r.returncode == 0 else "FAIL"
+                    print(f"{status:4s} {tag} ({time.time()-t0:.0f}s)", flush=True)
+                    if r.returncode != 0:
+                        failures.append(tag)
+                        print(r.stdout[-2000:], r.stderr[-2000:], flush=True)
+        print(f"done: {len(failures)} failures: {failures}")
+        return 1 if failures else 0
+
+    try:
+        rec = run_one(args.arch, args.shape, multi_pod=args.multi_pod, sync=args.sync,
+                      mesh_spec=args.mesh, bits=args.bits, method=args.method,
+                      seq_rules=args.seq_rules)
+    except Exception:
+        traceback.print_exc()
+        return 1
+    out = args.out or (RUNS_DIR / f"{args.arch}__{args.shape}__{'mp' if args.multi_pod else 'sp'}{args.tag}.json")
+    pathlib.Path(out).write_text(json.dumps(rec, indent=2))
+    r = rec["roofline"]
+    mem = rec["memory"].get("total_per_device_bytes", 0)
+    print(f"{args.arch} x {args.shape} [{rec['mesh']}]: "
+          f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+          f"collective={r['collective_s']*1e3:.2f}ms bottleneck={r['bottleneck']} "
+          f"useful={r['useful_flops_ratio']:.2f} mem/dev={mem/2**30:.2f}GiB "
+          f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s)")
+    print(json.dumps(rec["memory"], indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

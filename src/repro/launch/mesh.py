@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e pods — 256 chips per pod (16x16 'data' x 'model'),
+two pods for the multi-pod dry-run (512 chips, leading 'pod' axis).
+``make_production_mesh`` is a function (never a module constant) so importing
+this module cannot touch JAX device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_spec(spec: str) -> Mesh:
+    """'16x16' -> ('data','model'); '2x16x16' -> ('pod','data','model');
+    '4' -> pure data-parallel."""
+    dims = tuple(int(x) for x in spec.lower().split("x"))
+    if len(dims) == 1:
+        axes = ("data",)
+    elif len(dims) == 2:
+        axes = ("data", "model")
+    elif len(dims) == 3:
+        axes = ("pod", "data", "model")
+    else:
+        raise ValueError(f"bad mesh spec {spec!r}")
+    return jax.make_mesh(dims, axes, axis_types=(AxisType.Auto,) * len(dims))
+
+
+# TPU v5e hardware constants (per chip) for the roofline model.
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW_PER_LINK = 50e9         # B/s (~ per link)
+HBM_PER_CHIP = 16 * 2**30      # bytes

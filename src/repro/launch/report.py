@@ -1,0 +1,89 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from runs/dryrun/*.json.
+
+Usage:  PYTHONPATH=src python -m repro.launch.report [--dir runs/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RUNS = pathlib.Path(__file__).resolve().parents[3] / "runs" / "dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath: pathlib.Path, canonical: bool = True):
+    """Canonical records: <arch>__<shape>__<mesh>.json (one per pair);
+    sync-variant files (…__16x16_<sync>.json) are excluded unless
+    canonical=False."""
+    recs = []
+    for f in sorted(dirpath.glob("*.json")):
+        parts = f.stem.split("__")
+        is_canon = len(parts) == 3 and parts[2] in ("16x16", "2x16x16")
+        if canonical != is_canon:
+            continue
+        try:
+            recs.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(recs, mesh="16x16") -> str:
+    rows = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | bottleneck | "
+        "useful FLOPs | HBM GiB/dev | compile (s) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    def key(r):
+        return (r["arch"], SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 9)
+    for r in sorted([r for r in recs if r["mesh"] == mesh], key=key):
+        rl = r["roofline"]
+        mem = r["memory"].get("total_per_device_bytes", 0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']*1e3:.1f} | {rl['memory_s']*1e3:.1f} "
+            f"| {rl['collective_s']*1e3:.1f} | {rl['bottleneck']} | {rl['useful_flops_ratio']:.2f} "
+            f"| {fmt_bytes(mem)} | {r['compile_s']:.0f} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(recs) -> str:
+    rows = [
+        "| arch | shape | mesh | params | FLOPs/dev | HBM bytes/dev | collective bytes/dev | "
+        "ag / ar / rs / a2a / cp (GiB) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    def key(r):
+        return (r["arch"], SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 9, r["mesh"])
+    for r in sorted(recs, key=key):
+        rl = r["roofline"]
+        kinds = rl.get("collective_bytes_by_kind", {})
+        gk = lambda k: kinds.get(k, 0) / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['n_params']/1e9:.1f}B "
+            f"| {rl['flops']:.2e} | {rl['hbm_bytes']:.2e} | {rl['collective_bytes']:.2e} "
+            f"| {gk('all-gather'):.1f} / {gk('all-reduce'):.1f} / {gk('reduce-scatter'):.1f} / "
+            f"{gk('all-to-all'):.1f} / {gk('collective-permute'):.1f} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(RUNS))
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load(pathlib.Path(args.dir))
+    print(f"## Roofline ({args.mesh}, {len(recs)} records)\n")
+    print(roofline_table(recs, args.mesh))
+    print("\n## Dry-run detail\n")
+    print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Abstract (allocation-free) model/init/input specs for the dry-run.
+
+Everything here returns ShapeDtypeStructs via jax.eval_shape — the full-size
+configs (up to 398B params) are never materialized on the CPU host.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models.transformer import Batch, init_caches, init_lm
+
+
+def abstract_init(cfg: ArchConfig) -> tuple[Any, Any]:
+    """(params ShapeDtypeStruct tree, logical-axes tree) without allocation."""
+    box = {}
+
+    def f(key):
+        p, la = init_lm(key, cfg)
+        box["la"] = la
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.key(0))
+    return shapes, box["la"]
+
+
+def abstract_batch(cfg: ArchConfig, batch: int, seq: int) -> Batch:
+    """Batch of ShapeDtypeStructs matching data.synthetic.lm_batch."""
+    def f():
+        tokens = jnp.zeros((batch, seq), jnp.int32)
+        labels = jnp.zeros((batch, seq), jnp.int32)
+        positions = None
+        patches = None
+        frames = None
+        if cfg.vlm_patches:
+            patches = jnp.zeros((batch, cfg.vlm_patches, cfg.vlm_vision_dim), jnp.float32)
+            positions = jnp.zeros((3, batch, seq), jnp.int32)
+        if cfg.enc_dec:
+            frames = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+        return Batch(tokens=tokens, labels=labels, positions=positions, patches=patches, frames=frames)
+
+    return jax.eval_shape(f)
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, cache_len: int) -> Any:
+    return jax.eval_shape(lambda: init_caches(cfg, batch, cache_len))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """All model inputs for a given input shape, as ShapeDtypeStructs.
+
+    train/prefill: {'batch': Batch}.  decode: {'token','caches','position'}."""
+    if shape.kind in ("train", "prefill"):
+        return {"batch": abstract_batch(cfg, shape.global_batch, shape.seq_len)}
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    caches = abstract_caches(cfg, shape.global_batch, shape.seq_len)
+    return {
+        "token": token,
+        "caches": caches,
+        "position": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def count_params(params_like: Any) -> int:
+    total = 0
+    for x in jax.tree.leaves(params_like):
+        n = 1
+        for d in x.shape:
+            n *= int(d)
+        total += n
+    return total
+
+
+def count_active_params(cfg: ArchConfig, params_like: Any, logical: Any) -> int:
+    """Active params per token: expert tensors count top_k/E of their size."""
+    total = 0
+    leaves = jax.tree.leaves(params_like)
+    llog = jax.tree.leaves(logical, is_leaf=lambda x: isinstance(x, tuple))
+    for x, la in zip(leaves, llog):
+        n = 1
+        for d in x.shape:
+            n *= d
+        if cfg.moe is not None and "expert" in la:
+            n = int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        total += n
+    return int(total)

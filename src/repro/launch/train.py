@@ -1,0 +1,99 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs on whatever devices exist (CPU: mesh 1x1 by default).  Use
+``--fake-devices N`` to exercise the distributed path on a host mesh.
+"""
+import argparse
+import os
+import sys
+
+
+def _early_args(argv):
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--fake-devices", type=int, default=0)
+    ns, _ = ap.parse_known_args(argv)
+    return ns
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    early = _early_args(argv)
+    if early.fake_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={early.fake_devices}"
+        ).strip()
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.checkpoint.io import load_checkpoint, latest_step, save_checkpoint
+    from repro.configs import get_config, list_archs, reduced as make_reduced
+    from repro.core.compressors import CompressorConfig, METHODS
+    from repro.data.synthetic import lm_batch
+    from repro.dist.train_step import SYNC_MODES, TrainStepConfig, make_train_step
+    from repro.launch.mesh import make_mesh_from_spec
+    from repro.models import init_lm
+    from repro.optim.optimizers import get_optimizer
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true", help="reduced config (CPU-trainable)")
+    ap.add_argument("--mesh", default=None, help="e.g. 4x2; default all devices data-parallel")
+    ap.add_argument("--fake-devices", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--sync", default="two_phase", choices=SYNC_MODES)
+    ap.add_argument("--method", default="tnqsgd", choices=METHODS)
+    ap.add_argument("--bits", type=int, default=3)
+    ap.add_argument("--optimizer", default="momentum_sgd")
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    mesh = make_mesh_from_spec(args.mesh or str(len(jax.devices())))
+    print(f"arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"sync={args.sync} method={args.method} bits={args.bits}")
+
+    params, logical = init_lm(jax.random.key(0), cfg)
+    opt = get_optimizer(args.optimizer, lr=args.lr) if args.optimizer == "momentum_sgd" else get_optimizer(args.optimizer)
+    ts = TrainStepConfig(sync=args.sync, compressor=CompressorConfig(method=args.method, bits=args.bits))
+    batch0 = lm_batch(cfg, jnp.uint32(0), args.batch, args.seq)
+    opt_state = opt.init(params)
+    step_fn, pspecs = make_train_step(cfg, mesh, logical, opt, ts, batch0, opt_state_like=jax.eval_shape(lambda: opt_state))
+
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P))
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), start = load_checkpoint(args.ckpt_dir, (params, opt_state))
+        print(f"resumed from step {start}")
+    params = jax.device_put(params, sh)
+    # optimizer state mirrors the param tree -> same shardings per leaf
+    from repro.dist.train_step import _opt_specs
+    from jax.sharding import PartitionSpec as _P
+    o_specs = _opt_specs(jax.eval_shape(lambda: opt_state),
+                         jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, _P)))
+    opt_state = jax.device_put(opt_state, jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                                                       is_leaf=lambda x: isinstance(x, _P)))
+
+    for i in range(start, start + args.steps):
+        b = lm_batch(cfg, jnp.uint32(i), args.batch, args.seq)
+        params, opt_state, m = step_fn(params, opt_state, b, jnp.uint32(i))
+        if args.log_every and i % args.log_every == 0:
+            print(f"step {i:5d} loss {float(m['loss'][0]):.4f} gnorm {float(m['gnorm'][0]):.3f}", flush=True)
+        if args.ckpt_every and args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            host_p = jax.tree.map(lambda x: jax.device_get(x), (params, opt_state))
+            save_checkpoint(args.ckpt_dir, i + 1, host_p)
+            print(f"checkpointed step {i+1}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,27 @@
+"""Model zoo: decoder LMs (dense/MoE/SSM/hybrid/VLM) + enc-dec (audio)."""
+from . import attention, layers, moe, rope, ssm, transformer
+from .transformer import (
+    Batch,
+    backbone,
+    decode_step,
+    init_caches,
+    init_lm,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "Batch",
+    "attention",
+    "backbone",
+    "decode_step",
+    "init_caches",
+    "init_lm",
+    "layers",
+    "loss_fn",
+    "moe",
+    "prefill",
+    "rope",
+    "ssm",
+    "transformer",
+]

@@ -1,0 +1,238 @@
+"""GQA attention: chunked-flash for train/prefill, cached decode, cross-attn.
+
+Memory-efficient attention is a pure-JAX online-softmax over (q-chunk,
+kv-chunk) tiles via nested lax.scan — the HLO stays small for 32k prefill and
+the working set per step is one (B, QC, H, KC) score tile.  (A Pallas flash
+kernel is not part of the paper's contribution; XLA's fused attention on TPU
+is adequate, and the quantizer kernels are where the paper's hot spot is.)
+
+Sliding-window decode uses a rolling KV cache of window size: position enters
+keys via RoPE *before* caching, so attention is permutation-invariant over
+cache slots and no unrotation is needed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from .layers import dense_init
+from .rope import apply_positional
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, d: int, *, cross: bool = False) -> tuple[dict, dict]:
+    dh = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * dh), d, dtype),
+        "wk": dense_init(ks[1], (d, hkv * dh), d, dtype),
+        "wv": dense_init(ks[2], (d, hkv * dh), d, dtype),
+        "wo": dense_init(ks[3], (hq * dh, d), hq * dh, dtype),
+    }
+    la = {
+        "wq": ("embed_fsdp", "heads"),
+        "wk": ("embed_fsdp", "heads"),
+        "wv": ("embed_fsdp", "heads"),
+        "wo": ("heads", "embed_fsdp"),
+    }
+    return p, la
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(x.shape[:-1] + (n, dh))
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of ``s`` that is <= target (keeps tiles even)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _repeat_kv(k, hq):
+    hkv = k.shape[2]
+    if hkv == hq:
+        return k
+    return jnp.repeat(k, hq // hkv, axis=2)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention.  q: (B,Sq,H,Dh), k/v: (B,Skv,H,Dh)."""
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    qc = _pick_chunk(sq, q_chunk)
+    kc = _pick_chunk(skv, kv_chunk)
+    nq, nk = sq // qc, skv // kc
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    qr = q.reshape(b, nq, qc, h, dh)
+    kr = k.reshape(b, nk, kc, h, dh)
+    vr = v.reshape(b, nk, kc, h, dh)
+
+    def q_step(_, qi):
+        q_blk, q_idx = qi  # (B, qc, H, Dh), scalar block index
+        qpos = q_idx * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk, v_blk, k_idx = ki
+            kpos = k_idx * kc + jnp.arange(kc)
+            s = jnp.einsum("bqhd,bkhd->bqhk", q_blk.astype(jnp.float32), k_blk.astype(jnp.float32)) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bqhk,bkhd->bqhd", p, v_blk.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (
+            jnp.full((b, qc, h), NEG_INF, jnp.float32),
+            jnp.zeros((b, qc, h), jnp.float32),
+            jnp.zeros((b, qc, h, dh), jnp.float32),
+        )
+        # checkpoint each tile: the backward otherwise saves every tile's
+        # (B, qc, H, kc) probability matrix — nq*nk tiles of fp32.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step, prevent_cse=False),
+            init,
+            (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4), jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qr.transpose(1, 0, 2, 3, 4), jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, S_cache, Hkv, Dh) — RoPE already applied
+    v: jax.Array        # (B, S_cache, Hkv, Dh)
+    length: jax.Array   # scalar int32: number of valid positions (== S_cache when full)
+
+
+def attention_forward(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Full-sequence self-attention (training / prefill)."""
+    dh = cfg.resolved_head_dim
+    q = _split_heads(x @ p["wq"], cfg.num_heads, dh)
+    k = _split_heads(x @ p["wk"], cfg.num_kv_heads, dh)
+    v = _split_heads(x @ p["wv"], cfg.num_kv_heads, dh)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None) if cfg.num_kv_heads > 1 else k
+    q = apply_positional(cfg, q, positions)
+    k = apply_positional(cfg, k, positions)
+    out = flash_attention(q, _repeat_kv(k, cfg.num_heads), _repeat_kv(v, cfg.num_heads), causal=causal, window=window)
+    out = shard(out, "batch", "seq", "heads", None)
+    return out.reshape(x.shape[:-1] + (cfg.num_heads * dh,)) @ p["wo"]
+
+
+def attention_prefill(cfg, p, x, positions, *, window=None, capacity: Optional[int] = None):
+    """Prefill: returns (y, KVCache with rotated keys).
+
+    ``capacity`` > seq_len leaves room for subsequent decode steps (decode
+    appends at ``cache.length``)."""
+    dh = cfg.resolved_head_dim
+    q = _split_heads(x @ p["wq"], cfg.num_heads, dh)
+    k = _split_heads(x @ p["wk"], cfg.num_kv_heads, dh)
+    v = _split_heads(x @ p["wv"], cfg.num_kv_heads, dh)
+    q = apply_positional(cfg, q, positions)
+    k = apply_positional(cfg, k, positions)
+    y = flash_attention(q, _repeat_kv(k, cfg.num_heads), _repeat_kv(v, cfg.num_heads), causal=True, window=window)
+    y = y.reshape(x.shape[:-1] + (cfg.num_heads * dh,)) @ p["wo"]
+    length = k.shape[1]
+    if window is not None:
+        k, v = k[:, -window:], v[:, -window:]
+        length = k.shape[1]
+    if capacity is not None and capacity > k.shape[1]:
+        pad = capacity - k.shape[1]
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = KVCache(k=k, v=v, length=jnp.asarray(length, jnp.int32))
+    return y, cache
+
+
+def attention_decode(
+    cfg,
+    p: dict,
+    x: jax.Array,            # (B, 1, D)
+    cache: KVCache,
+    position: jax.Array,     # scalar int32: absolute position of the new token
+    *,
+    window: Optional[int] = None,
+) -> tuple[jax.Array, KVCache]:
+    dh = cfg.resolved_head_dim
+    b = x.shape[0]
+    pos2 = jnp.broadcast_to(position.reshape(1, 1), (b, 1))
+    q = apply_positional(cfg, _split_heads(x @ p["wq"], cfg.num_heads, dh), pos2)
+    k_new = apply_positional(cfg, _split_heads(x @ p["wk"], cfg.num_kv_heads, dh), pos2)
+    v_new = _split_heads(x @ p["wv"], cfg.num_kv_heads, dh)
+    s_cache = cache.k.shape[1]
+    # Rolling caches (sliding window) index by absolute position; full caches
+    # append at the current length (prefill must have left capacity).
+    slot = (position % s_cache) if window is not None else cache.length
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+    new_len = jnp.minimum(cache.length + 1, s_cache)
+
+    # Grouped-query attention against the cache without materializing the
+    # head-repeated (or fp32-cast) cache: q is viewed as (B, 1, Hkv, rep, Dh)
+    # and contracted against the raw bf16 cache with fp32 accumulation.
+    rep = cfg.num_heads // max(cfg.num_kv_heads, 1)
+    qg = q.reshape(b, 1, cfg.num_kv_heads, rep, dh)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    s = jnp.einsum("bqhrd,bkhd->bqhrk", qg, k, preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(s_cache)[None, None, None, None, :] < new_len
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhrk,bkhd->bqhrd", w.astype(k.dtype), v, preferred_element_type=jnp.float32)
+    out = out.astype(x.dtype).reshape(b, 1, cfg.num_heads * dh)
+    y = out @ p["wo"]
+    return y, KVCache(k=k, v=v, length=new_len)
+
+
+def cross_attention_forward(cfg, p, x, enc_kv: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decoder cross-attention; enc_kv = (k, v) precomputed from encoder output."""
+    dh = cfg.resolved_head_dim
+    q = _split_heads(x @ p["wq"], cfg.num_heads, dh)
+    k, v = enc_kv
+    out = flash_attention(
+        q, _repeat_kv(k, cfg.num_heads), _repeat_kv(v, cfg.num_heads),
+        causal=False, q_chunk=1024, kv_chunk=max(64, min(1024, k.shape[1])),
+    )
+    return out.reshape(x.shape[:-1] + (cfg.num_heads * dh,)) @ p["wo"]
+
+
+def cross_kv(cfg, p, enc_out: jax.Array) -> tuple[jax.Array, jax.Array]:
+    dh = cfg.resolved_head_dim
+    k = _split_heads(enc_out @ p["wk"], cfg.num_kv_heads, dh)
+    v = _split_heads(enc_out @ p["wv"], cfg.num_kv_heads, dh)
+    return k, v

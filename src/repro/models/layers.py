@@ -1,0 +1,83 @@
+"""Basic layers: norms, MLPs, initializers.
+
+Params are plain dict pytrees; every init function also returns a parallel
+pytree of *logical axis tuples* (see repro.dist.sharding) so the launcher can
+derive PartitionSpecs without re-walking model code.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+Params = Any
+Logical = Any
+
+
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / jnp.sqrt(jnp.asarray(in_axis_size, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + 0.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_init(cfg, d: int) -> tuple[Params, Logical]:
+    if cfg.norm == "layernorm":
+        return (
+            {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)},
+            {"scale": ("embed",), "bias": ("embed",)},
+        )
+    return {"scale": jnp.zeros((d,), jnp.float32)}, {"scale": ("embed",)}
+
+
+def apply_norm(cfg, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def mlp_init(key, cfg, d: int, f: int, dtype) -> tuple[Params, Logical]:
+    """Gated (SwiGLU/GeGLU) or plain MLP depending on cfg.act."""
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("silu", "gelu"):
+        p = {
+            "wi": dense_init(ks[0], (d, f), d, dtype),
+            "wg": dense_init(ks[1], (d, f), d, dtype),
+            "wo": dense_init(ks[2], (f, d), f, dtype),
+        }
+        la = {"wi": ("embed_fsdp", "ff"), "wg": ("embed_fsdp", "ff"), "wo": ("ff", "embed_fsdp")}
+    else:  # gelu_mlp (whisper-style)
+        p = {
+            "wi": dense_init(ks[0], (d, f), d, dtype),
+            "wo": dense_init(ks[2], (f, d), f, dtype),
+        }
+        la = {"wi": ("embed_fsdp", "ff"), "wo": ("ff", "embed_fsdp")}
+    return p, la
+
+
+def mlp_apply(cfg, p: Params, x: jax.Array) -> jax.Array:
+    h = x @ p["wi"]
+    h = shard(h, "batch", "seq", "ff")
+    if cfg.act == "silu":
+        h = jax.nn.silu(h) * (x @ p["wg"])
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(h, approximate=True) * (x @ p["wg"])
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ p["wo"]

@@ -1,0 +1,74 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (arXiv:2409.12191): the rotary dim is split into three sections
+(temporal, height, width) with independent position streams; text tokens use
+identical positions in all three sections, image patches use (t, h, w).
+Position ids are supplied as (3, B, S) int32; standard RoPE takes (B, S).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# M-RoPE section split as fractions of head_dim/2 (Qwen2-VL uses 16/24/24
+# of 64 frequency pairs for head_dim 128).
+MROPE_SECTIONS = (0.25, 0.375, 0.375)
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., head_dim); cos/sin: broadcastable (..., head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    freqs = _rope_freqs(x.shape[-1], theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _apply_rotary(x, cos, sin)
+
+
+def mrope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (3, B, S) int32 (t, h, w streams)."""
+    half = x.shape[-1] // 2
+    freqs = _rope_freqs(x.shape[-1], theta)
+    sizes = [int(round(f * half)) for f in MROPE_SECTIONS]
+    sizes[-1] = half - sizes[0] - sizes[1]
+    # Build the per-frequency position stream by section.
+    sec_ids = jnp.concatenate(
+        [jnp.full((n,), i, jnp.int32) for i, n in enumerate(sizes)]
+    )  # (half,)
+    pos_per_freq = jnp.take_along_axis(
+        positions.astype(jnp.float32).transpose(1, 2, 0),  # (B, S, 3)
+        jnp.broadcast_to(sec_ids[None, None, :], positions.shape[1:] + (half,)),
+        axis=-1,
+    )  # (B, S, half)
+    ang = pos_per_freq * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _apply_rotary(x, cos, sin)
+
+
+def sincos_embedding(seq: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (seq, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def apply_positional(cfg, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Dispatch on cfg.rope for q/k tensors."""
+    if cfg.rope == "rope":
+        return rope(x, positions if positions.ndim == 2 else positions[0], cfg.rope_theta)
+    if cfg.rope == "mrope":
+        if positions.ndim == 2:  # plain text stream: all three sections equal
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return mrope(x, positions, cfg.rope_theta)
+    return x  # sincos/learned handled at the embedding level

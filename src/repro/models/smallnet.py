@@ -1,0 +1,57 @@
+"""Small conv classifier for the paper's MNIST-style experiments (§V).
+
+The paper trains AlexNet on MNIST with 8 clients; offline we use a compact
+CNN on the synthetic 28x28 'shapes' dataset (see data.synthetic).  Conv and
+FC layers are quantized as separate groups, as in the paper ("gradients from
+convolutional and fully-connected layers have different distributions").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_smallnet(key, num_classes: int = 10):
+    k = jax.random.split(key, 4)
+    he = lambda kk, shape, fan: jax.random.normal(kk, shape) * jnp.sqrt(2.0 / fan)
+    return {
+        "conv1": {"w": he(k[0], (3, 3, 1, 16), 9), "b": jnp.zeros((16,))},
+        "conv2": {"w": he(k[1], (3, 3, 16, 32), 144), "b": jnp.zeros((32,))},
+        "fc1": {"w": he(k[2], (7 * 7 * 32, 128), 7 * 7 * 32), "b": jnp.zeros((128,))},
+        "fc2": {"w": he(k[3], (128, num_classes), 128), "b": jnp.zeros((num_classes,))},
+    }
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + b
+
+
+def smallnet_logits(params, imgs):
+    x = jax.nn.relu(_conv(imgs, params["conv1"]["w"], params["conv1"]["b"]))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = jax.nn.relu(_conv(x, params["conv2"]["w"], params["conv2"]["b"]))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def smallnet_loss(params, imgs, labels):
+    logits = smallnet_logits(params, imgs)
+    ll = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(ll, labels[:, None], axis=1))
+
+
+def accuracy(params, imgs, labels):
+    return jnp.mean((jnp.argmax(smallnet_logits(params, imgs), -1) == labels).astype(jnp.float32))
+
+
+def grad_groups(grads) -> dict:
+    """conv vs fc quantization groups (paper §V)."""
+    return {
+        "conv": [grads["conv1"]["w"], grads["conv2"]["w"]],
+        "fc": [grads["fc1"]["w"], grads["fc2"]["w"]],
+    }

@@ -1,0 +1,509 @@
+"""Decoder-only LM (dense / MoE / SSM / hybrid / VLM) and Whisper-style
+encoder-decoder, with scan-over-layers parameter stacking.
+
+Design:
+- A *unit* is the scan step: one layer for uniform stacks; a superblock of
+  ``attn_period`` layers for hybrids (Jamba: 1 attention + 7 Mamba per unit,
+  MoE on every other layer).
+- Params are dict pytrees stacked on the unit axis; a parallel pytree of
+  logical-axis tuples drives PartitionSpec derivation.
+- Modes: ``train`` (full seq, loss), ``prefill`` (full seq -> caches + last
+  logits), ``decode`` (1 token + caches).
+- Cross-entropy is computed in sequence chunks (scan) against the (possibly
+  vocab-sharded) LM head — (B, S, V) logits are never materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from .attention import (
+    KVCache,
+    attention_decode,
+    attention_forward,
+    attention_prefill,
+    attn_init,
+    cross_attention_forward,
+    cross_kv,
+)
+from .layers import apply_norm, dense_init, mlp_apply, mlp_init, norm_init
+from .moe import dense_moe_apply, moe_apply, moe_init
+from .rope import sincos_embedding
+from .ssm import SSMState, init_ssm_state, ssm_decode, ssm_forward, ssm_init
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SubDesc:
+    mixer: str  # 'attn' | 'ssm'
+    ffn: str    # 'mlp' | 'moe'
+    cross: bool = False
+
+
+def unit_pattern(cfg) -> tuple[list[SubDesc], int]:
+    """Sublayer descriptors for one scan unit + number of units."""
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        units = cfg.num_layers // period
+        descs = []
+        for j in range(period):
+            mixer = "attn" if j == cfg.attn_offset else "ssm"
+            ffn = "moe" if (cfg.moe is not None and j % cfg.moe.every == cfg.moe.every - 1) else "mlp"
+            descs.append(SubDesc(mixer, ffn))
+        return descs, units
+    mixer = "ssm" if cfg.family == "ssm" else "attn"
+    if cfg.moe is not None and cfg.moe.every == 1:
+        ffn = "moe"
+    elif cfg.d_ff <= 0:
+        ffn = "none"  # pure-Mamba stacks are mixer-only
+    else:
+        ffn = "mlp"
+    return [SubDesc(mixer, ffn)], cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _sublayer_init(key, cfg, desc: SubDesc):
+    ks = jax.random.split(key, 6)
+    p, la = {}, {}
+    p["ln1"], la["ln1"] = norm_init(cfg, cfg.d_model)
+    if desc.mixer == "attn":
+        p["mixer"], la["mixer"] = attn_init(ks[0], cfg, cfg.d_model)
+    else:
+        p["mixer"], la["mixer"] = ssm_init(ks[0], cfg, cfg.d_model)
+    if desc.cross:
+        p["lnx"], la["lnx"] = norm_init(cfg, cfg.d_model)
+        p["cross"], la["cross"] = attn_init(ks[2], cfg, cfg.d_model, cross=True)
+    if desc.ffn != "none":
+        p["ln2"], la["ln2"] = norm_init(cfg, cfg.d_model)
+    if desc.ffn == "moe":
+        p["ffn"], la["ffn"] = moe_init(ks[1], cfg, cfg.d_model)
+    elif desc.ffn == "mlp":
+        p["ffn"], la["ffn"] = mlp_init(ks[1], cfg, cfg.d_model, cfg.d_ff, jnp.dtype(cfg.param_dtype))
+    return p, la
+
+
+def _unit_init(key, cfg, descs):
+    if len(descs) == 1:
+        return _sublayer_init(key, cfg, descs[0])
+    p, la = {}, {}
+    for j, d in enumerate(descs):
+        p[f"sub{j}"], la[f"sub{j}"] = _sublayer_init(jax.random.fold_in(key, j), cfg, d)
+    return p, la
+
+
+def init_lm(key, cfg) -> tuple[dict, dict]:
+    """Returns (params, logical-axis pytree)."""
+    descs, units = _decoder_descs(cfg)
+    ks = jax.random.split(key, 8)
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    p: dict[str, Any] = {}
+    la: dict[str, Any] = {}
+    p["embed"] = dense_init(ks[0], (cfg.vocab, cfg.d_model), cfg.d_model, dtype)
+    la["embed"] = ("vocab", "embed_fsdp")
+
+    unit_keys = jax.random.split(ks[1], units)
+    stacked = jax.vmap(lambda k: _unit_init(k, cfg, descs)[0])(unit_keys)
+    _, stacked_la = _unit_init(unit_keys[0], cfg, descs)
+    p["blocks"] = stacked
+    la["blocks"] = jax.tree.map(lambda ax: ("layers",) + ax, stacked_la, is_leaf=lambda x: isinstance(x, tuple))
+    p["final_norm"], la["final_norm"] = norm_init(cfg, cfg.d_model)
+
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab), cfg.d_model, dtype)
+        la["lm_head"] = ("embed_fsdp", "vocab")
+
+    if cfg.vlm_patches:
+        p["projector"] = dense_init(ks[3], (cfg.vlm_vision_dim, cfg.d_model), cfg.vlm_vision_dim, dtype)
+        la["projector"] = (None, "embed_fsdp")
+
+    if cfg.enc_dec:
+        enc_cfg = cfg  # same dims for encoder
+        enc_keys = jax.random.split(ks[4], cfg.num_enc_layers)
+        enc_desc = SubDesc("attn", "mlp")
+        enc_stack = jax.vmap(lambda k: _sublayer_init(k, enc_cfg, enc_desc)[0])(enc_keys)
+        _, enc_la = _sublayer_init(enc_keys[0], enc_cfg, enc_desc)
+        p["encoder"] = {"blocks": enc_stack}
+        p["encoder"]["final_norm"], fn_la = norm_init(cfg, cfg.d_model)
+        la["encoder"] = {
+            "blocks": jax.tree.map(lambda ax: ("layers",) + ax, enc_la, is_leaf=lambda x: isinstance(x, tuple)),
+            "final_norm": fn_la,
+        }
+    return p, la
+
+
+# ---------------------------------------------------------------------------
+# Sublayer / unit forward
+# ---------------------------------------------------------------------------
+
+
+def _ffn_apply(cfg, desc, p, x):
+    if desc.ffn == "none":
+        return jnp.zeros_like(x), jnp.float32(0.0)
+    if desc.ffn == "moe":
+        if cfg.moe.num_experts <= 4 and x.shape[0] * x.shape[1] < 4096:
+            return dense_moe_apply(cfg, p["ffn"], x)
+        return moe_apply(cfg, p["ffn"], x)
+    return mlp_apply(cfg, p["ffn"], x), jnp.float32(0.0)
+
+
+def _sublayer_fwd(cfg, desc, p, x, positions, mode, cache, position, capacity=None):
+    """Returns (x, new_cache, aux)."""
+    h = apply_norm(cfg, p["ln1"], x)
+    new_cache = cache
+    if desc.mixer == "attn":
+        win = cfg.sliding_window
+        if mode == "train":
+            mx = attention_forward(cfg, p["mixer"], h, positions, causal=True, window=win)
+        elif mode == "prefill":
+            mx, new_cache = attention_prefill(cfg, p["mixer"], h, positions, window=win, capacity=capacity)
+        elif mode == "encode":
+            mx = attention_forward(cfg, p["mixer"], h, positions, causal=False)
+        else:
+            mx, new_cache = attention_decode(cfg, p["mixer"], h, cache, position, window=win)
+    else:
+        if mode == "train":
+            mx = ssm_forward(cfg, p["mixer"], h)
+        elif mode == "prefill":
+            mx, new_cache = ssm_forward(cfg, p["mixer"], h, return_state=True)
+        else:
+            mx, new_cache = ssm_decode(cfg, p["mixer"], h, cache)
+    x = x + mx
+
+    if desc.cross and "cross" in p:
+        hx = apply_norm(cfg, p["lnx"], x)
+        enc_kv = cache["cross_kv"] if isinstance(cache, dict) and "cross_kv" in cache else new_cache["cross_kv"]
+        x = x + cross_attention_forward(cfg, p["cross"], hx, enc_kv)
+
+    if desc.ffn == "none":
+        return x, new_cache, jnp.float32(0.0)
+    h2 = apply_norm(cfg, p["ln2"], x)
+    y, aux = _ffn_apply(cfg, desc, p, h2)
+    return x + y, new_cache, aux
+
+
+def _unit_fwd(cfg, descs, p, x, positions, mode, cache, position, capacity=None):
+    if len(descs) == 1:
+        return _sublayer_fwd(cfg, descs[0], p, x, positions, mode, cache, position, capacity)
+    aux_total = jnp.float32(0.0)
+    new_cache = {}
+    for j, d in enumerate(descs):
+        sub_cache = cache[f"sub{j}"] if cache is not None else None
+        x, nc, aux = _sublayer_fwd(cfg, d, p[f"sub{j}"], x, positions, mode, sub_cache, position, capacity)
+        new_cache[f"sub{j}"] = nc
+        aux_total = aux_total + aux
+    return x, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Whisper-style decoder sublayers need cross-attention; wrap descriptors.
+# ---------------------------------------------------------------------------
+
+
+def _decoder_descs(cfg) -> tuple[list[SubDesc], int]:
+    descs, units = unit_pattern(cfg)
+    if cfg.enc_dec:
+        descs = [dataclasses.replace(d, cross=True) for d in descs]
+    return descs, units
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.rope == "sincos":
+        pos = sincos_embedding(tokens.shape[1], cfg.d_model)
+        x = x + pos[None].astype(x.dtype)
+    return x.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def _embed_decode_token(cfg, params, token, position):
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.rope == "sincos":
+        # one sincos row at a dynamic position
+        d = cfg.d_model
+        half = d // 2
+        freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+        ang = position.astype(jnp.float32) * freqs
+        row = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+        x = x + row[None, None].astype(x.dtype)
+    return x.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def lm_head_weights(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def _inject_vision(cfg, params, x, patches):
+    """Replace the first ``vlm_patches`` positions with projected patch embeds."""
+    proj = (patches.astype(jnp.dtype(cfg.compute_dtype)) @ params["projector"].astype(jnp.dtype(cfg.compute_dtype)))
+    return jnp.concatenate([proj, x[:, cfg.vlm_patches :]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Encoder (audio): consumes precomputed frame embeddings (conv frontend stub).
+# ---------------------------------------------------------------------------
+
+
+def encode_frames(cfg, params, frames):
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sincos_embedding(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    enc_desc = SubDesc("attn", "mlp")
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+    def step(carry, p_l):
+        y, _, _ = _sublayer_fwd(cfg, enc_desc, p_l, carry, positions, "encode", None, None)
+        return y, None
+
+    x, _ = jax.lax.scan(step, x, params["encoder"]["blocks"])
+    return apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Main entry points
+# ---------------------------------------------------------------------------
+
+
+# ---------------------------------------------------------------------------
+# Decomposed train-path entry points (used by the layer-streamed ZeRO-3 train
+# step, which gathers params and syncs grads per scan unit).
+# ---------------------------------------------------------------------------
+
+
+def outer_params(params: dict) -> dict:
+    return {k: v for k, v in params.items() if k != "blocks"}
+
+
+def embed_fn(cfg, outer: dict, batch: "Batch") -> jax.Array:
+    """Embedding + modality injection; returns h0 (B, S, D)."""
+    x = _embed_tokens(cfg, outer, batch.tokens)
+    if cfg.vlm_patches:
+        x = _inject_vision(cfg, outer, x, batch.patches)
+    return shard(x, "batch", "seq", None)
+
+
+def unit_fn(cfg, unit_params: dict, h: jax.Array, positions: jax.Array):
+    """One scan unit in train mode.  Returns (h_out, aux)."""
+    descs, _ = _decoder_descs(cfg)
+    h2, _, aux = _unit_fwd(cfg, descs, unit_params, h, positions, "train", None, None)
+    return h2, aux
+
+
+def num_sublayers(cfg) -> int:
+    descs, _ = _decoder_descs(cfg)
+    return len(descs)
+
+
+def sublayer_fn(cfg, idx: int, sub_params: dict, h: jax.Array, positions: jax.Array):
+    """One sublayer of a (hybrid) scan unit, train mode.  Returns (h_out, aux).
+
+    Used by the streamed train step to gather params / sync grads one
+    sublayer at a time inside Jamba-style superblocks."""
+    descs, _ = _decoder_descs(cfg)
+    h2, _, aux = _sublayer_fwd(cfg, descs[idx], sub_params, h, positions, "train", None, None)
+    return h2, aux
+
+
+def head_fn(cfg, outer: dict, hidden: jax.Array, batch: "Batch") -> jax.Array:
+    """Final norm + chunked cross-entropy."""
+    hidden = apply_norm(cfg, outer["final_norm"], hidden)
+    return chunked_xent_with(cfg, outer, hidden, batch.labels)
+
+
+def chunked_xent_with(cfg, params_for_head, hidden, labels, chunk: int = 512):
+    return _chunked_xent_impl(cfg, params_for_head, hidden, labels, chunk)
+
+
+class Batch(NamedTuple):
+    tokens: jax.Array                      # (B, S) int32
+    labels: jax.Array                      # (B, S) int32, -1 = masked
+    positions: Optional[jax.Array] = None  # (B,S) or (3,B,S) for mrope
+    patches: Optional[jax.Array] = None    # (B, P, vdim) VLM patch embeddings
+    frames: Optional[jax.Array] = None     # (B, enc_seq, D) audio frames
+
+
+def _positions_for(cfg, batch: Batch):
+    if batch.positions is not None:
+        return batch.positions
+    b, s = batch.tokens.shape
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+def backbone(cfg, params, batch: Batch, mode: str, capacity=None):
+    """Embed -> scan units -> final norm.  Returns (hidden, caches, aux)."""
+    descs, units = _decoder_descs(cfg)
+    x = _embed_tokens(cfg, params, batch.tokens)
+    if cfg.vlm_patches:
+        x = _inject_vision(cfg, params, x, batch.patches)
+    x = shard(x, "batch", "seq", None)
+    positions = _positions_for(cfg, batch)
+
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encode_frames(cfg, params, batch.frames)
+
+    def unit(carry, p_u):
+        h, aux = carry
+        h2, new_cache, aux_u = _unit_fwd_with_cross(cfg, descs, p_u, h, positions, mode, enc_out, capacity)
+        return (h2, aux + aux_u), new_cache
+
+    fn = unit
+    if cfg.remat and mode == "train":
+        fn = jax.checkpoint(unit, prevent_cse=False)
+    (x, aux), caches = jax.lax.scan(fn, (x, jnp.float32(0.0)), params["blocks"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, caches, aux
+
+
+def _unit_fwd_with_cross(cfg, descs, p_u, x, positions, mode, enc_out, capacity=None):
+    """Unit forward for train/prefill, computing cross-KV from enc_out as needed."""
+    if not cfg.enc_dec:
+        return _unit_fwd(cfg, descs, p_u, x, positions, mode, None, None, capacity)
+    # encoder-decoder: single-sublayer units with cross attention
+    d = descs[0]
+    h = apply_norm(cfg, p_u["ln1"], x)
+    if mode == "prefill":
+        mx, kv_cache = attention_prefill(cfg, p_u["mixer"], h, positions, window=cfg.sliding_window, capacity=capacity)
+    else:
+        mx = attention_forward(cfg, p_u["mixer"], h, positions, causal=True, window=cfg.sliding_window)
+        kv_cache = None
+    x = x + mx
+    hx = apply_norm(cfg, p_u["lnx"], x)
+    ekv = cross_kv(cfg, p_u["cross"], enc_out)
+    x = x + cross_attention_forward(cfg, p_u["cross"], hx, ekv)
+    h2 = apply_norm(cfg, p_u["ln2"], x)
+    y, aux = _ffn_apply(cfg, d, p_u, h2)
+    x = x + y
+    cache = {"self": kv_cache, "cross_kv": ekv} if mode == "prefill" else None
+    return x, cache, aux
+
+
+def chunked_xent(cfg, params, hidden, labels, chunk: int = 512):
+    """Scan over sequence chunks; never materializes (B, S, V)."""
+    return _chunked_xent_impl(cfg, params, hidden, labels, chunk)
+
+
+def _chunked_xent_impl(cfg, params, hidden, labels, chunk: int = 512):
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    n = s // c
+    w = lm_head_weights(cfg, params).astype(jnp.dtype(cfg.compute_dtype))
+    hr = hidden.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    lr = labels.reshape(b, n, c).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        hc, lc = inp
+        logits = (hc @ w).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        loss = jnp.sum((lse - ll) * mask)
+        return (carry[0] + loss, carry[1] + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)), (hr, lr))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg, params, batch: Batch):
+    hidden, _, aux = backbone(cfg, params, batch, "train")
+    loss = chunked_xent(cfg, params, hidden, batch.labels)
+    return loss + AUX_LOSS_WEIGHT * aux
+
+
+def prefill(cfg, params, batch: Batch, capacity=None):
+    """Returns (last-token logits (B, V), caches).  ``capacity`` reserves
+    cache room for subsequent decode steps."""
+    hidden, caches, _ = backbone(cfg, params, batch, "prefill", capacity=capacity)
+    last = hidden[:, -1]
+    logits = (last @ lm_head_weights(cfg, params).astype(last.dtype)).astype(jnp.float32)
+    return logits, caches
+
+
+def decode_step(cfg, params, token, caches, position):
+    """One decode step.  token: (B, 1) int32; position: scalar int32.
+
+    Returns (logits (B, V), new caches)."""
+    descs, _ = _decoder_descs(cfg)
+    x = _embed_decode_token(cfg, params, token, position)
+    x = shard(x, "batch", None, None)
+    positions = jnp.broadcast_to(position.reshape(1, 1), token.shape).astype(jnp.int32)
+
+    def unit(carry, xs):
+        p_u, cache_u = xs
+        # barrier: stops XLA hoisting fp32 converts of the *entire* stacked
+        # KV cache out of the decode loop (2x 7.5 GiB on gemma decode_32k)
+        cache_u = jax.lax.optimization_barrier(cache_u)
+        if cfg.enc_dec:
+            h = apply_norm(cfg, p_u["ln1"], carry)
+            mx, new_self = attention_decode(cfg, p_u["mixer"], h, cache_u["self"], position, window=cfg.sliding_window)
+            y = carry + mx
+            hx = apply_norm(cfg, p_u["lnx"], y)
+            y = y + cross_attention_forward(cfg, p_u["cross"], hx, cache_u["cross_kv"])
+            h2 = apply_norm(cfg, p_u["ln2"], y)
+            out, _ = _ffn_apply(cfg, descs[0], p_u, h2)
+            return y + out, {"self": new_self, "cross_kv": cache_u["cross_kv"]}
+        h, new_cache, _ = _unit_fwd(cfg, descs, p_u, carry, positions, "decode", cache_u, position)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(unit, x, (params["blocks"], caches))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = (x[:, 0] @ lm_head_weights(cfg, params).astype(x.dtype)).astype(jnp.float32)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (zeros; serving starts from prefill in practice, but the
+# dry-run and tests need shape-correct caches without running prefill).
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg, batch: int, cache_len: int):
+    descs, units = _decoder_descs(cfg)
+    dh = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.compute_dtype)
+    eff_len = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    # full (non-rolling) caches leave the last slot free: decode appends at
+    # cache.length
+    fill = eff_len if cfg.sliding_window else eff_len - 1
+
+    def kv():
+        return KVCache(
+            k=jnp.zeros((batch, eff_len, cfg.num_kv_heads, dh), dt),
+            v=jnp.zeros((batch, eff_len, cfg.num_kv_heads, dh), dt),
+            length=jnp.asarray(fill, jnp.int32),
+        )
+
+    def one(desc):
+        if cfg.enc_dec:
+            ekv = (
+                jnp.zeros((batch, cfg.enc_seq, cfg.num_kv_heads, dh), dt),
+                jnp.zeros((batch, cfg.enc_seq, cfg.num_kv_heads, dh), dt),
+            )
+            return {"self": kv(), "cross_kv": ekv}
+        if desc.mixer == "attn":
+            return kv()
+        return init_ssm_state(cfg, batch, jnp.float32)
+
+    if len(descs) == 1:
+        unit_cache = one(descs[0])
+    else:
+        unit_cache = {f"sub{j}": one(d) for j, d in enumerate(descs)}
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (units,) + x.shape) if hasattr(x, "shape") else x, unit_cache)

@@ -1,0 +1,92 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+The paper trains with momentum SGD (lr 0.01, momentum 0.9, weight decay
+5e-4); AdamW is provided for the LM zoo.  State pytrees mirror the param
+pytree, so FSDP-sharded params get FSDP-sharded optimizer state for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(params, grads, state, step) -> (new_params, new_state)
+
+
+def momentum_sgd(lr: float = 0.01, momentum: float = 0.9, weight_decay: float = 5e-4) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(params, grads, state, step):
+        del step
+
+        def one(p, g, m):
+            g32 = g.astype(jnp.float32)
+            if weight_decay and p.ndim > 1:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m.astype(jnp.float32) + g32
+            p_new = p.astype(jnp.float32) - lr * m_new
+            return p_new.astype(p.dtype), m_new.astype(m.dtype)
+
+        out = jax.tree.map(one, params, grads, state)
+        return (
+            jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple)),
+            jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple)),
+        )
+
+    return Optimizer(init=init, update=update)
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        return AdamWState(
+            m=jax.tree.map(jnp.zeros_like, params),
+            v=jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(params, grads, state, step):
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+
+        def one(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay and p.ndim > 1:
+                upd = upd + weight_decay * p32
+            p_new = p32 - lr * upd
+            return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        out = jax.tree.map(one, params, grads, state.m, state.v)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), AdamWState(m=pick(1), v=pick(2))
+
+    return Optimizer(init=init, update=update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "momentum_sgd":
+        return momentum_sgd(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,89 @@
+"""Error-feedback extension: residual re-injection cancels truncation bias."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CompressorConfig, sample_power_law
+from repro.core.error_feedback import compress_with_feedback, init_error
+
+
+def test_ef_residual_cancels_bias():
+    """Averaged over rounds, EF-compressed constant gradients recover the
+    true gradient (incl. the truncated tail mass), while plain compression
+    keeps a persistent truncation bias."""
+    g = {"w": sample_power_law(jax.random.key(0), (20_000,), gamma=3.6, g_min=0.02, rho=0.2)}
+    cfg = CompressorConfig(method="tqsgd", bits=3)
+    rounds, warmup = 80, 20  # EF needs a few rounds for the residual to build
+
+    # plain: average of C(g)
+    plain = jnp.zeros_like(g["w"])
+    for i in range(warmup, rounds):
+        from repro.core.compressors import compress_decompress
+
+        plain = plain + compress_decompress(cfg, g["w"], jax.random.key(i))
+    plain = plain / (rounds - warmup)
+
+    # EF: average of transmitted c_t after warmup
+    err = init_error(g)
+    ef = jnp.zeros_like(g["w"])
+    for i in range(rounds):
+        c, err = compress_with_feedback(cfg, g, err, jax.random.key(1000 + i))
+        if i >= warmup:
+            ef = ef + c["w"]
+    ef = ef / (rounds - warmup)
+
+    # the moderate tail (95th-99th pct |g|) is clipped by plain truncation but
+    # fully compensated by EF within a few rounds; the extreme tail drains
+    # slowly (residual must outgrow α) — measured ratios: 0.03 mid-tail,
+    # 0.43 overall.
+    gw = g["w"]
+    qa, qb = jnp.quantile(jnp.abs(gw), 0.95), jnp.quantile(jnp.abs(gw), 0.99)
+    band = (jnp.abs(gw) >= qa) & (jnp.abs(gw) < qb)
+    bias_plain = float(jnp.mean(jnp.abs(plain[band] - gw[band])))
+    bias_ef = float(jnp.mean(jnp.abs(ef[band] - gw[band])))
+    assert bias_ef < 0.2 * bias_plain, (bias_ef, bias_plain)
+    all_plain = float(jnp.mean(jnp.abs(plain - gw)))
+    all_ef = float(jnp.mean(jnp.abs(ef - gw)))
+    assert all_ef < 0.7 * all_plain, (all_ef, all_plain)
+
+
+def test_ef_training_low_bits():
+    """EF lets even b=2 truncated quantization track the uncompressed run."""
+    from repro.configs import get_config, reduced
+    from repro.data.synthetic import lm_batch
+    from repro.models import init_lm, loss_fn
+    from repro.optim.optimizers import momentum_sgd
+
+    cfg = reduced(get_config("llama3.2-1b"), layers=2, d_model=128, vocab=256)
+    params, _ = init_lm(jax.random.key(0), cfg)
+    opt = momentum_sgd(lr=0.05)
+    ccfg = CompressorConfig(method="tqsgd", bits=2)
+
+    def run(use_ef):
+        p, s = params, opt.init(params)
+        err = init_error(params)
+
+        @jax.jit
+        def step(p, s, err, i):
+            b = lm_batch(cfg, i, 2, 64)
+            loss, g = jax.value_and_grad(lambda pp: loss_fn(cfg, pp, b))(p)
+            if use_ef:
+                g, err2 = compress_with_feedback(ccfg, g, err, jax.random.fold_in(jax.random.key(5), i))
+            else:
+                from repro.core.compressors import tree_compress_decompress
+
+                g = tree_compress_decompress(ccfg, g, jax.random.fold_in(jax.random.key(5), i))
+                err2 = err
+            p, s = opt.update(p, g, s, i)
+            return p, s, err2, loss
+
+        losses = []
+        for i in range(10):
+            p, s, err, l = step(p, s, err, jnp.uint32(i))
+            losses.append(float(l))
+        return losses
+
+    l_ef = run(True)
+    l_plain = run(False)
+    assert l_ef[-1] <= l_plain[-1] + 0.1, (l_ef, l_plain)
+    assert l_ef[-1] < l_ef[0] - 0.3

@@ -1,0 +1,74 @@
+"""Trip-count-aware HLO cost analysis: validated against analytic FLOPs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _compiled_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_dot_flops_counted():
+    def f(a, b):
+        return a @ b
+
+    t = _compiled_text(f, jnp.ones((64, 128)), jnp.ones((128, 32)))
+    cost = analyze(t, default_group=1)
+    want = 2 * 64 * 128 * 32
+    assert abs(cost.flops - want) / want < 0.2, (cost.flops, want)
+
+
+def test_scan_trip_count_multiplies():
+    trips = 13
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+
+        y, _ = jax.lax.scan(body, x, None, length=trips)
+        return y
+
+    t = _compiled_text(f, jnp.ones((32, 64)), jnp.ones((64, 64)))
+    cost = analyze(t, default_group=1)
+    per_iter = 2 * 32 * 64 * 64
+    # dot flops must be multiplied by the trip count
+    assert cost.flops >= trips * per_iter, (cost.flops, trips * per_iter)
+    assert cost.flops < 2 * trips * per_iter
+
+
+def test_nested_scan():
+    def f(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            y, _ = jax.lax.scan(inner, c, None, length=5)
+            return y, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    t = _compiled_text(f, jnp.ones((16, 32)), jnp.ones((32, 32)))
+    cost = analyze(t, default_group=1)
+    want = 15 * 2 * 16 * 32 * 32
+    assert cost.flops >= want, (cost.flops, want)
+    assert cost.flops < 2 * want
+
+
+def test_xla_raw_cost_undercounts_loops():
+    """Demonstrates why the custom walker exists."""
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+
+        y, _ = jax.lax.scan(body, x, None, length=50)
+        return y
+
+    compiled = jax.jit(f).lower(jnp.ones((32, 64)), jnp.ones((64, 64))).compile()
+    raw = compiled.cost_analysis()
+    if isinstance(raw, list):
+        raw = raw[0]
+    ours = analyze(compiled.as_text(), default_group=1).flops
+    assert ours > 10 * float(raw.get("flops", 0.0) or 1.0)

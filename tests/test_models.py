@@ -1,0 +1,180 @@
+"""Per-architecture smoke tests (reduced configs) + model-component tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.data.synthetic import lm_batch, make_mrope_positions
+from repro.models import Batch, decode_step, init_caches, init_lm, loss_fn, prefill
+from repro.models.moe import dense_moe_apply, moe_apply, moe_init
+from repro.models.ssm import naive_recurrence, ssd_chunked
+from repro.models.transformer import backbone, embed_fn, head_fn, outer_params, unit_fn
+from repro.models.attention import flash_attention
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward_and_train_step(arch):
+    """REDUCED variant: one forward + one SGD step; shapes + finiteness."""
+    cfg = reduced(get_config(arch))
+    params, logical = init_lm(jax.random.key(0), cfg)
+    batch = lm_batch(cfg, jnp.uint32(0), 2, 128)
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: loss_fn(cfg, p, batch)))(params)
+    assert jnp.isfinite(loss), arch
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads)), arch
+    new = jax.tree.map(lambda p, g: p - 0.01 * g, params, grads)
+    loss2 = jax.jit(lambda p: loss_fn(cfg, p, batch))(new)
+    assert jnp.isfinite(loss2), arch
+    # logical tree matches params structure
+    assert jax.tree.structure(jax.tree.map(lambda *_: 0, params)) == jax.tree.structure(
+        jax.tree.map(lambda _: 0, logical, is_leaf=lambda x: isinstance(x, tuple))
+    )
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_prefill_decode(arch):
+    cfg = reduced(get_config(arch))
+    params, _ = init_lm(jax.random.key(0), cfg)
+    batch = lm_batch(cfg, jnp.uint32(0), 2, 64)
+    logits, caches = jax.jit(lambda p, b: prefill(cfg, p, b))(params, batch)
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, caches2 = jax.jit(lambda p, t, c, pos: decode_step(cfg, p, t, c, pos))(
+        params, tok, caches, jnp.int32(64)
+    )
+    assert logits2.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_decode_consistent_with_forward():
+    """Greedy decode from prefill caches matches teacher-forced forward."""
+    cfg = reduced(get_config("llama3.2-1b"))
+    params, _ = init_lm(jax.random.key(0), cfg)
+    b = lm_batch(cfg, jnp.uint32(0), 2, 33)
+    # full forward logits at position t computed via prefill on prefix
+    prefix = Batch(tokens=b.tokens[:, :32], labels=b.labels[:, :32])
+    logits_prefill, caches = prefill(cfg, params, prefix, capacity=40)
+    # decode the 33rd token
+    logits_dec, _ = decode_step(cfg, params, b.tokens[:, 32:33], caches, jnp.int32(32))
+    # reference: prefill on all 33 tokens -> last logits
+    logits_ref, _ = prefill(cfg, params, b)
+    np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(logits_ref), rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_decode_consistent_with_forward():
+    cfg = reduced(get_config("mamba2-2.7b"))
+    params, _ = init_lm(jax.random.key(0), cfg)
+    b = lm_batch(cfg, jnp.uint32(0), 2, 33)
+    prefix = Batch(tokens=b.tokens[:, :32], labels=b.labels[:, :32])
+    _, caches = prefill(cfg, params, prefix)
+    logits_dec, _ = decode_step(cfg, params, b.tokens[:, 32:33], caches, jnp.int32(32))
+    logits_ref, _ = prefill(cfg, params, b)
+    np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(logits_ref), rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunked_exact():
+    key = jax.random.key(0)
+    B, S, H, P, G, N = 2, 96, 4, 8, 2, 16
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    ld = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.5
+    bs = jax.random.normal(ks[2], (B, S, G, N)) * 0.3
+    cs = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    y1, fin = ssd_chunked(x, ld, bs, cs, chunk=16)
+    y2 = naive_recurrence(x, ld, bs, cs)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    # continuation across a split point
+    ya, fa = ssd_chunked(x[:, :48], ld[:, :48], bs[:, :48], cs[:, :48], chunk=16)
+    yb, _ = ssd_chunked(x[:, 48:], ld[:, 48:], bs[:, 48:], cs[:, 48:], chunk=16, init_state=fa)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([ya, yb], 1)), np.asarray(y2), atol=2e-5)
+
+
+def test_flash_attention_matches_naive():
+    key = jax.random.key(1)
+    B, S, H, D = 2, 128, 4, 16
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D)) for i in range(3))
+    out = flash_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=32)
+    # naive reference
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(D)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_sliding_window():
+    key = jax.random.key(2)
+    B, S, H, D = 1, 64, 2, 8
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D)) for i in range(3))
+    win = 16
+    out = flash_attention(q, k, v, causal=True, window=win, q_chunk=16, kv_chunk=16)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(D)
+    qpos, kpos = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+    mask = (qpos >= kpos) & (qpos - kpos < win)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_moe_sort_matches_dense_at_high_capacity():
+    cfg = reduced(get_config("phi3.5-moe-42b-a6.6b"))
+    cfg = cfg.replace(moe=cfg.moe.__class__(num_experts=4, top_k=2, capacity_factor=8.0, every=1, d_ff=64))
+    p, _ = moe_init(jax.random.key(0), cfg, cfg.d_model)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model)) * 0.5
+    y1, aux1 = moe_apply(cfg, p, x)
+    y2, aux2 = dense_moe_apply(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = reduced(get_config("phi3.5-moe-42b-a6.6b"))
+    cfg = cfg.replace(moe=cfg.moe.__class__(num_experts=4, top_k=2, capacity_factor=0.1, every=1, d_ff=64))
+    p, _ = moe_init(jax.random.key(0), cfg, cfg.d_model)
+    x = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model))
+    y, _ = moe_apply(cfg, p, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # with tiny capacity most tokens must be dropped -> many zero rows
+    zero_rows = jnp.mean((jnp.abs(y).sum(-1) == 0).astype(jnp.float32))
+    assert float(zero_rows) > 0.3
+
+
+def test_mrope_positions_shape_and_text_equivalence():
+    pos = make_mrope_positions(2, 64, 16, grid=4)
+    assert pos.shape == (3, 2, 64)
+    # text positions identical across the three streams
+    np.testing.assert_array_equal(np.asarray(pos[0, :, 16:]), np.asarray(pos[1, :, 16:]))
+    np.testing.assert_array_equal(np.asarray(pos[1, :, 16:]), np.asarray(pos[2, :, 16:]))
+
+
+def test_decomposed_train_path_matches_loss_fn():
+    """embed_fn -> unit_fn scan -> head_fn == loss_fn (streamed-step math)."""
+    from repro.models.transformer import AUX_LOSS_WEIGHT
+
+    cfg = reduced(get_config("llama3.2-1b"))
+    params, _ = init_lm(jax.random.key(0), cfg)
+    batch = lm_batch(cfg, jnp.uint32(0), 2, 64)
+    want = loss_fn(cfg, params, batch)
+    outer = outer_params(params)
+    h = embed_fn(cfg, outer, batch)
+    positions = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+
+    def f(carry, p_u):
+        h, aux = carry
+        h2, aux_u = unit_fn(cfg, p_u, h, positions)
+        return (h2, aux + aux_u), None
+
+    (h, aux), _ = jax.lax.scan(f, (h, jnp.float32(0.0)), params["blocks"])
+    got = head_fn(cfg, outer, h, batch) + AUX_LOSS_WEIGHT * aux
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_long_decode_variant_sliding_window():
+    from repro.configs import get_shape, variant_for_shape
+
+    cfg = get_config("llama3.2-1b")
+    v = variant_for_shape(cfg, get_shape("long_500k"))
+    assert v.sliding_window == 4096
+    # ssm/hybrid unchanged
+    assert variant_for_shape(get_config("mamba2-2.7b"), get_shape("long_500k")).sliding_window is None

@@ -1,0 +1,117 @@
+"""Power-law tail model + optimal-parameter tests (paper §IV)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompressorConfig, compress_decompress, fit_power_law_tail, sample_power_law
+from repro.core import distributions as D
+from repro.core import optimal as O
+from repro.core import theory as T
+from repro.core.compressors import plan
+
+
+@pytest.fixture(scope="module")
+def g():
+    return sample_power_law(jax.random.key(7), (400_000,), gamma=4.0, g_min=0.01, rho=0.1)
+
+
+def test_gamma_mle_recovery():
+    for gamma_true in (3.5, 4.0, 4.5):
+        s = sample_power_law(jax.random.key(1), (300_000,), gamma=gamma_true, g_min=0.01, rho=0.25)
+        tail = fit_power_law_tail(s, gmin_quantile=0.6)
+        assert abs(float(tail.gamma) - gamma_true) < 0.25, (gamma_true, float(tail.gamma))
+
+
+def test_tail_mass_consistency(g):
+    tail = fit_power_law_tail(g)
+    alpha = 2.0 * tail.g_min
+    pred = float(D.tail_mass(tail, alpha))
+    emp = float(jnp.mean(jnp.abs(g) > alpha) / 2.0)
+    assert abs(pred - emp) / max(emp, 1e-9) < 0.2
+
+
+def test_alpha_fixed_point_matches_closed_form(g):
+    """Eq. 12 fixed point ~ alpha' = g_min (2 rho s^2/(gamma-2))^(1/(gamma-1))
+    since Q_U ~ 1 (paper remark after Thm 1)."""
+    tail = fit_power_law_tail(g)
+    alpha = O.solve_alpha_uniform(tail, bits=3)
+    s = 7
+    approx = float(tail.g_min) * (2 * float(tail.rho) * s * s / (float(tail.gamma) - 2)) ** (
+        1.0 / (float(tail.gamma) - 1.0)
+    )
+    assert abs(float(alpha) - approx) / approx < 0.1
+
+
+def test_alpha_grows_with_bits(g):
+    tail = fit_power_law_tail(g)
+    alphas = [float(O.solve_alpha_uniform(tail, bits=b)) for b in (2, 3, 4, 5)]
+    assert all(a2 > a1 for a1, a2 in zip(alphas, alphas[1:]))
+
+
+def test_alpha_shrinks_with_gamma():
+    """Thicker tails (smaller gamma) need larger truncation thresholds."""
+    alphas = []
+    for gm in (3.5, 4.0, 4.5):
+        s = sample_power_law(jax.random.key(2), (200_000,), gamma=gm, g_min=0.01, rho=0.2)
+        tail = fit_power_law_tail(s, gmin_quantile=0.6)
+        alphas.append(float(O.solve_alpha_uniform(tail, bits=3)))
+    assert alphas[0] > alphas[1] > alphas[2]
+
+
+def test_holder_ordering(g):
+    """Q_N <= Q_U (paper's Holder argument after Thm 2)."""
+    tail = fit_power_law_tail(g)
+    dens = D.fit_empirical_density(g)
+    alpha = O.solve_alpha_uniform(tail, bits=3)
+    qn = float(O.q_n(dens, alpha))
+    qu = float(D.q_u(tail, alpha))
+    qb = float(O.q_b(dens, alpha, jnp.float32(0.3)))
+    assert qn <= qu * 1.02
+    assert qb <= qu * 1.02
+
+
+def test_optimal_alpha_minimizes_error(g):
+    """The Eq. 12 alpha should (approximately) minimize measured MSE over an
+    alpha sweep for the uniform quantizer."""
+    from repro.core.quantizers import QuantMeta, quantize, uniform_levels
+
+    tail = fit_power_law_tail(g)
+    a_star = float(O.solve_alpha_uniform(tail, bits=3))
+    alphas = a_star * np.array([0.25, 0.5, 1.0, 2.0, 4.0, 8.0])
+    mses = []
+    for a in alphas:
+        meta = QuantMeta(levels=uniform_levels(jnp.float32(a), 3), alpha=jnp.float32(a))
+        qv = quantize(g[:100_000], meta, jax.random.key(3))
+        mses.append(float(jnp.mean((qv - g[:100_000]) ** 2)))
+    assert np.argmin(mses) == 2, (list(zip(alphas, mses)), a_star)
+
+
+def test_mse_ordering_of_methods(g):
+    mses = {}
+    for m in ("qsgd", "nqsgd", "tqsgd", "tnqsgd", "tbqsgd"):
+        out = compress_decompress(CompressorConfig(method=m, bits=3), g, jax.random.key(4))
+        mses[m] = float(jnp.mean((out - g) ** 2))
+    # truncation >> no truncation at 3 bits (paper Fig. 3 regime)
+    assert mses["tqsgd"] < 0.1 * mses["qsgd"]
+    # non-uniform beats uniform without truncation
+    assert mses["nqsgd"] < mses["qsgd"]
+    # optimised variants at least match the uniform truncated scheme
+    assert mses["tnqsgd"] <= mses["tqsgd"] * 1.1
+    assert mses["tbqsgd"] <= mses["tqsgd"] * 1.1
+
+
+def test_theory_error_within_factor(g):
+    """Empirical per-element MSE of TQSGD tracks Eq. 11 within ~2x."""
+    tail = fit_power_law_tail(g)
+    alpha = O.solve_alpha_uniform(tail, bits=3)
+    pred = float(T.e_tq_uniform(tail, alpha, 3))
+    out = compress_decompress(CompressorConfig(method="tqsgd", bits=3), g, jax.random.key(5))
+    emp = float(jnp.mean((out - g) ** 2))
+    assert 0.2 < emp / pred < 3.0, (emp, pred)
+
+
+def test_bound_decreases_with_bits(g):
+    tail = fit_power_law_tail(g)
+    vals = [float(T.e_tq_bound(tail, jnp.float32(1.0), b)) for b in (2, 3, 4, 5)]
+    assert all(v2 < v1 for v1, v2 in zip(vals, vals[1:]))

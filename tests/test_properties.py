@@ -1,0 +1,101 @@
+"""Hypothesis property-based tests for the quantization core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompressorConfig
+from repro.core.compressors import decode, encode, plan
+from repro.core.quantizers import (
+    num_levels,
+    pack_codes,
+    stochastic_encode,
+    truncate,
+    unpack_codes,
+)
+
+METHODS = ("qsgd", "nqsgd", "tqsgd", "tnqsgd", "tbqsgd")
+
+
+def _gradients(draw, n):
+    """Random heavy-ish tensors with varied scale (avoids all-zero)."""
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(1e-3, 1e3))
+    kind = draw(st.sampled_from(["normal", "cauchy", "exp"]))
+    key = jax.random.key(seed)
+    if kind == "normal":
+        g = jax.random.normal(key, (n,))
+    elif kind == "cauchy":
+        g = jax.random.cauchy(key, (n,))
+    else:
+        g = jax.random.exponential(key, (n,)) * jnp.where(
+            jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (n,)), 1.0, -1.0
+        )
+    return (g * scale).astype(jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data(), method=st.sampled_from(METHODS), bits=st.integers(2, 5))
+def test_roundtrip_bounded_and_in_codebook(data, method, bits):
+    g = _gradients(data.draw, 512)
+    cfg = CompressorConfig(method=method, bits=bits)
+    meta = plan(cfg, g)
+    wire = encode(cfg, g, meta, jax.random.key(0))
+    out = decode(cfg, wire, meta, g.shape)
+    # decoded values live on the codebook
+    dists = jnp.min(jnp.abs(out[:, None] - meta.levels[None, :]), axis=1)
+    assert float(jnp.max(dists)) < 1e-4 * max(float(meta.alpha), 1e-6) + 1e-6
+    # and within [-alpha, alpha]
+    assert float(jnp.max(jnp.abs(out))) <= float(meta.alpha) * (1 + 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data(), bits=st.integers(1, 8))
+def test_pack_roundtrip_property(data, bits):
+    n = data.draw(st.integers(1, 700))
+    codes = np.asarray(
+        jax.random.randint(jax.random.key(n), (n,), 0, 2**bits), dtype=np.uint8
+    )
+    back = unpack_codes(pack_codes(jnp.asarray(codes), bits), n, bits)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data(), method=st.sampled_from(("tqsgd", "tnqsgd")))
+def test_wire_budget_respected(data, method):
+    """Payload bits per element never exceed bits + packing slack."""
+    bits = data.draw(st.integers(2, 5))
+    n = data.draw(st.integers(64, 2048))
+    g = _gradients(data.draw, n)
+    cfg = CompressorConfig(method=method, bits=bits)
+    meta = plan(cfg, g)
+    wire = encode(cfg, g, meta, jax.random.key(1))
+    payload_bits = wire.size * 32
+    # padding to 32-code groups is the only slack
+    assert payload_bits <= (n + 31) // 32 * 32 * bits
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_truncation_contracts(data):
+    g = _gradients(data.draw, 256)
+    alpha = data.draw(st.floats(1e-4, 1e2))
+    t = truncate(g, jnp.float32(alpha))
+    # contraction: |T(g)| <= |g| and <= alpha
+    assert bool(jnp.all(jnp.abs(t) <= jnp.abs(g) + 1e-9))
+    assert float(jnp.max(jnp.abs(t))) <= alpha * (1 + 1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data(), method=st.sampled_from(METHODS))
+def test_statistical_unbiasedness_coarse(data, method):
+    """Mean over repeats approaches the truncated tensor (weak tolerance)."""
+    g = _gradients(data.draw, 128)
+    cfg = CompressorConfig(method=method, bits=4)
+    meta = plan(cfg, g)
+    gt = truncate(g, meta.alpha)
+    reps = jnp.stack(
+        [jnp.take(meta.levels, stochastic_encode(g, meta, jax.random.key(i)).astype(jnp.int32)) for i in range(64)]
+    )
+    step = float(jnp.max(jnp.diff(meta.levels)))
+    assert float(jnp.max(jnp.abs(reps.mean(0) - gt))) < step

@@ -1,0 +1,127 @@
+"""Quantizer-core tests: Lemma 1 (unbiasedness + variance bound), truncation,
+codebooks, bit packing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressorConfig,
+    QuantMeta,
+    compress_decompress,
+    sample_power_law,
+    truncate,
+)
+from repro.core.compressors import plan
+from repro.core.quantizers import (
+    levels_from_density,
+    num_levels,
+    pack_codes,
+    quantize,
+    stochastic_encode,
+    uniform_levels,
+    unpack_codes,
+)
+
+
+@pytest.fixture(scope="module")
+def heavy_tailed():
+    return sample_power_law(jax.random.key(0), (50_000,), gamma=4.0, g_min=0.01, rho=0.1)
+
+
+def test_truncation_operator(heavy_tailed):
+    alpha = jnp.float32(0.05)
+    t = truncate(heavy_tailed, alpha)
+    assert float(jnp.max(jnp.abs(t))) <= 0.05 + 1e-7
+    # identity inside the range
+    inside = jnp.abs(heavy_tailed) <= 0.05
+    np.testing.assert_array_equal(np.asarray(t[inside]), np.asarray(heavy_tailed[inside]))
+    # idempotent
+    np.testing.assert_array_equal(np.asarray(truncate(t, alpha)), np.asarray(t))
+
+
+def test_unbiasedness_lemma1(heavy_tailed):
+    """E[Q[g]] == T_alpha(g) (Lemma 1, Eq. 5)."""
+    g = heavy_tailed[:4000]
+    meta = plan(CompressorConfig(method="tnqsgd", bits=3), g)
+    reps = jnp.stack([quantize(g, meta, jax.random.key(i)) for i in range(200)])
+    gt = truncate(g, meta.alpha)
+    err = jnp.abs(reps.mean(0) - gt)
+    step = jnp.mean(jnp.diff(meta.levels))
+    # mean of 200 draws: std ~ step/sqrt(200); allow 5 sigma
+    assert float(jnp.max(err)) < 5 * float(step) / np.sqrt(200)
+
+
+def test_variance_bound_lemma1(heavy_tailed):
+    """E|Q[g]-g|^2 <= sum_k P_k |Delta_k|^2 / 4 (Lemma 1, Eq. 6)."""
+    g = heavy_tailed[:20_000]
+    for method in ("tqsgd", "tnqsgd", "tbqsgd"):
+        meta = plan(CompressorConfig(method=method, bits=3), g)
+        gt = truncate(g, meta.alpha)
+        qs = jnp.stack([quantize(g, meta, jax.random.key(i)) for i in range(50)])
+        emp_var = float(jnp.mean((qs - gt[None]) ** 2))
+        # bound: every point's interval length <= max step -> P-weighted bound
+        k = jnp.clip(jnp.searchsorted(meta.levels, gt, side="right") - 1, 0, meta.levels.shape[0] - 2)
+        delta = meta.levels[k + 1] - meta.levels[k]
+        bound = float(jnp.mean(delta**2 / 4.0))
+        assert emp_var <= bound * 1.05, (method, emp_var, bound)
+
+
+def test_uniform_levels_match_qsgd(heavy_tailed):
+    """lambda = s/2alpha must reproduce QSGD's evenly spaced codebook."""
+    alpha = jnp.float32(0.1)
+    lv = uniform_levels(alpha, 3)
+    assert lv.shape == (8,)
+    np.testing.assert_allclose(np.diff(np.asarray(lv)), 2 * 0.1 / 7, rtol=1e-5)
+
+
+def test_levels_from_density_uniform_case():
+    """Flat density -> uniform codebook."""
+    edges = jnp.linspace(0.0, 1.0, 65)
+    lam = jnp.ones((64,))
+    lv = levels_from_density(edges, lam, 3)
+    np.testing.assert_allclose(np.diff(np.asarray(lv)), 2 / 7, atol=1e-3)
+    assert float(lv[0]) == -1.0 and float(lv[-1]) == 1.0
+
+
+def test_levels_monotone_under_spiky_density():
+    edges = jnp.linspace(0.0, 1.0, 33)
+    lam = jnp.zeros((32,)).at[3].set(100.0)
+    lv = levels_from_density(edges, lam, 4)
+    assert bool(jnp.all(jnp.diff(lv) > 0))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 5, 8])
+def test_pack_unpack_roundtrip(bits):
+    n = 1000
+    codes = jax.random.randint(jax.random.key(bits), (n,), 0, 2**bits).astype(jnp.uint8)
+    words = pack_codes(codes, bits)
+    assert words.dtype == jnp.uint32
+    assert words.size == ((n + 31) // 32) * bits
+    back = unpack_codes(words, n, bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_encode_codes_in_range(heavy_tailed):
+    for method in ("qsgd", "tqsgd", "tnqsgd", "tbqsgd"):
+        cfg = CompressorConfig(method=method, bits=3)
+        meta = plan(cfg, heavy_tailed)
+        codes = stochastic_encode(heavy_tailed, meta, jax.random.key(1))
+        assert int(codes.max()) <= num_levels(3)
+        assert int(codes.min()) >= 0
+
+
+def test_compress_decompress_within_alpha(heavy_tailed):
+    for method in ("tqsgd", "tnqsgd", "tbqsgd"):
+        cfg = CompressorConfig(method=method, bits=3)
+        meta = plan(cfg, heavy_tailed)
+        out = compress_decompress(cfg, heavy_tailed, jax.random.key(2))
+        assert float(jnp.max(jnp.abs(out))) <= float(meta.alpha) * (1 + 1e-5)
+
+
+def test_dsgd_identity(heavy_tailed):
+    cfg = CompressorConfig(method="dsgd")
+    np.testing.assert_array_equal(
+        np.asarray(compress_decompress(cfg, heavy_tailed, jax.random.key(0))),
+        np.asarray(heavy_tailed),
+    )

@@ -1,0 +1,205 @@
+"""Data pipeline, optimizer, checkpoint, and config-registry tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, get_shape, reduced, variant_for_shape
+from repro.data.synthetic import client_batches, lm_batch, make_templates, shapes_batch
+from repro.launch.specs import abstract_batch, abstract_init, count_active_params, count_params
+from repro.optim.optimizers import adamw, momentum_sgd
+
+
+# -- configs ----------------------------------------------------------------
+
+EXPECTED = {
+    "granite-20b": dict(num_layers=52, d_model=6144, num_heads=48, num_kv_heads=1, d_ff=24576, vocab=49152),
+    "qwen2-vl-2b": dict(num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2, d_ff=8960, vocab=151936),
+    "llama3.2-1b": dict(num_layers=16, d_model=2048, num_heads=32, num_kv_heads=8, d_ff=8192, vocab=128256),
+    "qwen3-moe-235b-a22b": dict(num_layers=94, d_model=4096, num_heads=64, num_kv_heads=4, vocab=151936),
+    "gemma-7b": dict(num_layers=28, d_model=3072, num_heads=16, num_kv_heads=16, d_ff=24576, vocab=256000),
+    "minitron-8b": dict(num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, d_ff=16384, vocab=256000),
+    "whisper-base": dict(num_layers=6, d_model=512, num_heads=8, d_ff=2048, vocab=51865),
+    "phi3.5-moe-42b-a6.6b": dict(num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, d_ff=6400, vocab=32064),
+    "mamba2-2.7b": dict(num_layers=64, d_model=2560, vocab=50280),
+    "jamba-1.5-large-398b": dict(num_layers=72, d_model=8192, num_heads=64, num_kv_heads=8, d_ff=24576, vocab=65536),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_moe_configs():
+    q = get_config("qwen3-moe-235b-a22b")
+    assert q.moe.num_experts == 128 and q.moe.top_k == 8
+    p = get_config("phi3.5-moe-42b-a6.6b")
+    assert p.moe.num_experts == 16 and p.moe.top_k == 2
+    j = get_config("jamba-1.5-large-398b")
+    assert j.moe.num_experts == 16 and j.moe.top_k == 2 and j.attn_period == 8
+
+
+def test_param_counts_in_ballpark():
+    """Full-size configs match their nameplate scale (abstract init only)."""
+    expected_b = {
+        "llama3.2-1b": (1.0, 1.9),
+        "qwen3-moe-235b-a22b": (180, 260),
+        "phi3.5-moe-42b-a6.6b": (35, 50),
+        "mamba2-2.7b": (2.2, 3.2),
+        "jamba-1.5-large-398b": (330, 430),
+        "gemma-7b": (7.5, 10.5),
+        "minitron-8b": (7.5, 10.5),
+        "granite-20b": (18, 31),
+        "whisper-base": (0.05, 0.12),
+        "qwen2-vl-2b": (1.2, 2.4),
+    }
+    for arch, (lo, hi) in expected_b.items():
+        params_like, logical = abstract_init(get_config(arch))
+        n = count_params(params_like) / 1e9
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_active_params_moe():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    pl, lg = abstract_init(cfg)
+    total = count_params(pl)
+    active = count_active_params(cfg, pl, lg)
+    assert active < 0.25 * total  # top-8 of 128
+
+
+def test_input_shapes_table():
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["decode_32k"].kind == "decode"
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+
+
+def test_reduced_constraints():
+    for arch in ARCHS:
+        r = reduced(get_config(arch))
+        assert r.d_model <= 512
+        assert r.num_layers <= max(2, r.attn_period)
+        if r.moe:
+            assert r.moe.num_experts <= 4
+
+
+# -- data -------------------------------------------------------------------
+
+
+def test_lm_batch_deterministic():
+    cfg = reduced(get_config("llama3.2-1b"))
+    b1 = lm_batch(cfg, jnp.uint32(3), 4, 32)
+    b2 = lm_batch(cfg, jnp.uint32(3), 4, 32)
+    np.testing.assert_array_equal(np.asarray(b1.tokens), np.asarray(b2.tokens))
+    b3 = lm_batch(cfg, jnp.uint32(4), 4, 32)
+    assert not np.array_equal(np.asarray(b1.tokens), np.asarray(b3.tokens))
+    assert int(b1.tokens.max()) < cfg.vocab
+    # labels are next-token with last masked
+    np.testing.assert_array_equal(np.asarray(b1.labels[:, :-1]), np.asarray(b1.tokens[:, 1:]))
+    assert int(b1.labels[0, -1]) == -1
+
+
+def test_vlm_audio_batch_extras():
+    v = reduced(get_config("qwen2-vl-2b"))
+    b = lm_batch(v, jnp.uint32(0), 2, 64)
+    assert b.patches.shape == (2, v.vlm_patches, v.vlm_vision_dim)
+    assert b.positions.shape == (3, 2, 64)
+    assert bool(jnp.all(b.labels[:, : v.vlm_patches] == -1))
+    a = reduced(get_config("whisper-base"))
+    b = lm_batch(a, jnp.uint32(0), 2, 64)
+    assert b.frames.shape == (2, a.enc_seq, a.d_model)
+
+
+def test_shapes_dataset_heavy_tail():
+    tmpl = make_templates(jax.random.key(0))
+    imgs, labels = shapes_batch(tmpl, jnp.uint32(0), 256)
+    assert imgs.shape == (256, 28, 28, 1)
+    assert int(labels.max()) < 10
+    ci, cl = client_batches(tmpl, jnp.uint32(0), 8, 16)
+    assert ci.shape == (8, 16, 28, 28, 1)
+
+
+# -- optimizers ---------------------------------------------------------------
+
+
+def test_momentum_sgd_quadratic():
+    opt = momentum_sgd(lr=0.05, momentum=0.9, weight_decay=0.0)
+    p = {"w": jnp.array([5.0, -3.0])}
+    s = opt.init(p)
+    for i in range(200):
+        g = jax.tree.map(lambda w: 2 * w, p)
+        p, s = opt.update(p, g, s, jnp.uint32(i))
+    assert float(jnp.abs(p["w"]).max()) < 1e-2
+
+
+def test_adamw_quadratic():
+    opt = adamw(lr=0.1, weight_decay=0.0)
+    p = {"w": jnp.array([[5.0, -3.0]])}
+    s = opt.init(p)
+    for i in range(120):
+        g = jax.tree.map(lambda w: 2 * w, p)
+        p, s = opt.update(p, g, s, jnp.uint32(i))
+    assert float(jnp.abs(p["w"]).max()) < 5e-2
+
+
+# -- checkpoint ---------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+    save_checkpoint(tmp_path, 7, tree)
+    assert latest_step(tmp_path) == 7
+    restored, step = load_checkpoint(tmp_path, tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_resume_training(tmp_path):
+    """seed-addressable pipeline + checkpoint => bitwise resume."""
+    cfg = reduced(get_config("llama3.2-1b"), layers=2, d_model=64, vocab=128)
+    from repro.models import init_lm, loss_fn
+
+    params, _ = init_lm(jax.random.key(0), cfg)
+    opt = momentum_sgd(lr=0.05)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, i):
+        b = lm_batch(cfg, i, 2, 32)
+        loss, g = jax.value_and_grad(lambda pp: loss_fn(cfg, pp, b))(p)
+        p, s = opt.update(p, g, s, i)
+        return p, s, loss
+
+    # run 4 steps straight
+    p1, s1 = params, state
+    for i in range(4):
+        p1, s1, _ = step(p1, s1, jnp.uint32(i))
+    # run 2, checkpoint, restore, run 2 more
+    p2, s2 = params, state
+    for i in range(2):
+        p2, s2, _ = step(p2, s2, jnp.uint32(i))
+    save_checkpoint(tmp_path, 2, (p2, s2))
+    (p2r, s2r), st = load_checkpoint(tmp_path, (p2, s2))
+    for i in range(st, 4):
+        p2r, s2r, _ = step(p2r, s2r, jnp.uint32(i))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2r)):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-6)
+
+
+# -- variant selection ---------------------------------------------------------
+
+
+def test_variant_for_shape():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        v = variant_for_shape(cfg, get_shape("long_500k"))
+        if cfg.family in ("ssm", "hybrid"):
+            assert v.sliding_window is None
+        else:
+            assert v.sliding_window == 4096
+        assert variant_for_shape(cfg, get_shape("train_4k")) == cfg
