@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import CompressorConfig, compress_decompress, fit_power_law_tail, sample_power_law
 from repro.core import optimal as O

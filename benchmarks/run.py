@@ -1,21 +1,36 @@
 """Benchmark harness: one module per paper figure/table.
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` uses the paper-scale
-round counts (slow on CPU); the default quick mode validates the orderings.
+round counts (slow on CPU); the default quick mode (also spelled ``--quick``,
+the flag CI passes) validates the orderings.
+
+Runs both as ``python -m benchmarks.run`` and as ``python benchmarks/run.py``
+(the script form bootstraps the repo root + ``src`` onto ``sys.path``).
 """
 import argparse
+import pathlib
 import sys
 import time
+
+if __package__ in (None, ""):  # script invocation: python benchmarks/run.py
+    _ROOT = pathlib.Path(__file__).resolve().parents[1]
+    for p in (str(_ROOT), str(_ROOT / "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale round counts")
+    ap.add_argument("--quick", action="store_true",
+                    help="quick mode (the default; ignored with --full)")
     ap.add_argument("--only", default=None, help="comma-separated subset")
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from . import collectives_bench, fig1_grad_density, fig3_accuracy, fig4_tradeoff, kernel_bench, quant_error
+    from benchmarks import (
+        collectives_bench, fig1_grad_density, fig3_accuracy, fig4_tradeoff, kernel_bench, quant_error,
+    )
 
     suites = {
         "quant_error": quant_error.main,

@@ -4,11 +4,15 @@ SGD, per-layer truncated quantization — on the synthetic shapes dataset.
 Run:  PYTHONPATH=src python examples/train_8clients.py --method tnqsgd --rounds 120
 """
 import argparse
+import pathlib
 import sys
 
-sys.path.insert(0, "benchmarks") if False else None  # benchmarks is a package
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
-from benchmarks.common import train_clients
+from benchmarks.common import train_clients  # noqa: E402
 
 
 def main():

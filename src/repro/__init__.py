@@ -1,0 +1,7 @@
+"""Reproduction of "Improved Quantization Strategies for Managing
+Heavy-tailed Gradients in Distributed Learning" as a jax/pallas runtime.
+
+Subpackages: ``core`` (quantizers/compressors), ``kernels`` (Pallas),
+``dist`` (sharding + compressed collectives), ``models`` (LM zoo),
+``optim``, ``data``, ``configs``, ``launch``, ``checkpoint``.
+"""

@@ -18,7 +18,6 @@ decode of uniform codebooks when enabled.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

@@ -64,7 +64,7 @@ def levels_from_density(
     # neighbouring levels).
     levels = levels.at[0].set(-alpha).at[-1].set(alpha)
     min_step = 2.0 * alpha * 1e-6 / (s + 1)
-    levels = jnp.maximum.accumulate(levels + min_step * jnp.arange(s + 1)) - min_step * jnp.arange(s + 1)
+    levels = jax.lax.cummax(levels + min_step * jnp.arange(s + 1), axis=0) - min_step * jnp.arange(s + 1)
     return levels.astype(jnp.float32)
 
 

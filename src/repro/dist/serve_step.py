@@ -1,0 +1,86 @@
+"""Sharded serving: jitted prefill + single-token decode with KV caches.
+
+Serving has no gradient sync, so it runs as plain auto-sharded jit: the
+logical→mesh rules constrain activations (batch over data/pod, heads/ff/
+vocab over model) and GSPMD inserts the collectives.  ``make_serve_fns``
+returns the two jitted entry points plus the PartitionSpec trees callers use
+to place params and caches.
+
+Prefill reserves ``DECODE_MARGIN`` extra cache slots beyond the prompt so
+decode steps can append without reallocating (decode writes at
+``cache.length``; rolling sliding-window caches index by absolute position
+instead and need no margin).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer
+
+from . import sharding
+
+DECODE_MARGIN = 64
+
+
+def cache_pspecs(cfg, B: int, cache_len: int, mesh) -> Any:
+    """PartitionSpecs for a stacked cache tree: batch dim (axis 1, after the
+    layer-stack axis) over the data axes; everything else replicated."""
+    dp = sharding.data_axes(mesh)
+    caches_like = jax.eval_shape(lambda: transformer.init_caches(cfg, B, cache_len))
+
+    def one(x) -> P:
+        if dp is None or x.ndim < 2 or x.shape[1] != B or B % _size(mesh, dp):
+            return P(*(None,) * x.ndim)
+        return P(None, dp, *(None,) * (x.ndim - 2))
+
+    return jax.tree.map(one, caches_like)
+
+
+def _size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def make_serve_fns(
+    cfg,
+    mesh,
+    logical: Any,
+    batch: Optional[Any],
+    B: int,
+    T: int,
+    *,
+    params_like: Any = None,
+):
+    """Build ``(prefill_fn, decode_fn, pspecs, cspecs)``.
+
+    - ``prefill_fn(params, batch) -> (last-token logits (B, vocab), caches)``
+    - ``decode_fn(params, token (B,1), caches, position) -> (logits, caches)``
+    - ``pspecs``/``cspecs``: PartitionSpec trees for params and caches.
+
+    ``batch`` is only used for tree structure and may be ``None`` for
+    decode-only use (the dry-run's decode shapes build caches abstractly).
+    """
+    del batch  # structure comes from cfg; kept for call-site symmetry
+    if params_like is None:
+        params_like = jax.eval_shape(lambda: transformer.init_lm(jax.random.key(0), cfg)[0])
+    pspecs = sharding.param_pspecs(logical, mesh, cfg.fsdp, params_like)
+    rules = sharding.activation_rules(mesh, fsdp=cfg.fsdp)
+    capacity = T if cfg.sliding_window else T + DECODE_MARGIN
+
+    @jax.jit
+    def prefill_fn(params, batch_in):
+        with sharding.axis_rules(mesh, rules):
+            return transformer.prefill(cfg, params, batch_in, capacity=capacity)
+
+    @jax.jit
+    def decode_fn(params, token, caches, position):
+        with sharding.axis_rules(mesh, rules):
+            return transformer.decode_step(cfg, params, token, caches, position)
+
+    cspecs = cache_pspecs(cfg, B, capacity, mesh)
+    return prefill_fn, decode_fn, pspecs, cspecs

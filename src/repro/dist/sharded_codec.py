@@ -1,0 +1,198 @@
+"""Sharded wire codec: quantized gradient collectives inside shard_map.
+
+These are the per-device bodies of the compressed synchronization modes
+(paper Alg. 1 deployed as collectives).  Every function runs *inside* a
+shard_map region and sees only the local shard of the gradient:
+
+- :func:`two_phase_reduce_scatter_sharded` — phase 1 of two-phase sync:
+  quantize each of the n peer-chunks of the local tensor, exchange codes
+  all-to-all, dequantize and average.  Each peer ends with its own chunk of
+  the mean (a compressed reduce-scatter).
+- :func:`two_phase_mean` — both phases: reduce-scatter, then re-quantize the
+  mean chunk and all-gather it back (each direction ships ~bits/32 of the
+  fp32 payload).
+- :func:`faithful_ring_mean` — the Error-Compensated-QSGD-style worker
+  exchange: each peer's *full* tensor is quantized exactly once, every peer
+  decodes the same n codewords, so all peers agree bit-for-bit on the mean
+  and the per-peer quantizers stay unbiased.
+- :func:`pack_dim` / :func:`unpack_dim` — the uint32 wire format of
+  ``core.quantizers`` applied along an arbitrary axis, so code tensors can be
+  exchanged without first flattening away the peer axis.
+
+Per-chunk codebooks ride along with the codes as (levels, alpha) pairs —
+``wire_bytes`` in ``core.compressors`` accounts for them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import CompressorConfig, plan
+from repro.core.quantizers import QuantMeta, pack_codes, stochastic_encode, unpack_codes
+
+from . import compat
+
+
+# ---------------------------------------------------------------------------
+# Bit packing along an arbitrary axis
+# ---------------------------------------------------------------------------
+
+
+def pack_dim(codes: jax.Array, dim: int, bits: int) -> jax.Array:
+    """Bit-pack uint8 codes into uint32 words along axis ``dim``.
+
+    Shape change: ``n -> ceil(n/32) * bits`` on that axis; all other axes
+    are preserved (the packing is independent per lane).
+    """
+    moved = jnp.moveaxis(codes, dim, -1)
+    lead = moved.shape[:-1]
+    flat = moved.reshape(-1, moved.shape[-1])
+    words = jax.vmap(lambda row: pack_codes(row, bits))(flat)
+    return jnp.moveaxis(words.reshape(lead + (words.shape[-1],)), -1, dim)
+
+
+def unpack_dim(words: jax.Array, dim: int, bits: int, n: Optional[int] = None) -> jax.Array:
+    """Inverse of :func:`pack_dim`; ``n`` recovers a non-multiple-of-32 axis."""
+    moved = jnp.moveaxis(words, dim, -1)
+    lead = moved.shape[:-1]
+    if n is None:
+        n = (moved.shape[-1] // bits) * 32
+    flat = moved.reshape(-1, moved.shape[-1])
+    codes = jax.vmap(lambda row: unpack_codes(row, n, bits))(flat)
+    return jnp.moveaxis(codes.reshape(lead + (n,)), -1, dim)
+
+
+# ---------------------------------------------------------------------------
+# Local encode/decode helpers (flat fp32 <-> packed words + codebook)
+# ---------------------------------------------------------------------------
+
+
+def _encode_flat(cfg: CompressorConfig, flat: jax.Array, meta: QuantMeta, key: jax.Array,
+                 use_pallas: bool) -> jax.Array:
+    """Flat fp32 -> uint8 codes, via the Pallas fast path when requested."""
+    if use_pallas and cfg.method in ("qsgd", "tqsgd", "dsgd"):
+        from repro.kernels import ops as kops
+
+        return kops.uniform_encode(flat, meta.alpha, cfg.bits, key)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.codebook_encode(flat, meta.levels, key)
+    return stochastic_encode(flat, meta, key)
+
+
+def _decode_rows(words: jax.Array, levels: jax.Array, n: int, bits: int) -> jax.Array:
+    """(peers, packed_words) + (peers, s+1) codebooks -> (peers, n) fp32."""
+    codes = jax.vmap(lambda w: unpack_codes(w, n, bits))(words)
+    return jax.vmap(lambda c, lv: jnp.take(lv, c.astype(jnp.int32)))(codes, levels)
+
+
+def _plan_encode_rows(cfg: CompressorConfig, rows: jax.Array, key: jax.Array,
+                      use_pallas: bool) -> tuple[jax.Array, QuantMeta]:
+    """Per-row plan + encode + pack.  rows: (k, m) fp32 -> ((k, words), metas)."""
+    k = rows.shape[0]
+    metas = jax.vmap(lambda r: plan(cfg, r))(rows)
+    keys = jax.random.split(key, k)
+    codes = jax.vmap(lambda r, m_lv, m_a, kk: _encode_flat(
+        cfg, r, QuantMeta(levels=m_lv, alpha=m_a), kk, use_pallas))(
+        rows, metas.levels, metas.alpha, keys)
+    return pack_dim(codes, 1, cfg.bits), metas
+
+
+# ---------------------------------------------------------------------------
+# Collective codecs
+# ---------------------------------------------------------------------------
+
+
+def two_phase_reduce_scatter_sharded(
+    cfg: CompressorConfig,
+    g: jax.Array,
+    dim: int,
+    axis_name,
+    key: jax.Array,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Compressed reduce-scatter: returns this peer's chunk of the peer-mean.
+
+    The local tensor is split into n equal chunks along ``dim`` (n = size of
+    ``axis_name``); chunk j is quantized with its own codebook and shipped to
+    peer j; each peer dequantizes the n received codewords and averages.
+
+"""
+    n = compat.axis_size(axis_name)
+    if n == 1:
+        return g
+    if g.shape[dim] % n:
+        raise ValueError(f"dim {dim} of shape {g.shape} not divisible by axis size {n}")
+
+    chunk_shape = g.shape[:dim] + (g.shape[dim] // n,) + g.shape[dim + 1:]
+    parts = jnp.moveaxis(g, dim, 0).reshape(n, g.shape[dim] // n, -1)
+    flat = parts.reshape(n, -1).astype(jnp.float32)                  # (n, m)
+    m = flat.shape[1]
+
+    words, metas = _plan_encode_rows(cfg, flat, key, use_pallas)
+    recv_words = compat.all_to_all_rows(words, axis_name)            # (n, w)
+    recv_levels = compat.all_to_all_rows(metas.levels, axis_name)
+    mean_flat = jnp.mean(_decode_rows(recv_words, recv_levels, m, cfg.bits), axis=0)
+    return jnp.moveaxis(mean_flat.reshape((chunk_shape[dim],) + g.shape[:dim] + g.shape[dim + 1:]),
+                        0, dim)
+
+
+def two_phase_mean(
+    cfg: CompressorConfig,
+    g: jax.Array,
+    axis_name,
+    key: jax.Array,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Full two-phase compressed mean: reduce-scatter then all-gather.
+
+    Both phases move quantized chunks, so per-device wire cost is
+    ~2 · bits/32 of the fp32 all-reduce (see ``collectives.wire_bytes_per_device``).
+    """
+    n = compat.axis_size(axis_name)
+    if n == 1:
+        return g
+    k1, k2 = jax.random.split(key)
+
+    flat = g.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % n
+    padded = jnp.pad(flat, (0, pad))
+    chunk = two_phase_reduce_scatter_sharded(cfg, padded, 0, axis_name, k1, use_pallas)
+
+    # Phase 2: broadcast this peer's mean chunk, freshly quantized.
+    meta2 = plan(cfg, chunk)
+    codes2 = _encode_flat(cfg, chunk, meta2, k2, use_pallas)
+    words2 = pack_codes(codes2, cfg.bits)
+    all_words = compat.all_gather_stacked(words2, axis_name)             # (n, w)
+    all_levels = compat.all_gather_stacked(meta2.levels, axis_name)
+    full = _decode_rows(all_words, all_levels, chunk.size, cfg.bits).reshape(-1)
+    return full[: flat.size].reshape(g.shape).astype(g.dtype)
+
+
+def faithful_ring_mean(
+    cfg: CompressorConfig,
+    g: jax.Array,
+    axis_name,
+    key: jax.Array,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Unbiased ring mean: each peer's full tensor is quantized exactly once.
+
+    All peers decode the same n codewords, so the result is bitwise identical
+    everywhere and E[result] is the true mean of the peers' local tensors
+    (the quantizer is unbiased per element, per peer).
+    """
+    n = compat.axis_size(axis_name)
+    flat = g.reshape(-1).astype(jnp.float32)
+    meta = plan(cfg, flat)
+    codes = _encode_flat(cfg, flat, meta, key, use_pallas)
+    if n == 1:
+        return jnp.take(meta.levels, codes.astype(jnp.int32)).reshape(g.shape).astype(g.dtype)
+    words = pack_codes(codes, cfg.bits)
+    all_words = compat.all_gather_stacked(words, axis_name)              # (n, w)
+    all_levels = compat.all_gather_stacked(meta.levels, axis_name)
+    vals = _decode_rows(all_words, all_levels, flat.size, cfg.bits)      # (n, m)
+    return jnp.mean(vals, axis=0).reshape(g.shape).astype(g.dtype)

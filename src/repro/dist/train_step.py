@@ -1,0 +1,325 @@
+"""Distributed train step: GSPMD fwd/bwd + fully-manual compressed grad sync.
+
+``make_train_step`` builds one jitted step function over an arbitrary
+(data[, model][, pod]) mesh.  The step has two regions:
+
+1. **Auto (GSPMD) region** — the global batch is split into one *client* per
+   data shard and per-client loss/grads are computed with ``vmap`` (params
+   broadcast, batch mapped).  The stacked client axis is sharded over the
+   data/pod mesh axes, so each device computes and holds exactly its own
+   worker's gradient — the DSGD worker model, with tensor/expert parallelism
+   and fsdp parameter sharding left to the partitioner.
+2. **Manual (shard_map) region** — the stacked gradients enter a fully
+   manual shard_map (every mesh axis manual; the pinned toolchain cannot mix
+   manual data axes with auto model axes around ``lax.scan``) where the
+   selected mode averages clients with real collectives:
+
+   ======================  ====================================================
+   ``dsgd``                exact fp32 ``pmean`` (the uncompressed baseline)
+   ``two_phase``           compressed reduce-scatter + compressed all-gather
+   ``hierarchical``        two-phase inside each pod, then a faithful
+                           quantized exchange of pod-means across ``pod``
+   ``faithful``            ring mean — each peer's tensor quantized once,
+                           unbiased across peers (Wu et al., 1806.08054)
+   ======================  ====================================================
+
+   Gradients arrive model-sharded, so each (data, model) shard quantizes its
+   own slice and the collectives only cross the data/pod axes.
+
+The optimizer update then runs back in the auto region on sharded
+params/state.  ``streamed=True`` swaps the one-shot ``value_and_grad`` for a
+layer-streamed schedule: a forward scan that saves per-unit activations and
+a reverse scan of per-unit VJPs, so at most one scan unit's backward graph
+is live at a time.  It is numerically equivalent to the plain schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.compressors import CompressorConfig
+from repro.models import transformer
+from repro.optim.optimizers import Optimizer
+
+from . import compat, sharded_codec as sc, sharding
+
+SYNC_MODES = ("dsgd", "two_phase", "hierarchical", "faithful")
+
+_KEY_SEED = 0x5EED
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    sync: str = "dsgd"
+    streamed: bool = False
+    compressor: CompressorConfig = dataclasses.field(default_factory=CompressorConfig)
+
+    def __post_init__(self):
+        if self.sync not in SYNC_MODES:
+            raise ValueError(f"unknown sync mode {self.sync!r}; expected one of {SYNC_MODES}")
+
+
+# ---------------------------------------------------------------------------
+# Spec derivation helpers (shared with the launch/dryrun tooling)
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch_like: Any, dp) -> Any:
+    """PartitionSpecs for a ``models.transformer.Batch``: batch dim over ``dp``."""
+
+    def for_field(x, batch_dim: int):
+        if x is None:
+            return None
+        return P(*(dp if d == batch_dim else None for d in range(x.ndim)))
+
+    b = batch_like
+    return transformer.Batch(
+        tokens=for_field(b.tokens, 0),
+        labels=for_field(b.labels, 0),
+        positions=for_field(b.positions, 1 if (b.positions is not None and b.positions.ndim == 3) else 0),
+        patches=for_field(b.patches, 0),
+        frames=for_field(b.frames, 0),
+    )
+
+
+def _opt_specs(opt_state_like: Any, pspec_leaves: list) -> Any:
+    """Optimizer-state specs: state trees mirror the param tree leaf-for-leaf
+    (momentum: one mirror; AdamW: two), so specs repeat cyclically."""
+    leaves, treedef = jax.tree.flatten(opt_state_like)
+    n = len(pspec_leaves)
+    if n == 0 or len(leaves) % n:
+        return jax.tree.unflatten(treedef, [P() for _ in leaves])
+    return jax.tree.unflatten(treedef, [pspec_leaves[i % n] for i in range(len(leaves))])
+
+
+def _tree_map_with_specs(fn, tree: Any, spec_tree: Any) -> Any:
+    leaves, treedef = jax.tree.flatten(tree)
+    specs = jax.tree.leaves(spec_tree, is_leaf=lambda s: isinstance(s, P))
+    return jax.tree.unflatten(treedef, [fn(x, s) for x, s in zip(leaves, specs)])
+
+
+def _auto_only_entries(spec: P, mesh) -> tuple:
+    """Spec entries with the manual (data/pod) axes removed — the stacked
+    per-client gradients keep only their model-parallel sharding."""
+    manual = set(sharding.manual_axes(mesh))
+    entries = []
+    for e in spec:
+        axes = e if isinstance(e, tuple) else (e,) if e is not None else ()
+        kept = tuple(a for a in axes if a not in manual)
+        entries.append(kept[0] if len(kept) == 1 else (kept if kept else None))
+    return tuple(entries)
+
+
+# ---------------------------------------------------------------------------
+# Gradient synchronization (runs inside a fully manual shard_map)
+# ---------------------------------------------------------------------------
+
+
+def _sync_leaf(ts: TrainStepConfig, g: jax.Array, key: jax.Array, dp: tuple) -> jax.Array:
+    if ts.sync == "dsgd" or ts.compressor.method == "dsgd":
+        return jax.lax.pmean(g, dp)
+    cfg = ts.compressor
+    if ts.sync == "faithful":
+        return sc.faithful_ring_mean(cfg, g, dp, key, cfg.use_pallas)
+    if ts.sync == "two_phase" or len(dp) == 1:
+        return sc.two_phase_mean(cfg, g, dp, key, cfg.use_pallas)
+    # hierarchical: compress within the innermost data axis, then exchange
+    # pod-level means across the leading pod axes with a fresh quantization.
+    pod_axes, data_axis = dp[:-1], dp[-1:]
+    k1, k2 = jax.random.split(key)
+    g = sc.two_phase_mean(cfg, g, data_axis, k1, cfg.use_pallas)
+    return sc.faithful_ring_mean(cfg, g, pod_axes, k2, cfg.use_pallas)
+
+
+def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
+    """Fully-manual shard_map averaging stacked per-client grads.
+
+    Input leaves are (n_dp, *param_shape), client axis over the data/pod
+    axes; output leaves are the synced mean with the param's model sharding,
+    replicated over data/pod (every mode leaves all peers with identical
+    bytes, so the unchecked replication in ``out_specs`` is sound).
+    """
+    dp = sharding.manual_axes(mesh)
+
+    def in_spec(x, spec):
+        return P(dp, *_auto_only_entries(spec, mesh))
+
+    def out_spec(x, spec):
+        return P(*_auto_only_entries(spec, mesh))
+
+    g_in = _tree_map_with_specs(in_spec, grads_like, pspecs)
+    g_out = _tree_map_with_specs(out_spec, grads_like, pspecs)
+
+    def sync(stacked, key):
+        leaves, treedef = jax.tree.flatten(stacked)
+        out = [_sync_leaf(ts, g[0], jax.random.fold_in(key, i), dp)
+               for i, g in enumerate(leaves)]
+        return jax.tree.unflatten(treedef, out)
+
+    return compat.shard_map(
+        sync, mesh=mesh, in_specs=(g_in, P()), out_specs=g_out,
+        axis_names=set(mesh.axis_names), check_vma=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streamed (per-unit) backward schedule
+# ---------------------------------------------------------------------------
+
+
+def _streamed_loss_and_grads(cfg, full_params, batch):
+    """Layer-streamed loss + grads: forward scan saving unit inputs, reverse
+    scan of per-unit VJPs.  Same math as ``grad(loss_fn)``, but only one
+    unit's backward graph is live at a time."""
+    outer = transformer.outer_params(full_params)
+    positions = transformer._positions_for(cfg, batch)
+
+    h0, embed_vjp = jax.vjp(lambda o: transformer.embed_fn(cfg, o, batch), outer)
+
+    def fwd(h, p_u):
+        h2, aux = transformer.unit_fn(cfg, p_u, h, positions)
+        return h2, (h, aux)
+
+    h_final, (h_ins, auxs) = jax.lax.scan(fwd, h0, full_params["blocks"])
+    aux_total = jnp.sum(auxs)
+
+    xent, head_vjp = jax.vjp(lambda o, h: transformer.head_fn(cfg, o, h, batch), outer, h_final)
+    loss = xent + transformer.AUX_LOSS_WEIGHT * aux_total
+    g_outer_head, g_h = head_vjp(jnp.float32(1.0))
+
+    def bwd(g_h_c, inp):
+        p_u, h_in = inp
+        _, unit_vjp = jax.vjp(lambda p, h: transformer.unit_fn(cfg, p, h, positions), p_u, h_in)
+        g_p, g_h_in = unit_vjp((g_h_c, jnp.float32(transformer.AUX_LOSS_WEIGHT)))
+        return g_h_in, g_p
+
+    g_h0, g_blocks = jax.lax.scan(bwd, g_h, (full_params["blocks"], h_ins), reverse=True)
+    (g_outer_embed,) = embed_vjp(g_h0)
+    g_outer = jax.tree.map(jnp.add, g_outer_head, g_outer_embed)
+    grads = dict(g_outer)
+    grads["blocks"] = g_blocks
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# make_train_step
+# ---------------------------------------------------------------------------
+
+
+def _client_batch(batch: Any, n_clients: int) -> tuple[Any, Any]:
+    """Split the global batch into per-client slices + the vmap in_axes."""
+
+    def split(x, batch_dim: int):
+        if x is None:
+            return None
+        b = x.shape[batch_dim]
+        return x.reshape(x.shape[:batch_dim] + (n_clients, b // n_clients) + x.shape[batch_dim + 1:])
+
+    pos_dim = 1 if (batch.positions is not None and batch.positions.ndim == 3) else 0
+    split_batch = transformer.Batch(
+        tokens=split(batch.tokens, 0),
+        labels=split(batch.labels, 0),
+        positions=split(batch.positions, pos_dim),
+        patches=split(batch.patches, 0),
+        frames=split(batch.frames, 0),
+    )
+    axes = transformer.Batch(
+        tokens=0, labels=0,
+        positions=(pos_dim if batch.positions is not None else None),
+        patches=0 if batch.patches is not None else None,
+        frames=0 if batch.frames is not None else None,
+    )
+    return split_batch, axes
+
+
+def make_train_step(
+    cfg,
+    mesh,
+    logical: Any,
+    opt: Optimizer,
+    ts: TrainStepConfig,
+    batch: Any,
+    opt_state_like: Any = None,
+    params_like: Any = None,
+):
+    """Build ``(step_fn, pspecs)`` for one training configuration.
+
+    ``step_fn(params, opt_state, batch, step) -> (params, opt_state, metrics)``
+    with ``metrics = {"loss": (n_dp,), "gnorm": (n_dp,)}`` (global values,
+    replicated per data shard).  ``pspecs`` is the parameter PartitionSpec
+    tree the caller uses for ``device_put``.
+    """
+    if params_like is None:
+        params_like = jax.eval_shape(lambda: transformer.init_lm(jax.random.key(0), cfg)[0])
+    if opt_state_like is None:
+        opt_state_like = jax.eval_shape(opt.init, params_like)
+
+    pspecs = sharding.param_pspecs(logical, mesh, cfg.fsdp, params_like)
+    dp = sharding.manual_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    B = batch.tokens.shape[0]
+    if dp and B % n_dp:
+        raise ValueError(
+            f"global batch {B} must be divisible by the {n_dp} data shards of mesh "
+            f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    n_clients = n_dp if dp else 1
+
+    rules = sharding.activation_rules(mesh, manual_data=True)
+    pspec_leaves = jax.tree.leaves(pspecs, is_leaf=lambda s: isinstance(s, P))
+    o_specs = _opt_specs(opt_state_like, pspec_leaves)
+    grads_like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n_clients,) + x.shape, jnp.float32), params_like)
+    sync_fn = _make_sync_fn(ts, mesh, pspecs, grads_like) if dp else None
+    streamed = ts.streamed and not cfg.enc_dec
+
+    def constrain(tree, spec_tree):
+        return _tree_map_with_specs(
+            lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
+            tree, spec_tree)
+
+    def constrain_client_grads(grads):
+        # One client per data shard on axis 0; keep each leaf's model-parallel
+        # sharding (same entries the sync shard_map's in_specs use) so the
+        # codec quantizes model-local slices without a pre-sync all-gather.
+        def one(g, spec):
+            entries = _auto_only_entries(spec, mesh)
+            return jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, P(dp if dp else None, *entries)))
+
+        return _tree_map_with_specs(one, grads, pspecs)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch_g, step):
+        with sharding.axis_rules(mesh, rules):
+            cbatch, caxes = _client_batch(batch_g, n_clients)
+
+            def one_client(p, b):
+                if streamed:
+                    return _streamed_loss_and_grads(cfg, p, b)
+                return jax.value_and_grad(lambda q: transformer.loss_fn(cfg, q, b))(p)
+
+            losses, grads = jax.vmap(one_client, in_axes=(None, caxes))(params, cbatch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            # pin one client per data shard before the manual sync region
+            grads = constrain_client_grads(grads)
+            key = jax.random.fold_in(jax.random.key(_KEY_SEED), step)
+            if sync_fn is not None:
+                g_mean = sync_fn(grads, key)
+            else:
+                g_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g_mean)))
+            new_params, new_opt = opt.update(params, g_mean, opt_state, step)
+            new_params = constrain(new_params, pspecs)
+            new_opt = constrain(new_opt, o_specs)
+        loss = jnp.mean(losses)
+        metrics = {"loss": jnp.full((max(n_dp, 1),), loss, jnp.float32),
+                   "gnorm": jnp.full((max(n_dp, 1),), gnorm, jnp.float32)}
+        return new_params, new_opt, metrics
+
+    return step_fn, pspecs

@@ -48,7 +48,7 @@ def uniform_encode_2d(
         functools.partial(_uniform_encode_kernel, s=s),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY if False else None),  # alpha: full (1,) operand
+            pl.BlockSpec(memory_space=None),       # alpha: full (1,) operand
             pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
             pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
         ],

@@ -146,14 +146,38 @@ class HloModule:
 
     # -- instruction costing -------------------------------------------------
 
+    @staticmethod
+    def _operand_list(args: str) -> str:
+        """Operand sublist of an instruction line (drop attrs/metadata)."""
+        return args.split(")", 1)[0]
+
+    def _lhs_dims(self, args: str, symbols: Dict[str, str]) -> list:
+        """Dims of the first (lhs) operand.
+
+        Newer HLO text carries inline operand types ("f32[64,128]{1,0} %x");
+        older text has bare names resolved through the symbol table.
+        """
+        operands = self._operand_list(args)
+        if _SHAPE.match(operands.strip()):
+            return _shape_dims(operands)
+        lhs_name = operands.split(",")[0].strip().lstrip("%")
+        return _shape_dims(symbols.get(lhs_name, ""))
+
+    def _operand_bytes(self, args: str, symbols: Dict[str, str]) -> int:
+        operands = self._operand_list(args)
+        if _SHAPE.search(operands):
+            return _shape_elems_bytes(operands)[1]
+        return sum(
+            _shape_elems_bytes(symbols.get(a.strip().lstrip("%"), ""))[1]
+            for a in operands.split(",")
+        )
+
     def _dot_flops(self, line: str, ty: str, args: str, symbols: Dict[str, str]) -> float:
         out_elems, _ = _shape_elems_bytes(ty)
         m = _LHS_CDIMS.search(line)
         contracted = 1
         if m:
-            lhs_name = args.split(",")[0].strip().lstrip("%")
-            lhs_ty = symbols.get(lhs_name, "")
-            dims = _shape_dims(lhs_ty)
+            dims = self._lhs_dims(args, symbols)
             for idx in m.group(1).split(","):
                 if idx and dims and int(idx) < len(dims):
                     contracted *= dims[int(idx)]
@@ -211,12 +235,7 @@ class HloModule:
                 if cm:
                     total.add(self.cost_of(cm.group(1)))
                 # boundary bytes: operands + output
-                opb = 0
-                for a in args.split(","):
-                    a = a.strip().lstrip("%")
-                    if a in symbols:
-                        opb += _shape_elems_bytes(symbols[a])[1]
-                total.bytes += out_bytes + opb
+                total.bytes += out_bytes + self._operand_bytes(args, symbols)
                 continue
             if op == "conditional":
                 for cm in re.findall(r"branch_computations=\{([^}]*)\}", line):
@@ -230,11 +249,7 @@ class HloModule:
                 continue
             if op == "dot":
                 total.flops += self._dot_flops(line, ty, args, symbols)
-                opb = sum(
-                    _shape_elems_bytes(symbols.get(a.strip().lstrip("%"), ""))[1]
-                    for a in args.split(",")
-                )
-                total.bytes += out_bytes + opb
+                total.bytes += out_bytes + self._operand_bytes(args, symbols)
                 continue
             if op == "convolution":
                 # depthwise/short convs only in this codebase; approximate

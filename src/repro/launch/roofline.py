@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Optional
 
 from .mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
 

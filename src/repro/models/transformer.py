@@ -15,7 +15,6 @@ Design:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -34,7 +33,7 @@ from .attention import (
 from .layers import apply_norm, dense_init, mlp_apply, mlp_init, norm_init
 from .moe import dense_moe_apply, moe_apply, moe_init
 from .rope import sincos_embedding
-from .ssm import SSMState, init_ssm_state, ssm_decode, ssm_forward, ssm_init
+from .ssm import init_ssm_state, ssm_decode, ssm_forward, ssm_init
 
 AUX_LOSS_WEIGHT = 0.01
 

@@ -6,7 +6,6 @@ pytree, so FSDP-sharded params get FSDP-sharded optimizer state for free.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -1,0 +1,54 @@
+"""Install the repro JAX compatibility shims as soon as ``jax`` is imported.
+
+The distributed tests (and user code following them) use the modern JAX
+surface — ``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.shard_map`` — *before* importing any ``repro`` module, so the shims in
+:mod:`repro.dist.compat` must be live by the time ``import jax`` returns.
+Because this file sits next to the ``repro`` package on ``PYTHONPATH``,
+Python's ``site`` machinery imports it at interpreter startup; it registers a
+one-shot meta-path hook that runs the shim installer immediately after the
+real ``jax`` module executes.  On JAX versions that already provide the
+modern names the installer is a no-op.
+"""
+import importlib.abc
+import importlib.util
+import pathlib
+import sys
+
+
+def _install_shims():
+    # Load compat.py directly by path: importing ``repro.dist.compat`` through
+    # the package would run ``repro.dist.__init__`` (and transitively
+    # ``repro.core``), which may be the very import that triggered jax — the
+    # direct load keeps the hook cycle-free.  The installers are idempotent,
+    # so the later regular import of repro.dist.compat is harmless.
+    path = pathlib.Path(__file__).resolve().parent / "repro" / "dist" / "compat.py"
+    spec = importlib.util.spec_from_file_location("_repro_jax_compat_bootstrap", path)
+    module = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(module)
+
+
+class _ShimLoader(importlib.abc.Loader):
+    def __init__(self, inner):
+        self._inner = inner
+
+    def create_module(self, spec):
+        return self._inner.create_module(spec)
+
+    def exec_module(self, module):
+        self._inner.exec_module(module)
+        _install_shims()
+
+
+class _JaxShimFinder(importlib.abc.MetaPathFinder):
+    def find_spec(self, name, path=None, target=None):
+        if name != "jax":
+            return None
+        sys.meta_path.remove(self)  # one-shot; avoid recursing into find_spec
+        spec = importlib.util.find_spec("jax")
+        if spec is not None and spec.loader is not None:
+            spec.loader = _ShimLoader(spec.loader)
+        return spec
+
+
+sys.meta_path.insert(0, _JaxShimFinder())

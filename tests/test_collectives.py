@@ -1,0 +1,60 @@
+"""Pin the analytic wire accounting of ``repro.dist.collectives``.
+
+The benchmark prints these numbers; the tests make them load-bearing:
+dsgd is the fp32 ring chunk, compressed modes follow the
+``core.compressors.wire_bytes`` chunking, costs are monotone in bits, and
+every compressed mode beats fp32 at every supported bit-width.
+"""
+import pytest
+
+from repro.core.compressors import CompressorConfig, wire_bytes
+from repro.dist.collectives import MODES, wire_bytes_per_device
+
+N = 1_000_000
+SHARDS = 16
+
+
+def test_dsgd_is_fp32_chunk():
+    cfg = CompressorConfig(method="dsgd")
+    assert wire_bytes_per_device(cfg, N, SHARDS, "dsgd") == pytest.approx(4.0 * N / SHARDS)
+    # a dsgd-method compressor is uncompressed regardless of the sync mode
+    for mode in MODES:
+        assert wire_bytes_per_device(cfg, N, SHARDS, mode) == pytest.approx(4.0 * N / SHARDS)
+
+
+def test_two_phase_matches_wire_bytes_chunking():
+    for bits in (2, 3, 4, 8):
+        cfg = CompressorConfig(method="tnqsgd", bits=bits)
+        chunk = -(-N // SHARDS)
+        assert wire_bytes_per_device(cfg, N, SHARDS, "two_phase") == pytest.approx(
+            wire_bytes(cfg, chunk))
+
+
+def test_faithful_is_sharded_full_tensor():
+    for bits in (2, 3, 4, 8):
+        cfg = CompressorConfig(method="tnqsgd", bits=bits)
+        assert wire_bytes_per_device(cfg, N, SHARDS, "faithful") == pytest.approx(
+            wire_bytes(cfg, N) / SHARDS)
+
+
+def test_monotone_in_bits():
+    for mode in ("two_phase", "faithful", "hierarchical"):
+        costs = [wire_bytes_per_device(CompressorConfig(method="tnqsgd", bits=b), N, SHARDS, mode)
+                 for b in range(1, 9)]
+        assert costs == sorted(costs), (mode, costs)
+
+
+def test_compressed_beats_fp32_at_all_bit_widths():
+    fp32 = wire_bytes_per_device(CompressorConfig(method="dsgd"), N, SHARDS, "dsgd")
+    for bits in (2, 3, 4, 8):
+        cfg = CompressorConfig(method="tnqsgd", bits=bits)
+        for mode in ("two_phase", "faithful", "hierarchical"):
+            assert fp32 / wire_bytes_per_device(cfg, N, SHARDS, mode) > 1.0, (mode, bits)
+
+
+def test_rejects_bad_inputs():
+    cfg = CompressorConfig(method="tnqsgd", bits=4)
+    with pytest.raises(ValueError):
+        wire_bytes_per_device(cfg, N, SHARDS, "ring")
+    with pytest.raises(ValueError):
+        wire_bytes_per_device(cfg, N, 0, "faithful")

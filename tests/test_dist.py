@@ -1,6 +1,5 @@
 """Distributed-runtime tests.  Multi-device cases run in subprocesses so the
 main pytest process keeps a single CPU device (dry-run contract)."""
-import json
 import os
 import pathlib
 import subprocess

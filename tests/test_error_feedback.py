@@ -1,7 +1,6 @@
 """Error-feedback extension: residual re-injection cancels truncation bias."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import CompressorConfig, sample_power_law
 from repro.core.error_feedback import compress_with_feedback, init_error

@@ -1,7 +1,6 @@
 """Trip-count-aware HLO cost analysis: validated against analytic FLOPs."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.hlo_analysis import analyze
 

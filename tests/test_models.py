@@ -6,10 +6,10 @@ import pytest
 
 from repro.configs import ARCHS, get_config, reduced
 from repro.data.synthetic import lm_batch, make_mrope_positions
-from repro.models import Batch, decode_step, init_caches, init_lm, loss_fn, prefill
+from repro.models import Batch, decode_step, init_lm, loss_fn, prefill
 from repro.models.moe import dense_moe_apply, moe_apply, moe_init
 from repro.models.ssm import naive_recurrence, ssd_chunked
-from repro.models.transformer import backbone, embed_fn, head_fn, outer_params, unit_fn
+from repro.models.transformer import embed_fn, head_fn, outer_params, unit_fn
 from repro.models.attention import flash_attention
 
 

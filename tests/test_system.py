@@ -3,7 +3,6 @@ system (Alg. 1) — loss decreases under every compressor at b=3, and the
 paper's headline ordering holds on a small real model."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
