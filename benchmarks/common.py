@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import CompressorConfig, compress_decompress
+from repro.core.error_feedback import compress_with_feedback, init_error
 from repro.data.synthetic import client_batches, make_templates, shapes_batch
 from repro.models.smallnet import accuracy, init_smallnet, smallnet_loss
 from repro.optim.optimizers import momentum_sgd
@@ -33,9 +34,12 @@ def train_clients(
     weight_decay: float = 5e-4,
     seed: int = 0,
     eval_batch: int = 2048,
+    error_feedback: bool = False,
 ):
     """Paper §V setting: N=8 clients, momentum SGD (0.01/0.9/5e-4), per-layer
-    compression of conv and fc groups.  Returns (accuracy, loss_history)."""
+    compression of conv and fc groups.  ``error_feedback`` carries one EF
+    residual tree per client (``core.error_feedback`` semantics).
+    Returns (accuracy, loss_history)."""
     templates = make_templates(jax.random.key(42))
     params = init_smallnet(jax.random.key(seed))
     opt = momentum_sgd(lr=lr, momentum=momentum, weight_decay=weight_decay)
@@ -43,30 +47,35 @@ def train_clients(
     ccfg = CompressorConfig(method=method, bits=bits)
 
     @jax.jit
-    def round_step(p, s, i):
+    def round_step(p, s, errs, i):
         imgs, labels = client_batches(templates, i, n_clients, batch)
 
-        def one_client(c):
+        def one_client(c, e):
             loss, g = jax.value_and_grad(smallnet_loss)(p, imgs[c], labels[c])
             if method != "dsgd":
                 key = jax.random.fold_in(jax.random.key(7), i * n_clients + c)
-                leaves, treedef = jax.tree.flatten(g)
-                enc = [
-                    compress_decompress(ccfg, leaf, jax.random.fold_in(key, j))
-                    for j, leaf in enumerate(leaves)
-                ]
-                g = jax.tree.unflatten(treedef, enc)
-            return loss, g
+                if error_feedback:
+                    g, e = compress_with_feedback(ccfg, g, e, key)
+                else:
+                    leaves, treedef = jax.tree.flatten(g)
+                    enc = [
+                        compress_decompress(ccfg, leaf, jax.random.fold_in(key, j))
+                        for j, leaf in enumerate(leaves)
+                    ]
+                    g = jax.tree.unflatten(treedef, enc)
+            return loss, g, e
 
-        losses, grads = zip(*[one_client(jnp.uint32(c)) for c in range(n_clients)])
+        losses, grads, new_errs = zip(
+            *[one_client(jnp.uint32(c), e) for c, e in enumerate(errs)])
         gmean = jax.tree.map(lambda *gs: sum(gs) / n_clients, *grads)
         p, s = opt.update(p, gmean, s, i)
-        return p, s, sum(losses) / n_clients
+        return p, s, list(new_errs), sum(losses) / n_clients
 
     hist = []
     p, s = params, state
+    errs = [init_error(params) for _ in range(n_clients)]
     for i in range(rounds):
-        p, s, l = round_step(p, s, jnp.uint32(i))
+        p, s, errs, l = round_step(p, s, errs, jnp.uint32(i))
         hist.append(float(l))
     imgs, labels = shapes_batch(templates, jnp.uint32(10_000), eval_batch)
     acc = float(accuracy(p, imgs, labels))

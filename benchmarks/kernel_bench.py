@@ -32,6 +32,17 @@ def main(quick: bool = False):
     us = time_us(f_ref, g2, repeats=5)
     rows.append(f"kernels,ref_uniform_encode_{n},{us:.0f},{n*4/us/1e3:.2f}")
 
+    # fused encode->bit-pack vs encode + separate pack_codes pass
+    from repro.core.quantizers import pack_codes
+
+    f_fused = jax.jit(lambda g: ops.uniform_encode_packed(g, alpha, 3, key)[0])
+    us = time_us(f_fused, g, repeats=5)
+    rows.append(f"kernels,pallas_uniform_encode_packed_{n},{us:.0f},{n*4/us/1e3:.2f}")
+
+    f_twopass = jax.jit(lambda g: pack_codes(ops.uniform_encode(g, alpha, 3, key), 3))
+    us = time_us(f_twopass, g, repeats=5)
+    rows.append(f"kernels,encode_then_pack_{n},{us:.0f},{n*4/us/1e3:.2f}")
+
     f_kern2 = jax.jit(lambda g: ops.codebook_encode(g, levels, key))
     us = time_us(f_kern2, g, repeats=5)
     rows.append(f"kernels,pallas_codebook_encode_{n},{us:.0f},{n*4/us/1e3:.2f}")

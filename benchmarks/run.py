@@ -1,13 +1,17 @@
 """Benchmark harness: one module per paper figure/table.
 
-Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` uses the paper-scale
-round counts (slow on CPU); the default quick mode (also spelled ``--quick``,
-the flag CI passes) validates the orderings.
+Prints ``name,us_per_call,derived`` CSV rows and writes the same numbers as
+machine-readable JSON (``BENCH_core.json`` by default, ``--json PATH`` to
+move it, ``--json ""`` to disable) so CI can archive the perf trajectory.
+``--full`` uses the paper-scale round counts (slow on CPU); the default
+quick mode (also spelled ``--quick``, the flag CI passes) validates the
+orderings.
 
 Runs both as ``python -m benchmarks.run`` and as ``python benchmarks/run.py``
 (the script form bootstraps the repo root + ``src`` onto ``sys.path``).
 """
 import argparse
+import json
 import pathlib
 import sys
 import time
@@ -25,6 +29,8 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="quick mode (the default; ignored with --full)")
     ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument("--json", default="BENCH_core.json", dest="json_path",
+                    help="machine-readable output path (empty string disables)")
     args = ap.parse_args(argv)
     quick = not args.full
 
@@ -45,6 +51,7 @@ def main(argv=None) -> int:
         suites = {k: v for k, v in suites.items() if k in keep}
 
     print("name,us_per_call,derived")
+    report: dict = {"mode": "full" if args.full else "quick", "suites": {}}
     for name, fn in suites.items():
         t0 = time.perf_counter()
         try:
@@ -52,9 +59,28 @@ def main(argv=None) -> int:
         except Exception as e:  # pragma: no cover
             print(f"{name},ERROR,0,{type(e).__name__}:{e}", flush=True)
             raise
+        cases = {}
         for r in rows:
             print(r, flush=True)
-        print(f"{name}__total,{(time.perf_counter()-t0)*1e6:.0f},", flush=True)
+            parts = r.split(",")
+            if len(parts) >= 3:
+                case = parts[1]
+                try:
+                    us = float(parts[2])
+                except ValueError:
+                    us = None
+                cases[case] = {"us_per_call": us}
+                if len(parts) > 3 and parts[3]:
+                    try:
+                        cases[case]["derived"] = float(parts[3])
+                    except ValueError:
+                        cases[case]["derived"] = parts[3]
+        total_us = (time.perf_counter() - t0) * 1e6
+        print(f"{name}__total,{total_us:.0f},", flush=True)
+        report["suites"][name] = {"us_total": round(total_us), "cases": cases}
+    if args.json_path:
+        pathlib.Path(args.json_path).write_text(json.dumps(report, indent=2) + "\n")
+        print(f"wrote {args.json_path}", file=sys.stderr)
     return 0
 
 

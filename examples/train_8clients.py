@@ -22,10 +22,14 @@ def main():
     ap.add_argument("--bits", type=int, default=3)
     ap.add_argument("--rounds", type=int, default=120)
     ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--ef", action="store_true",
+                    help="error feedback: compensate truncation bias with the client residual")
     args = ap.parse_args()
-    acc, hist = train_clients(args.method, args.bits, rounds=args.rounds, n_clients=args.clients)
+    acc, hist = train_clients(args.method, args.bits, rounds=args.rounds,
+                              n_clients=args.clients, error_feedback=args.ef)
+    tag = f"{args.method}+ef" if args.ef else args.method
     print(f"loss: {hist[0]:.3f} -> {hist[-1]:.3f} over {args.rounds} rounds")
-    print(f"test accuracy ({args.method}, b={args.bits}, N={args.clients}): {acc:.4f}")
+    print(f"test accuracy ({tag}, b={args.bits}, N={args.clients}): {acc:.4f}")
 
 
 if __name__ == "__main__":

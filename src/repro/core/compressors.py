@@ -134,7 +134,14 @@ def compress_decompress(cfg: CompressorConfig, g: jax.Array, key: jax.Array) -> 
 
 
 def wire_bytes(cfg: CompressorConfig, n_elements: int) -> int:
-    """Bytes on the wire for one tensor of ``n_elements`` (payload + meta)."""
+    """Bytes on the wire for one tensor of ``n_elements`` (payload + meta).
+
+    This is the single source of truth for wire accounting (used by
+    ``dist.collectives.wire_bytes_per_device`` and the benchmarks): packed
+    payload of ``bits``/element rounded up to uint32 groups, plus the
+    codebook metadata — ``s+1`` fp32 levels and the fp32 alpha, ``s+2``
+    words total.
+    """
     if cfg.method == "dsgd":
         return 4 * n_elements
     from .quantizers import packed_size
@@ -142,6 +149,79 @@ def wire_bytes(cfg: CompressorConfig, n_elements: int) -> int:
     payload = 4 * packed_size(n_elements, cfg.bits) if cfg.pack else n_elements
     meta = 4 * (cfg.s + 2)
     return payload + meta
+
+
+def wire_bits_per_element(cfg: CompressorConfig, n_elements: int) -> float:
+    """Effective wire bits per element, metadata included (8·wire_bytes/n)."""
+    return 8.0 * wire_bytes(cfg, n_elements) / max(n_elements, 1)
+
+
+# ---------------------------------------------------------------------------
+# Bucket planner: DDP-style coalescing of a gradient pytree into a few large
+# flat fp32 buckets.  One codebook (``plan``) per bucket amortizes the
+# statistics pass and lets the distributed codec issue one collective per
+# bucket (or per bucket *list*) instead of one per tensor.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static coalescing plan over a flattened leaf list.
+
+    Bucket ``b`` holds the consecutive leaves ``ranges[b][0]:ranges[b][1]``
+    (traversal order — adjacent leaves usually share scale, which keeps the
+    per-bucket codebook tight) and has ``sizes[b]`` total elements.
+    """
+
+    ranges: tuple[tuple[int, int], ...]
+    sizes: tuple[int, ...]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.ranges)
+
+
+def plan_buckets(leaf_sizes: list[int], target_elements: int) -> BucketPlan:
+    """Greedy size-targeted coalescing: pack consecutive leaves until the
+    next one would push the bucket past ``target_elements``.  A single leaf
+    larger than the target gets its own bucket."""
+    if not leaf_sizes:
+        return BucketPlan((), ())
+    target = max(int(target_elements), 1)
+    ranges, sizes = [], []
+    start, acc = 0, 0
+    for i, sz in enumerate(leaf_sizes):
+        if acc and acc + sz > target:
+            ranges.append((start, i))
+            sizes.append(acc)
+            start, acc = i, 0
+        acc += sz
+    ranges.append((start, len(leaf_sizes)))
+    sizes.append(acc)
+    return BucketPlan(tuple(ranges), tuple(sizes))
+
+
+def bucket_concat(leaves: list, bp: BucketPlan) -> list:
+    """Flatten + concatenate leaves into the plan's fp32 buckets."""
+    return [
+        jnp.concatenate([leaves[i].reshape(-1).astype(jnp.float32) for i in range(a, b)])
+        if b - a > 1 else leaves[a].reshape(-1).astype(jnp.float32)
+        for (a, b) in bp.ranges
+    ]
+
+
+def bucket_split(buckets: list, bp: BucketPlan, shapes: list) -> list:
+    """Inverse of :func:`bucket_concat`: slice buckets back into shaped leaves."""
+    out = []
+    for (a, b), flat in zip(bp.ranges, buckets):
+        off = 0
+        for i in range(a, b):
+            n = 1
+            for d in shapes[i]:
+                n *= d
+            out.append(flat[off:off + n].reshape(shapes[i]))
+            off += n
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -146,9 +146,7 @@ def unpack_codes(words: jax.Array, n: int, bits: int) -> jax.Array:
     codes = jnp.sum(bitvals << jnp.arange(bits, dtype=jnp.uint32)[None, None, :], axis=2)
     return codes.reshape(-1)[:n].astype(jnp.uint8)
 
-
-def wire_bits_per_element(bits: int, n: int, levels: int) -> float:
-    """Effective wire bits/element incl. metadata (levels + alpha as fp32)."""
-    payload = packed_size(n, bits) * 32
-    meta = (levels + 1) * 32
-    return (payload + meta) / max(n, 1)
+# Wire accounting lives in ``compressors.wire_bytes`` /
+# ``compressors.wire_bits_per_element`` — the single source of truth for
+# payload + codebook metadata costs (a former duplicate here charged the
+# metadata differently and had no callers).

@@ -19,8 +19,27 @@ shard_map region and sees only the local shard of the gradient:
   ``core.quantizers`` applied along an arbitrary axis, so code tensors can be
   exchanged without first flattening away the peer axis.
 
+The bucketed fast path (:func:`bucketed_two_phase_mean`,
+:func:`bucketed_faithful_ring_mean`, :func:`bucketed_hierarchical_mean`)
+takes a *list* of coalesced fp32 buckets (``core.compressors.plan_buckets``),
+plans one codebook per bucket, and fuses every bucket's packed codes and
+bitcast codebook into a single wire tensor so each phase issues exactly one
+collective regardless of bucket or leaf count.  Each function also returns
+the peer's own dequantized buckets, which is what error feedback needs to
+form the residual ``corrected - C(corrected)``.
+
 Per-chunk codebooks ride along with the codes as (levels, alpha) pairs —
 ``wire_bytes`` in ``core.compressors`` accounts for them.
+
+Peer RNG independence: every encode folds ``compat.flat_axis_index`` of the
+collective's own axes into the key.  The paper's Lemma 2 (mean error
+concentrating as 1/n across workers) assumes independent stochastic rounding
+per peer; a verbatim replicated key correlates the draws and the mean never
+concentrates (``tests/test_rng_independence.py`` pins this).  Folding the
+index of the *collective's* axes only — not every mesh axis — keeps the
+hierarchical mode's replication invariant: peers that must produce identical
+bytes (same pod, different data rank in the cross-pod exchange) still share
+a stream.
 """
 from __future__ import annotations
 
@@ -30,7 +49,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import CompressorConfig, plan
-from repro.core.quantizers import QuantMeta, pack_codes, stochastic_encode, unpack_codes
+from repro.core.quantizers import (
+    QuantMeta,
+    pack_codes,
+    packed_size,
+    stochastic_encode,
+    unpack_codes,
+)
 
 from . import compat
 
@@ -69,6 +94,16 @@ def unpack_dim(words: jax.Array, dim: int, bits: int, n: Optional[int] = None) -
 # ---------------------------------------------------------------------------
 
 
+def _peer_key(key: jax.Array, axis_name) -> jax.Array:
+    """Decorrelate the replicated step key across the peers of a collective.
+
+    Inside the fully-manual shard_map every peer receives the same key; the
+    quantizer's unbiasedness across peers needs independent uniforms, so the
+    peer's linear index over the collective's axes is folded in.
+    """
+    return jax.random.fold_in(key, compat.flat_axis_index(axis_name))
+
+
 def _encode_flat(cfg: CompressorConfig, flat: jax.Array, meta: QuantMeta, key: jax.Array,
                  use_pallas: bool) -> jax.Array:
     """Flat fp32 -> uint8 codes, via the Pallas fast path when requested."""
@@ -87,6 +122,26 @@ def _decode_rows(words: jax.Array, levels: jax.Array, n: int, bits: int) -> jax.
     """(peers, packed_words) + (peers, s+1) codebooks -> (peers, n) fp32."""
     codes = jax.vmap(lambda w: unpack_codes(w, n, bits))(words)
     return jax.vmap(lambda c, lv: jnp.take(lv, c.astype(jnp.int32)))(codes, levels)
+
+
+def _encode_packed_flat(cfg: CompressorConfig, flat: jax.Array, meta: QuantMeta, key: jax.Array,
+                        use_pallas: bool) -> tuple[jax.Array, jax.Array]:
+    """Flat fp32 -> (uint32 wire words, uint8 codes) in one pass.
+
+    The Pallas path fuses encode + bit-pack in VMEM (codes come back anyway
+    for local dequantization); the jnp fallback runs ``pack_codes`` as a
+    second pass.  Both produce bit-identical words.
+    """
+    if use_pallas and cfg.method in ("qsgd", "tqsgd", "dsgd"):
+        from repro.kernels import ops as kops
+
+        return kops.uniform_encode_packed(flat, meta.alpha, cfg.bits, key)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.codebook_encode_packed(flat, meta.levels, cfg.bits, key)
+    codes = stochastic_encode(flat, meta, key)
+    return pack_codes(codes, cfg.bits), codes
 
 
 def _plan_encode_rows(cfg: CompressorConfig, rows: jax.Array, key: jax.Array,
@@ -126,6 +181,7 @@ def two_phase_reduce_scatter_sharded(
         return g
     if g.shape[dim] % n:
         raise ValueError(f"dim {dim} of shape {g.shape} not divisible by axis size {n}")
+    key = _peer_key(key, axis_name)
 
     chunk_shape = g.shape[:dim] + (g.shape[dim] // n,) + g.shape[dim + 1:]
     parts = jnp.moveaxis(g, dim, 0).reshape(n, g.shape[dim] // n, -1)
@@ -155,7 +211,7 @@ def two_phase_mean(
     n = compat.axis_size(axis_name)
     if n == 1:
         return g
-    k1, k2 = jax.random.split(key)
+    k1, k2 = jax.random.split(_peer_key(key, axis_name))
 
     flat = g.reshape(-1).astype(jnp.float32)
     pad = (-flat.size) % n
@@ -188,7 +244,8 @@ def faithful_ring_mean(
     n = compat.axis_size(axis_name)
     flat = g.reshape(-1).astype(jnp.float32)
     meta = plan(cfg, flat)
-    codes = _encode_flat(cfg, flat, meta, key, use_pallas)
+    codes = _encode_flat(cfg, flat, meta, _peer_key(key, axis_name) if n > 1 else key,
+                         use_pallas)
     if n == 1:
         return jnp.take(meta.levels, codes.astype(jnp.int32)).reshape(g.shape).astype(g.dtype)
     words = pack_codes(codes, cfg.bits)
@@ -196,3 +253,144 @@ def faithful_ring_mean(
     all_levels = compat.all_gather_stacked(meta.levels, axis_name)
     vals = _decode_rows(all_words, all_levels, flat.size, cfg.bits)      # (n, m)
     return jnp.mean(vals, axis=0).reshape(g.shape).astype(g.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed fast path: one fused wire tensor per phase for a whole bucket list
+# ---------------------------------------------------------------------------
+
+
+def _levels_to_wire(levels: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(levels.astype(jnp.float32), jnp.uint32)
+
+
+def _levels_from_wire(words: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(words, jnp.float32)
+
+
+def bucketed_faithful_ring_mean(
+    cfg: CompressorConfig,
+    buckets: list,
+    axis_name,
+    key: jax.Array,
+    use_pallas: bool = False,
+) -> tuple[list, list]:
+    """Faithful ring mean over a bucket list with ONE all-gather total.
+
+    Each bucket is quantized once with its own codebook; all buckets' packed
+    words and bitcast codebooks are concatenated into a single uint32 wire
+    tensor.  Returns ``(mean_buckets, own_dequant_buckets)`` — the latter is
+    this peer's transmitted surrogate, the EF residual reference.
+    """
+    n = compat.axis_size(axis_name)
+    if n > 1:
+        key = _peer_key(key, axis_name)
+    nl = cfg.s + 1
+    parts, owns, sizes = [], [], []
+    for b, g in enumerate(buckets):
+        flat = g.reshape(-1).astype(jnp.float32)
+        meta = plan(cfg, flat)
+        words, codes = _encode_packed_flat(cfg, flat, meta, jax.random.fold_in(key, b),
+                                           use_pallas)
+        owns.append(jnp.take(meta.levels, codes.astype(jnp.int32)))
+        parts.append(words)
+        parts.append(_levels_to_wire(meta.levels))
+        sizes.append(flat.size)
+    if n == 1:
+        return list(owns), owns
+    wire = jnp.concatenate(parts)
+    rows = compat.all_gather_stacked(wire, axis_name)                    # (n, T)
+    means, off = [], 0
+    for m in sizes:
+        w = packed_size(m, cfg.bits)
+        words = rows[:, off:off + w]
+        levels = _levels_from_wire(rows[:, off + w:off + w + nl])
+        off += w + nl
+        means.append(jnp.mean(_decode_rows(words, levels, m, cfg.bits), axis=0))
+    return means, owns
+
+
+def bucketed_two_phase_mean(
+    cfg: CompressorConfig,
+    buckets: list,
+    axis_name,
+    key: jax.Array,
+    use_pallas: bool = False,
+) -> tuple[list, list]:
+    """Two-phase compressed mean over a bucket list: ONE all-to-all (phase 1)
+    plus ONE all-gather (phase 2) for every bucket together.
+
+    Each bucket gets a single per-bucket codebook shared by its n peer
+    chunks (padded to ``n*32`` elements so packed chunk words slice
+    cleanly); the codebook rides along once per all-to-all row.  Returns
+    ``(mean_buckets, own_dequant_buckets)``.
+    """
+    n = compat.axis_size(axis_name)
+    flats = [g.reshape(-1).astype(jnp.float32) for g in buckets]
+    if n == 1:
+        return flats, flats
+    k1, k2 = jax.random.split(_peer_key(key, axis_name))
+    nl = cfg.s + 1
+    parts, owns, chunk_meta = [], [], []
+    for b, flat in enumerate(flats):
+        padded = jnp.pad(flat, (0, (-flat.size) % (n * 32)))
+        meta = plan(cfg, flat)
+        words, codes = _encode_packed_flat(cfg, padded, meta, jax.random.fold_in(k1, b),
+                                           use_pallas)
+        owns.append(jnp.take(meta.levels, codes.astype(jnp.int32))[: flat.size])
+        mc = padded.size // n                                            # chunk elements
+        wc = packed_size(mc, cfg.bits)                                   # chunk words
+        parts.append(words.reshape(n, wc))
+        parts.append(jnp.tile(_levels_to_wire(meta.levels)[None], (n, 1)))
+        chunk_meta.append((mc, wc))
+    wire = jnp.concatenate(parts, axis=1)                                # (n, T1)
+    recv = compat.all_to_all_rows(wire, axis_name)                       # (n, T1)
+
+    # Phase 1 decode: this peer's chunk of every bucket's mean.
+    mean_chunks, off = [], 0
+    for mc, wc in chunk_meta:
+        words = recv[:, off:off + wc]
+        levels = _levels_from_wire(recv[:, off + wc:off + wc + nl])
+        off += wc + nl
+        mean_chunks.append(jnp.mean(_decode_rows(words, levels, mc, cfg.bits), axis=0))
+
+    # Phase 2: re-quantize the mean chunks, one fused all-gather back.
+    parts2 = []
+    for b, ch in enumerate(mean_chunks):
+        meta2 = plan(cfg, ch)
+        words2, _ = _encode_packed_flat(cfg, ch, meta2, jax.random.fold_in(k2, b), use_pallas)
+        parts2.append(words2)
+        parts2.append(_levels_to_wire(meta2.levels))
+    rows2 = compat.all_gather_stacked(jnp.concatenate(parts2), axis_name)  # (n, T2)
+    means, off = [], 0
+    for (mc, wc), flat in zip(chunk_meta, flats):
+        words = rows2[:, off:off + wc]
+        levels = _levels_from_wire(rows2[:, off + wc:off + wc + nl])
+        off += wc + nl
+        vals = _decode_rows(words, levels, mc, cfg.bits)                 # row j = chunk j
+        means.append(vals.reshape(n * mc)[: flat.size])
+    return means, owns
+
+
+def bucketed_hierarchical_mean(
+    cfg: CompressorConfig,
+    buckets: list,
+    dp: tuple,
+    key: jax.Array,
+    use_pallas: bool = False,
+) -> tuple[list, list]:
+    """Two-phase inside the innermost data axis, faithful exchange of the
+    pod means across the leading pod axes — 3 collectives total.
+
+    The intra-pod phase folds the *full* dp index into its key: same-data-rank
+    workers in different pods encode different data, so nothing forces them to
+    share a stream, and leaving them correlated caps the phase-1 error at
+    1/sqrt(data) instead of 1/sqrt(n).  (The cross-pod faithful stage keeps
+    per-pod streams — members of one pod must emit identical bytes.)
+    """
+    pod_axes, data_axis = dp[:-1], dp[-1:]
+    k1, k2 = jax.random.split(key)
+    k1 = _peer_key(k1, dp)
+    means, owns = bucketed_two_phase_mean(cfg, buckets, data_axis, k1, use_pallas)
+    means, _ = bucketed_faithful_ring_mean(cfg, means, pod_axes, k2, use_pallas)
+    return means, owns

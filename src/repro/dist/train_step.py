@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import compressors
 from repro.core.compressors import CompressorConfig
 from repro.models import transformer
 from repro.optim.optimizers import Optimizer
@@ -54,13 +55,39 @@ _KEY_SEED = 0x5EED
 
 @dataclasses.dataclass(frozen=True)
 class TrainStepConfig:
+    """Per-step gradient synchronization configuration.
+
+    ``bucket_mb > 0`` (the default) routes the sync through the bucketed
+    codec: the gradient pytree is coalesced into ~``bucket_mb``-MB fp32
+    buckets with one codebook per bucket and one fused collective per phase
+    (vs one plan + 2-4 collectives per *leaf* on the per-leaf path, selected
+    with ``bucket_mb=0``).  ``error_feedback=True`` carries a per-client
+    EF residual pytree through the step signature — ``step_fn(params,
+    opt_state, ef_state, batch, step) -> (params, opt_state, ef_state,
+    metrics)`` — compensating the truncated quantizers' bias
+    (``core.error_feedback`` semantics: transmit C(g+e), keep e' = g+e-C(g+e)).
+    """
+
     sync: str = "dsgd"
     streamed: bool = False
     compressor: CompressorConfig = dataclasses.field(default_factory=CompressorConfig)
+    bucket_mb: float = 4.0
+    error_feedback: bool = False
 
     def __post_init__(self):
         if self.sync not in SYNC_MODES:
             raise ValueError(f"unknown sync mode {self.sync!r}; expected one of {SYNC_MODES}")
+        if self.bucket_mb < 0:
+            raise ValueError("bucket_mb must be >= 0 (0 selects the per-leaf codec)")
+        if self.error_feedback:
+            if self.sync == "dsgd" or self.compressor.method == "dsgd":
+                raise ValueError("error_feedback requires a compressed sync mode/method")
+            if self.bucket_mb <= 0:
+                raise ValueError("error_feedback requires the bucketed codec (bucket_mb > 0)")
+
+    @property
+    def bucket_elements(self) -> int:
+        return int(self.bucket_mb * (1 << 20) / 4)
 
 
 # ---------------------------------------------------------------------------
@@ -86,14 +113,34 @@ def batch_pspecs(batch_like: Any, dp) -> Any:
     )
 
 
-def _opt_specs(opt_state_like: Any, pspec_leaves: list) -> Any:
-    """Optimizer-state specs: state trees mirror the param tree leaf-for-leaf
-    (momentum: one mirror; AdamW: two), so specs repeat cyclically."""
+def _opt_specs(opt_state_like: Any, params_like: Any, pspecs: Any) -> Any:
+    """Optimizer-state specs: mirror leaves get the matching param's spec.
+
+    State trees mirror the param tree leaf-for-leaf (momentum: one mirror;
+    AdamW: two), but may interleave non-mirroring leaves such as a scalar
+    step counter.  Each state leaf is shape-matched against the param tree
+    in cyclic traversal order: a match takes the param's spec and advances
+    the cursor; anything else (true scalars, odd bookkeeping) stays
+    replicated with ``P()`` instead of silently replicating the *entire*
+    state the way blanket cyclic indexing did.
+    """
+    p_shapes = [tuple(x.shape) for x in jax.tree.leaves(params_like)]
+    spec_leaves = jax.tree.leaves(pspecs, is_leaf=lambda s: isinstance(s, P))
     leaves, treedef = jax.tree.flatten(opt_state_like)
-    n = len(pspec_leaves)
-    if n == 0 or len(leaves) % n:
+    n = len(p_shapes)
+    out, cursor = [], 0
+    for leaf in leaves:
+        if n and hasattr(leaf, "shape") and tuple(leaf.shape) == p_shapes[cursor % n]:
+            out.append(spec_leaves[cursor % n])
+            cursor += 1
+        else:
+            out.append(P())
+    if n and cursor % n:
+        # Partial mirror cycle: a non-mirror leaf with a coincidental param
+        # shape desynced the cursor, so the assignment is unreliable — keep
+        # the whole state replicated (always valid) rather than guessing.
         return jax.tree.unflatten(treedef, [P() for _ in leaves])
-    return jax.tree.unflatten(treedef, [pspec_leaves[i % n] for i in range(len(leaves))])
+    return jax.tree.unflatten(treedef, out)
 
 
 def _tree_map_with_specs(fn, tree: Any, spec_tree: Any) -> Any:
@@ -129,10 +176,40 @@ def _sync_leaf(ts: TrainStepConfig, g: jax.Array, key: jax.Array, dp: tuple) -> 
         return sc.two_phase_mean(cfg, g, dp, key, cfg.use_pallas)
     # hierarchical: compress within the innermost data axis, then exchange
     # pod-level means across the leading pod axes with a fresh quantization.
+    # The intra-pod key folds the full dp index so same-data-rank workers in
+    # different pods stay decorrelated (see bucketed_hierarchical_mean).
     pod_axes, data_axis = dp[:-1], dp[-1:]
     k1, k2 = jax.random.split(key)
-    g = sc.two_phase_mean(cfg, g, data_axis, k1, cfg.use_pallas)
+    g = sc.two_phase_mean(cfg, g, data_axis, sc._peer_key(k1, dp), cfg.use_pallas)
     return sc.faithful_ring_mean(cfg, g, pod_axes, k2, cfg.use_pallas)
+
+
+def _sync_buckets(ts: TrainStepConfig, vals: list, key: jax.Array, dp: tuple):
+    """Bucketed sync of a flat leaf list.  Returns (mean_leaves, residual_leaves).
+
+    The bucket plan is derived at trace time from the *local* (post-shard)
+    leaf sizes; each phase of the selected mode moves one fused wire tensor
+    for the whole bucket list, so the per-step collective count is bounded
+    by the mode (1-3), not by the leaf or bucket count.
+    """
+    cfg = ts.compressor
+    bp = compressors.plan_buckets([v.size for v in vals], ts.bucket_elements)
+    buckets = compressors.bucket_concat(vals, bp)
+    if ts.sync == "dsgd" or cfg.method == "dsgd":
+        means = [jax.lax.pmean(b, dp) for b in buckets]
+        owns = buckets
+    elif ts.sync == "faithful":
+        means, owns = sc.bucketed_faithful_ring_mean(cfg, buckets, dp, key, cfg.use_pallas)
+    elif ts.sync == "two_phase" or len(dp) == 1:
+        means, owns = sc.bucketed_two_phase_mean(cfg, buckets, dp, key, cfg.use_pallas)
+    else:
+        means, owns = sc.bucketed_hierarchical_mean(cfg, buckets, dp, key, cfg.use_pallas)
+    shapes = [v.shape for v in vals]
+    mean_leaves = compressors.bucket_split(means, bp, shapes)
+    if not ts.error_feedback:
+        return mean_leaves, None
+    resid = [c - o for c, o in zip(buckets, owns)]
+    return mean_leaves, compressors.bucket_split(resid, bp, shapes)
 
 
 def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
@@ -142,6 +219,10 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
     axes; output leaves are the synced mean with the param's model sharding,
     replicated over data/pod (every mode leaves all peers with identical
     bytes, so the unchecked replication in ``out_specs`` is sound).
+
+    With ``ts.error_feedback`` the callable takes and returns the stacked
+    per-client EF residual alongside the grads:
+    ``sync_fn(grads, key, ef) -> (mean, new_ef)``.
     """
     dp = sharding.manual_axes(mesh)
 
@@ -154,14 +235,27 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
     g_in = _tree_map_with_specs(in_spec, grads_like, pspecs)
     g_out = _tree_map_with_specs(out_spec, grads_like, pspecs)
 
-    def sync(stacked, key):
+    def sync(stacked, key, *maybe_ef):
         leaves, treedef = jax.tree.flatten(stacked)
-        out = [_sync_leaf(ts, g[0], jax.random.fold_in(key, i), dp)
-               for i, g in enumerate(leaves)]
-        return jax.tree.unflatten(treedef, out)
+        vals = [g[0] for g in leaves]
+        if ts.error_feedback:
+            errs = jax.tree.leaves(maybe_ef[0])
+            vals = [v + e[0] for v, e in zip(vals, errs)]
+        if ts.bucket_mb > 0:
+            out, resid = _sync_buckets(ts, vals, key, dp)
+        else:
+            out = [_sync_leaf(ts, g, jax.random.fold_in(key, i), dp)
+                   for i, g in enumerate(vals)]
+            resid = None
+        g_mean = jax.tree.unflatten(treedef, out)
+        if ts.error_feedback:
+            return g_mean, jax.tree.unflatten(treedef, [r[None] for r in resid])
+        return g_mean
 
+    in_specs = (g_in, P(), g_in) if ts.error_feedback else (g_in, P())
+    out_specs = (g_out, g_in) if ts.error_feedback else g_out
     return compat.shard_map(
-        sync, mesh=mesh, in_specs=(g_in, P()), out_specs=g_out,
+        sync, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         axis_names=set(mesh.axis_names), check_vma=False,
     )
 
@@ -252,6 +346,11 @@ def make_train_step(
     with ``metrics = {"loss": (n_dp,), "gnorm": (n_dp,)}`` (global values,
     replicated per data shard).  ``pspecs`` is the parameter PartitionSpec
     tree the caller uses for ``device_put``.
+
+    With ``ts.error_feedback`` the EF residual is an explicit extra pytree in
+    the step signature — ``step_fn(params, opt_state, ef_state, batch, step)
+    -> (params, opt_state, ef_state, metrics)`` — initialized with
+    :func:`init_ef_state`.
     """
     if params_like is None:
         params_like = jax.eval_shape(lambda: transformer.init_lm(jax.random.key(0), cfg)[0])
@@ -271,10 +370,11 @@ def make_train_step(
     n_clients = n_dp if dp else 1
 
     rules = sharding.activation_rules(mesh, manual_data=True)
-    pspec_leaves = jax.tree.leaves(pspecs, is_leaf=lambda s: isinstance(s, P))
-    o_specs = _opt_specs(opt_state_like, pspec_leaves)
+    o_specs = _opt_specs(opt_state_like, params_like, pspecs)
     grads_like = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct((n_clients,) + x.shape, jnp.float32), params_like)
+    if ts.error_feedback and not dp:
+        raise ValueError("error_feedback needs data-parallel mesh axes (the sync path)")
     sync_fn = _make_sync_fn(ts, mesh, pspecs, grads_like) if dp else None
     streamed = ts.streamed and not cfg.enc_dec
 
@@ -294,8 +394,7 @@ def make_train_step(
 
         return _tree_map_with_specs(one, grads, pspecs)
 
-    @jax.jit
-    def step_fn(params, opt_state, batch_g, step):
+    def _step(params, opt_state, ef_state, batch_g, step):
         with sharding.axis_rules(mesh, rules):
             cbatch, caxes = _client_batch(batch_g, n_clients)
 
@@ -309,7 +408,11 @@ def make_train_step(
             # pin one client per data shard before the manual sync region
             grads = constrain_client_grads(grads)
             key = jax.random.fold_in(jax.random.key(_KEY_SEED), step)
-            if sync_fn is not None:
+            new_ef = ef_state
+            if sync_fn is not None and ts.error_feedback:
+                g_mean, new_ef = sync_fn(grads, key, constrain_client_grads(ef_state))
+                new_ef = constrain_client_grads(new_ef)
+            elif sync_fn is not None:
                 g_mean = sync_fn(grads, key)
             else:
                 g_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
@@ -320,6 +423,27 @@ def make_train_step(
         loss = jnp.mean(losses)
         metrics = {"loss": jnp.full((max(n_dp, 1),), loss, jnp.float32),
                    "gnorm": jnp.full((max(n_dp, 1),), gnorm, jnp.float32)}
-        return new_params, new_opt, metrics
+        return new_params, new_opt, new_ef, metrics
+
+    if ts.error_feedback:
+        @jax.jit
+        def step_fn(params, opt_state, ef_state, batch_g, step):
+            return _step(params, opt_state, ef_state, batch_g, step)
+    else:
+        @jax.jit
+        def step_fn(params, opt_state, batch_g, step):
+            p, o, _, m = _step(params, opt_state, None, batch_g, step)
+            return p, o, m
 
     return step_fn, pspecs
+
+
+def init_ef_state(params_like: Any, mesh) -> Any:
+    """Zero EF residual: one stacked row per client (the data/pod shards),
+    matching the stacked-gradient layout the sync shard_map consumes."""
+    dp = sharding.manual_axes(mesh)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    return jax.tree.map(
+        lambda x: jnp.zeros((max(n, 1),) + tuple(x.shape), jnp.float32), params_like)

@@ -50,6 +50,44 @@ def uniform_decode(
     return vals.reshape(-1)[:n]
 
 
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def uniform_encode_packed(
+    g: jax.Array, alpha: jax.Array, bits: int, key: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Fused truncate + uniform stochastic encode + bit-pack.
+
+    Returns ``(words, codes)``: uint32 wire words (``packed_size(n, bits)``,
+    bit-identical to ``pack_codes`` of the same codes) plus the flat uint8
+    codes for local dequantization (error feedback).
+    """
+    from repro.core.quantizers import packed_size
+
+    interpret = _use_interpret() if interpret is None else interpret
+    g2, n = _to_2d(g.astype(jnp.float32))
+    rand = jax.random.uniform(key, g2.shape, jnp.float32)
+    codes, words = _k.uniform_encode_pack_2d(
+        g2, rand, alpha.astype(jnp.float32), n, bits=bits, interpret=interpret)
+    words = jax.lax.bitcast_convert_type(words.reshape(-1), jnp.uint32)[: packed_size(n, bits)]
+    return words, codes.reshape(-1)[:n].astype(jnp.uint8)
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def codebook_encode_packed(
+    g: jax.Array, levels: jax.Array, bits: int, key: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Fused non-uniform encode + bit-pack onto ``levels``; see
+    :func:`uniform_encode_packed` for the return contract."""
+    from repro.core.quantizers import packed_size
+
+    interpret = _use_interpret() if interpret is None else interpret
+    g2, n = _to_2d(g.astype(jnp.float32))
+    rand = jax.random.uniform(key, g2.shape, jnp.float32)
+    codes, words = _k.codebook_encode_pack_2d(
+        g2, rand, levels.astype(jnp.float32), n, bits=bits, interpret=interpret)
+    words = jax.lax.bitcast_convert_type(words.reshape(-1), jnp.uint32)[: packed_size(n, bits)]
+    return words, codes.reshape(-1)[:n].astype(jnp.uint8)
+
+
 @partial(jax.jit, static_argnames=("interpret",))
 def codebook_encode(
     g: jax.Array, levels: jax.Array, key: jax.Array, *, interpret: bool | None = None

@@ -123,6 +123,134 @@ def codebook_encode_2d(
     )(g, rand, levels)
 
 
+# ---------------------------------------------------------------------------
+# Fused encode -> bit-pack: codes leave VMEM already packed into uint32 lanes
+# (wire layout identical to ``core.quantizers.pack_codes``: group g of 32
+# consecutive flat codes -> ``bits`` bit-plane words at [g*bits, (g+1)*bits)).
+# ---------------------------------------------------------------------------
+
+
+def _pack_block(codes: jax.Array, bits: int) -> jax.Array:
+    """(BM, 128) int32 codes -> (BM, 4*bits) int32 bit-plane words.
+
+    Column q*bits+j holds bit-plane j of the 32 consecutive codes
+    [r*128 + 32q, r*128 + 32q + 32); flattening row-major reproduces the
+    ``pack_codes`` word order exactly.
+    """
+    bm = codes.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bm, 32), 1)
+    cols = []
+    for q in range(LANES // 32):
+        sub = codes[:, 32 * q:32 * (q + 1)]
+        for j in range(bits):
+            plane = (sub >> j) & 1
+            cols.append(jnp.sum(plane << lane, axis=1, dtype=jnp.int32))
+    return jnp.stack(cols, axis=1)
+
+
+def _mask_tail(codes: jax.Array, n_ref, bm: int) -> jax.Array:
+    """Zero codes past the true element count so padding words match
+    ``pack_codes``' zero padding bit-for-bit."""
+    base = pl.program_id(0) * bm
+    row = jax.lax.broadcasted_iota(jnp.int32, (bm, LANES), 0) + base
+    col = jax.lax.broadcasted_iota(jnp.int32, (bm, LANES), 1)
+    return jnp.where(row * LANES + col < n_ref[0], codes, 0)
+
+
+def _uniform_encode_pack_kernel(n_ref, alpha_ref, g_ref, rand_ref, codes_ref, words_ref,
+                                *, s: int, bits: int):
+    alpha = alpha_ref[0]
+    scale = s / (2.0 * alpha)
+    g = g_ref[...]
+    u = (jnp.clip(g, -alpha, alpha) + alpha) * scale
+    k = jnp.clip(jnp.floor(u), 0.0, float(s - 1))
+    frac = u - k
+    up = (rand_ref[...] < frac).astype(jnp.float32)
+    codes = _mask_tail(jnp.clip(k + up, 0.0, float(s)).astype(jnp.int32), n_ref, g.shape[0])
+    codes_ref[...] = codes
+    words_ref[...] = _pack_block(codes, bits)
+
+
+def uniform_encode_pack_2d(
+    g: jax.Array, rand: jax.Array, alpha: jax.Array, n: int, *, bits: int, interpret: bool
+) -> tuple[jax.Array, jax.Array]:
+    """Fused uniform encode + bit-pack.  Returns ((rows,128) int32 codes,
+    (rows, 4*bits) int32 words)."""
+    rows = g.shape[0]
+    s = 2**bits - 1
+    wc = (LANES // 32) * bits
+    grid = (pl.cdiv(rows, BLOCK_ROWS),)
+    return pl.pallas_call(
+        functools.partial(_uniform_encode_pack_kernel, s=s, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=None),       # n: full (1,) operand
+            pl.BlockSpec(memory_space=None),       # alpha: full (1,) operand
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, wc), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((rows, wc), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray([n], jnp.int32), alpha.reshape(1), g, rand)
+
+
+def _codebook_encode_pack_kernel(n_ref, g_ref, rand_ref, levels_ref, codes_ref, words_ref,
+                                 *, s: int, bits: int):
+    levels = levels_ref[...]
+    alpha = levels[s]
+    g = jnp.clip(g_ref[...], -alpha, alpha)
+    bm = g.shape[0]
+    flat = g.reshape(bm * LANES)
+    ge = (flat[:, None] >= levels[None, 1:]).astype(jnp.float32)
+    k = jnp.clip(jnp.sum(ge, axis=1), 0.0, float(s - 1))
+    iota = jax.lax.broadcasted_iota(jnp.float32, (flat.shape[0], s + 1), 1)
+    onehot_lo = (iota == k[:, None]).astype(jnp.float32)
+    onehot_hi = (iota == (k[:, None] + 1.0)).astype(jnp.float32)
+    lo = onehot_lo @ levels
+    hi = onehot_hi @ levels
+    pr = (flat - lo) / jnp.maximum(hi - lo, 1e-12)
+    up = (rand_ref[...].reshape(bm * LANES) < pr).astype(jnp.float32)
+    codes = _mask_tail((k + up).reshape(bm, LANES).astype(jnp.int32), n_ref, bm)
+    codes_ref[...] = codes
+    words_ref[...] = _pack_block(codes, bits)
+
+
+def codebook_encode_pack_2d(
+    g: jax.Array, rand: jax.Array, levels: jax.Array, n: int, *, bits: int, interpret: bool
+) -> tuple[jax.Array, jax.Array]:
+    """Fused non-uniform encode + bit-pack (codebook variant)."""
+    rows = g.shape[0]
+    s = levels.shape[0] - 1
+    wc = (LANES // 32) * bits
+    grid = (pl.cdiv(rows, BLOCK_ROWS),)
+    return pl.pallas_call(
+        functools.partial(_codebook_encode_pack_kernel, s=s, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=None),       # n: full (1,) operand
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=None),       # levels: full operand
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, wc), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((rows, wc), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray([n], jnp.int32), g, rand, levels)
+
+
 def _codebook_decode_kernel(codes_ref, levels_ref, out_ref, *, s: int):
     levels = levels_ref[...]
     codes = codes_ref[...].astype(jnp.float32)

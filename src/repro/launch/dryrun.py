@@ -98,7 +98,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, sync: str, mesh_spec
         ts = TrainStepConfig(sync=sync, compressor=CompressorConfig(method=method, bits=bits))
         step_fn, pspecs = make_train_step(cfg, mesh, logical, opt, ts, batch_like, opt_state_like=opt_like, params_like=params_like)
         p_avals = _with_sharding(params_like, pspecs, mesh)
-        o_specs = _opt_specs(opt_like, jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P)))
+        o_specs = _opt_specs(opt_like, params_like, pspecs)
         o_avals = _with_sharding(opt_like, o_specs, mesh)
         dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
         b_avals = _with_sharding(batch_like, batch_pspecs(batch_like, dp), mesh)

@@ -48,6 +48,10 @@ def main(argv=None) -> int:
     ap.add_argument("--sync", default="two_phase", choices=SYNC_MODES)
     ap.add_argument("--method", default="tnqsgd", choices=METHODS)
     ap.add_argument("--bits", type=int, default=3)
+    ap.add_argument("--bucket-mb", type=float, default=4.0,
+                    help="bucketed-codec target bucket size; 0 = per-leaf codec")
+    ap.add_argument("--ef", action="store_true",
+                    help="error feedback on the worker-side compressor (not checkpointed)")
     ap.add_argument("--optimizer", default="momentum_sgd")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--ckpt-dir", default=None)
@@ -64,7 +68,8 @@ def main(argv=None) -> int:
 
     params, logical = init_lm(jax.random.key(0), cfg)
     opt = get_optimizer(args.optimizer, lr=args.lr) if args.optimizer == "momentum_sgd" else get_optimizer(args.optimizer)
-    ts = TrainStepConfig(sync=args.sync, compressor=CompressorConfig(method=args.method, bits=args.bits))
+    ts = TrainStepConfig(sync=args.sync, compressor=CompressorConfig(method=args.method, bits=args.bits),
+                         bucket_mb=args.bucket_mb, error_feedback=args.ef)
     batch0 = lm_batch(cfg, jnp.uint32(0), args.batch, args.seq)
     opt_state = opt.init(params)
     step_fn, pspecs = make_train_step(cfg, mesh, logical, opt, ts, batch0, opt_state_like=jax.eval_shape(lambda: opt_state))
@@ -76,16 +81,19 @@ def main(argv=None) -> int:
         print(f"resumed from step {start}")
     params = jax.device_put(params, sh)
     # optimizer state mirrors the param tree -> same shardings per leaf
-    from repro.dist.train_step import _opt_specs
+    from repro.dist.train_step import _opt_specs, init_ef_state
     from jax.sharding import PartitionSpec as _P
-    o_specs = _opt_specs(jax.eval_shape(lambda: opt_state),
-                         jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, _P)))
+    o_specs = _opt_specs(jax.eval_shape(lambda: opt_state), params, pspecs)
     opt_state = jax.device_put(opt_state, jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
                                                        is_leaf=lambda x: isinstance(x, _P)))
+    ef_state = init_ef_state(params, mesh) if args.ef else None
 
     for i in range(start, start + args.steps):
         b = lm_batch(cfg, jnp.uint32(i), args.batch, args.seq)
-        params, opt_state, m = step_fn(params, opt_state, b, jnp.uint32(i))
+        if args.ef:
+            params, opt_state, ef_state, m = step_fn(params, opt_state, ef_state, b, jnp.uint32(i))
+        else:
+            params, opt_state, m = step_fn(params, opt_state, b, jnp.uint32(i))
         if args.log_every and i % args.log_every == 0:
             print(f"step {i:5d} loss {float(m['loss'][0]):.4f} gnorm {float(m['gnorm'][0]):.3f}", flush=True)
         if args.ckpt_every and args.ckpt_dir and (i + 1) % args.ckpt_every == 0:

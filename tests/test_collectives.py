@@ -4,10 +4,16 @@ The benchmark prints these numbers; the tests make them load-bearing:
 dsgd is the fp32 ring chunk, compressed modes follow the
 ``core.compressors.wire_bytes`` chunking, costs are monotone in bits, and
 every compressed mode beats fp32 at every supported bit-width.
+
+``core.compressors.wire_bytes`` is the single source of truth for
+payload + metadata accounting (a former duplicate in ``core.quantizers``
+charged ``levels+1`` metadata words instead of ``s+2`` and had no callers);
+the tests below pin its exact decomposition and the per-element view.
 """
 import pytest
 
-from repro.core.compressors import CompressorConfig, wire_bytes
+from repro.core.compressors import CompressorConfig, wire_bits_per_element, wire_bytes
+from repro.core.quantizers import packed_size
 from repro.dist.collectives import MODES, wire_bytes_per_device
 
 N = 1_000_000
@@ -50,6 +56,34 @@ def test_compressed_beats_fp32_at_all_bit_widths():
         cfg = CompressorConfig(method="tnqsgd", bits=bits)
         for mode in ("two_phase", "faithful", "hierarchical"):
             assert fp32 / wire_bytes_per_device(cfg, N, SHARDS, mode) > 1.0, (mode, bits)
+
+
+def test_wire_bytes_decomposition():
+    """payload = packed uint32 groups; metadata = s+1 levels + alpha, fp32."""
+    for bits in (1, 2, 3, 4, 8):
+        cfg = CompressorConfig(method="tnqsgd", bits=bits)
+        s = 2**bits - 1
+        for n in (1, 31, 32, 33, 1000, N):
+            assert wire_bytes(cfg, n) == 4 * packed_size(n, bits) + 4 * (s + 2), (bits, n)
+    # dsgd is raw fp32, no metadata
+    assert wire_bytes(CompressorConfig(method="dsgd"), N) == 4 * N
+
+
+def test_wire_bits_per_element_matches_wire_bytes():
+    for bits in (2, 3, 4, 8):
+        cfg = CompressorConfig(method="tnqsgd", bits=bits)
+        assert wire_bits_per_element(cfg, N) == pytest.approx(8.0 * wire_bytes(cfg, N) / N)
+        # metadata amortizes away at scale: per-element cost -> bits
+        assert wire_bits_per_element(cfg, N) == pytest.approx(bits, rel=2e-3)
+        # and dominates for tiny tensors
+        assert wire_bits_per_element(cfg, 8) > bits
+
+
+def test_quantizers_has_no_shadow_accounting():
+    """The inconsistent duplicate must stay deleted."""
+    from repro.core import quantizers
+
+    assert not hasattr(quantizers, "wire_bits_per_element")
 
 
 def test_rejects_bad_inputs():

@@ -146,6 +146,59 @@ print("OK")
     assert "OK" in out
 
 
+def test_bucketed_matches_per_leaf_mean():
+    """The bucketed codec must agree with the per-leaf codec up to
+    quantization noise while issuing a mode-bounded number of collectives
+    (1 all-gather for faithful, all-to-all + all-gather for two_phase) —
+    independent of the leaf count.
+
+    Reuses the exact demo script from ``benchmarks/collectives_bench.py``
+    (which asserts these properties itself), so bench and test measure the
+    same thing by construction."""
+    import sys
+
+    sys.path.insert(0, str(ROOT))
+    try:
+        from benchmarks.collectives_bench import _bucketed_demo_rows
+    finally:
+        sys.path.pop(0)
+
+    rows = {r.split(",")[1]: r.split(",")[3] for r in _bucketed_demo_rows()}
+    assert rows.get("bucketed_demo") == "OK", rows
+    assert int(rows["two_phase_bucket_n_collectives"]) == 2, rows
+    assert int(rows["faithful_bucket_n_collectives"]) == 1, rows
+    assert int(rows["two_phase_leaf_n_collectives"]) >= int(rows["n_grad_leaves"]), rows
+    assert int(rows["faithful_leaf_n_collectives"]) >= int(rows["n_grad_leaves"]), rows
+
+
+def test_opt_specs_with_non_mirror_leaves():
+    """A scalar step counter in the optimizer state must not knock the
+    mirrored momentum leaves back to full replication."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.train_step import _opt_specs
+
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    pspecs = {"w": P("model", None), "b": P(None)}
+
+    # mirror + scalar counter: leaf count not divisible by param count
+    opt_state = {"count": jnp.zeros(()), "mu": {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}}
+    specs = _opt_specs(opt_state, params, pspecs)
+    flat = dict(zip(["count", "mu.b", "mu.w"], jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))))
+    assert flat["count"] == P()
+    # dict flattening is key-sorted: b before w
+    assert flat["mu.b"] == P(None)
+    assert flat["mu.w"] == P("model", None)
+
+    # two mirrors (AdamW-style) still cycle through the param specs
+    opt2 = {"m": dict(params), "v": dict(params)}
+    specs2 = _opt_specs(opt2, params, pspecs)
+    leaves2 = jax.tree.leaves(specs2, is_leaf=lambda s: isinstance(s, P))
+    assert leaves2 == [P(None), P("model", None), P(None), P("model", None)]
+
+
 def test_pack_dim_roundtrip():
     import jax
     import jax.numpy as jnp

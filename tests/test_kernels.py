@@ -72,6 +72,40 @@ def test_kernel_matches_core_quantizer_statistically():
     assert abs(mse_core - mse_kern) / mse_core < 0.1
 
 
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("bits", BITS)
+def test_uniform_encode_packed_matches_separate_passes(shape, bits):
+    """Fused encode→pack emits the exact pack_codes wire words + codes."""
+    from repro.core.quantizers import pack_codes, packed_size
+
+    g = sample_power_law(jax.random.key(20), shape, gamma=4.0, g_min=0.01, rho=0.1).reshape(-1)
+    alpha = jnp.float32(0.05)
+    key = jax.random.key(21)
+    words, codes = ops.uniform_encode_packed(g, alpha, bits, key)
+    want_codes = ops.uniform_encode(g, alpha, bits, key)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(want_codes))
+    assert words.shape == (packed_size(g.size, bits),) and words.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(pack_codes(want_codes, bits)))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_codebook_encode_packed_matches_separate_passes(bits):
+    from repro.core.quantizers import pack_codes, unpack_codes
+
+    s = 2**bits - 1
+    g = sample_power_law(jax.random.key(22), (777,), gamma=3.6, g_min=0.02, rho=0.15)
+    levels = jnp.sort(jax.random.uniform(jax.random.key(23), (s + 1,), minval=-0.1, maxval=0.1))
+    levels = levels.at[0].set(-0.1).at[-1].set(0.1)
+    key = jax.random.key(24)
+    words, codes = ops.codebook_encode_packed(g, levels, bits, key)
+    want_codes = ops.codebook_encode(g, levels, key)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(want_codes))
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(pack_codes(want_codes, bits)))
+    # and the wire round-trips through the standard unpack
+    np.testing.assert_array_equal(
+        np.asarray(unpack_codes(words, g.size, bits)), np.asarray(want_codes))
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_uniform_encode_dtypes(dtype):
     g = (jax.random.normal(jax.random.key(10), (512,)) * 0.1).astype(dtype)
