@@ -107,6 +107,18 @@ def main(quick: bool = False):
             rows.append(f"collectives,tnqsgd_b{bits}_{mode}_bytes_1B,0,{b:.3e}")
             rows.append(f"collectives,tnqsgd_b{bits}_{mode}_vs_fp32,0,{fp32/b:.2f}")
 
+    # adaptive heterogeneous wire format: same 1B elements split across four
+    # buckets at the controller-style mixed widths — the accounting is the
+    # per-bucket sum (one codebook each), averaging to 3 bits/element here,
+    # so the cost matches the uniform-3-bit fused wire to within metadata.
+    cfg = CompressorConfig(method="tnqsgd", bits=3)
+    bsizes = [n // 4] * 4
+    for mode in ("faithful", "two_phase"):
+        het = wire_bytes_per_device(cfg, bsizes, shards, mode, bits=[2, 2, 4, 4])
+        uni = wire_bytes_per_device(cfg, bsizes, shards, mode)
+        rows.append(f"collectives,adaptive_2244_{mode}_bytes_1B,0,{het:.3e}")
+        rows.append(f"collectives,adaptive_2244_{mode}_vs_uniform3,0,{uni/het:.4f}")
+
     # bucketed codec vs per-leaf codec on a live 4-device host mesh — skipped
     # in quick mode (CI smoke): the tier-1 test job runs the same script via
     # tests/test_dist.py, so quick mode gains nothing from repeating it.

@@ -35,16 +35,26 @@ def train_clients(
     seed: int = 0,
     eval_batch: int = 2048,
     error_feedback: bool = False,
+    bits_plan=None,
 ):
     """Paper §V setting: N=8 clients, momentum SGD (0.01/0.9/5e-4), per-layer
     compression of conv and fc groups.  ``error_feedback`` carries one EF
     residual tree per client (``core.error_feedback`` semantics).
+    ``bits_plan`` (one wire width per gradient leaf, traversal order)
+    overrides the uniform ``bits`` — the adaptive per-layer allocation.
     Returns (accuracy, loss_history)."""
+    import dataclasses
+
     templates = make_templates(jax.random.key(42))
     params = init_smallnet(jax.random.key(seed))
     opt = momentum_sgd(lr=lr, momentum=momentum, weight_decay=weight_decay)
     state = opt.init(params)
     ccfg = CompressorConfig(method=method, bits=bits)
+    n_leaves = len(jax.tree.leaves(params))
+    if bits_plan is not None and len(bits_plan) != n_leaves:
+        raise ValueError(f"bits_plan has {len(bits_plan)} entries for {n_leaves} leaves")
+    leaf_cfgs = [ccfg if bits_plan is None else dataclasses.replace(ccfg, bits=int(b))
+                 for b in (bits_plan if bits_plan is not None else [bits] * n_leaves)]
 
     @jax.jit
     def round_step(p, s, errs, i):
@@ -54,12 +64,25 @@ def train_clients(
             loss, g = jax.value_and_grad(smallnet_loss)(p, imgs[c], labels[c])
             if method != "dsgd":
                 key = jax.random.fold_in(jax.random.key(7), i * n_clients + c)
-                if error_feedback:
+                if error_feedback and bits_plan is None:
                     g, e = compress_with_feedback(ccfg, g, e, key)
+                elif error_feedback:
+                    # per-leaf widths: EF residual handled leaf-by-leaf
+                    leaves, treedef = jax.tree.flatten(g)
+                    errs_l = treedef.flatten_up_to(e)
+                    outs, new_e = [], []
+                    for j, (leaf, el) in enumerate(zip(leaves, errs_l)):
+                        corrected = leaf.astype(jnp.float32) + el
+                        cc = compress_decompress(leaf_cfgs[j], corrected,
+                                                 jax.random.fold_in(key, j))
+                        outs.append(cc.astype(leaf.dtype))
+                        new_e.append(corrected - cc.astype(jnp.float32))
+                    g = jax.tree.unflatten(treedef, outs)
+                    e = jax.tree.unflatten(treedef, new_e)
                 else:
                     leaves, treedef = jax.tree.flatten(g)
                     enc = [
-                        compress_decompress(ccfg, leaf, jax.random.fold_in(key, j))
+                        compress_decompress(leaf_cfgs[j], leaf, jax.random.fold_in(key, j))
                         for j, leaf in enumerate(leaves)
                     ]
                     g = jax.tree.unflatten(treedef, enc)

@@ -3,6 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV rows and writes the same numbers as
 machine-readable JSON (``BENCH_core.json`` by default, ``--json PATH`` to
 move it, ``--json ""`` to disable) so CI can archive the perf trajectory.
+``--adaptive`` swaps in the adaptive-allocation suite
+(``benchmarks/adaptive_bench.py``) and defaults to ``BENCH_adaptive.json``.
 ``--full`` uses the paper-scale round counts (slow on CPU); the default
 quick mode (also spelled ``--quick``, the flag CI passes) validates the
 orderings.
@@ -29,23 +31,32 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="quick mode (the default; ignored with --full)")
     ap.add_argument("--only", default=None, help="comma-separated subset")
-    ap.add_argument("--json", default="BENCH_core.json", dest="json_path",
+    ap.add_argument("--adaptive", action="store_true",
+                    help="run the adaptive-allocation suite instead (default "
+                         "output: BENCH_adaptive.json)")
+    ap.add_argument("--json", default=None, dest="json_path",
                     help="machine-readable output path (empty string disables)")
     args = ap.parse_args(argv)
     quick = not args.full
+    if args.json_path is None:
+        args.json_path = "BENCH_adaptive.json" if args.adaptive else "BENCH_core.json"
 
     from benchmarks import (
-        collectives_bench, fig1_grad_density, fig3_accuracy, fig4_tradeoff, kernel_bench, quant_error,
+        adaptive_bench, collectives_bench, fig1_grad_density, fig3_accuracy, fig4_tradeoff,
+        kernel_bench, quant_error,
     )
 
-    suites = {
-        "quant_error": quant_error.main,
-        "kernels": kernel_bench.main,
-        "collectives": collectives_bench.main,
-        "fig1_grad_density": fig1_grad_density.main,
-        "fig3_accuracy": fig3_accuracy.main,
-        "fig4_tradeoff": fig4_tradeoff.main,
-    }
+    if args.adaptive:
+        suites = {"adaptive": adaptive_bench.main}
+    else:
+        suites = {
+            "quant_error": quant_error.main,
+            "kernels": kernel_bench.main,
+            "collectives": collectives_bench.main,
+            "fig1_grad_density": fig1_grad_density.main,
+            "fig3_accuracy": fig3_accuracy.main,
+            "fig4_tradeoff": fig4_tradeoff.main,
+        }
     if args.only:
         keep = set(args.only.split(","))
         suites = {k: v for k, v in suites.items() if k in keep}

@@ -15,6 +15,37 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
 from benchmarks.common import train_clients  # noqa: E402
 
 
+def _adaptive_leaf_plan(method: str, bits: int):
+    """Per-leaf bit plan from a probe gradient: fit one power-law tail per
+    gradient leaf, then water-fill wire bits under the uniform-``bits``
+    budget.  Returns (bits_plan, table_markdown)."""
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import make_templates, client_batches
+    from repro.adaptive.controller import allocate_bits
+    from repro.core import fit_power_law_tail
+    from repro.core.compressors import CompressorConfig, wire_bytes
+    from repro.core.distributions import fit_empirical_density
+    from repro.launch.report import adaptive_table
+    from repro.models.smallnet import init_smallnet, smallnet_loss
+
+    params = init_smallnet(jax.random.key(0))
+    templates = make_templates(jax.random.key(42))
+    imgs, labels = client_batches(templates, jnp.uint32(0), 1, 64)
+    grads = jax.grad(smallnet_loss)(params, imgs[0], labels[0])
+    leaves = jax.tree.leaves(grads)
+    tails = [fit_power_law_tail(g) for g in leaves]
+    dens = [fit_empirical_density(g) for g in leaves]
+    sizes = [g.size for g in leaves]
+    ccfg = CompressorConfig(method=method, bits=bits)
+    plan = allocate_bits(tails, sizes, wire_bytes(ccfg, sizes), ccfg, dens=dens)
+    table = adaptive_table(sizes, plan.bits, plan.alphas,
+                           gammas=[float(t.gamma) for t in tails],
+                           rhos=[float(t.rho) for t in tails])
+    return plan, table
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--method", default="tnqsgd",
@@ -24,10 +55,19 @@ def main():
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--ef", action="store_true",
                     help="error feedback: compensate truncation bias with the client residual")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="per-layer wire bits from fitted tails at the uniform-bits budget")
     args = ap.parse_args()
+    bits_plan = None
+    if args.adaptive and args.method != "dsgd":
+        plan, table = _adaptive_leaf_plan(args.method, args.bits)
+        bits_plan = plan.bits
+        print(f"adaptive per-layer plan ({plan.spend_bytes}/{plan.budget_bytes} wire B):")
+        print(table)
     acc, hist = train_clients(args.method, args.bits, rounds=args.rounds,
-                              n_clients=args.clients, error_feedback=args.ef)
-    tag = f"{args.method}+ef" if args.ef else args.method
+                              n_clients=args.clients, error_feedback=args.ef,
+                              bits_plan=bits_plan)
+    tag = args.method + ("+ef" if args.ef else "") + ("+adaptive" if bits_plan else "")
     print(f"loss: {hist[0]:.3f} -> {hist[-1]:.3f} over {args.rounds} rounds")
     print(f"test accuracy ({tag}, b={args.bits}, N={args.clients}): {acc:.4f}")
 

@@ -1,0 +1,37 @@
+"""Online tail telemetry + wire-budget bit allocation for bucketed sync.
+
+- ``telemetry``:  streaming per-bucket gradient statistics (EMA histogram,
+  Hill-estimator log sums, max/moments) threaded through ``make_train_step``
+  as an explicit state pytree, fed by the fused ``kernels.stats`` pass;
+- ``controller``: the wire-budget allocator — every ``replan_every`` steps
+  it water-fills discrete bits-per-bucket to minimize the summed
+  ``core.theory`` quantization-error model under a global bytes/step budget,
+  with per-bucket α from the ``core.optimal`` fixed-point solvers;
+- ``runtime``:    the replan loop driver with a compiled-step cache keyed on
+  the bit tuple (import ``repro.adaptive.runtime`` directly; it is kept out
+  of this namespace so ``dist.train_step`` can import the config types
+  without a cycle).
+"""
+from . import controller, telemetry
+from .controller import AdaptiveConfig, BitPlan, allocate_bits, predicted_error
+from .telemetry import (
+    TelemetryState,
+    estimate_densities,
+    estimate_tails,
+    init_telemetry,
+    update_telemetry,
+)
+
+__all__ = [
+    "AdaptiveConfig",
+    "BitPlan",
+    "TelemetryState",
+    "allocate_bits",
+    "controller",
+    "estimate_densities",
+    "estimate_tails",
+    "init_telemetry",
+    "predicted_error",
+    "telemetry",
+    "update_telemetry",
+]

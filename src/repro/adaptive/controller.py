@@ -1,0 +1,213 @@
+"""Wire-budget bit allocation across gradient buckets (DQ-SGD-style).
+
+Every ``replan_every`` steps the runtime snapshots the telemetry, estimates
+one :class:`~repro.core.distributions.PowerLawTail` per bucket, and
+water-fills discrete bits-per-bucket under a global bytes/step budget:
+starting from ``min_bits`` everywhere, the bucket with the best marginal
+error-reduction per wire byte gets one more bit until nothing fits.  The
+objective is the paper's closed-form error model — for bucket ``b`` at
+``k`` bits, ``size_b · E_TQ(tail_b, α*(tail_b, k), k)`` with α* from the
+``core.optimal`` fixed-point solver and ``E_TQ`` from ``core.theory``
+(Eq. 11: quantization variance + truncation bias) — so heavy-tailed /
+large-scale buckets win bits over thin-tailed ones instead of every bucket
+getting the same static width.
+
+The error model dispatches on the compressor method: the truncated
+*non-uniform* codecs (tnqsgd/nqsgd/tbqsgd) are scored with
+``theory.e_tq_nonuniform`` and α from ``optimal.solve_alpha_nonuniform``
+over a per-bucket :class:`~repro.core.distributions.EmpiricalDensity`
+(telemetry's histogram, via ``telemetry.estimate_densities``), so the
+reported α is the one the running codec's plan actually solves for; the
+uniform codecs use Eq. 11 / Eq. 12.  Without densities the uniform model is
+the fallback.
+
+Plans are host-side Python (tuples of ints): bits are shape-static in the
+compiled step, so a replan that changes the plan swaps to a different
+compiled step through the runtime's cache rather than retracing anything
+dynamically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core import optimal, theory
+from repro.core.compressors import CompressorConfig, wire_bytes
+from repro.core.distributions import EmpiricalDensity, PowerLawTail
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Adaptive bucketed-sync configuration (``TrainStepConfig.adaptive``).
+
+    ``wire_budget_mb <= 0`` pins the budget to what the *fixed* allocation
+    at ``compressor.bits`` would spend — the controller then only
+    redistributes the same bytes.  ``ema`` is the telemetry decay;
+    ``warmup_steps`` replans are skipped until the EMA has seen that many
+    updates.
+    """
+
+    wire_budget_mb: float = 0.0
+    replan_every: int = 20
+    min_bits: int = 2
+    max_bits: int = 8
+    ema: float = 0.9
+    gmin_quantile: float = 0.9
+    warmup_steps: int = 2
+    # Hysteresis: adopt a new plan only when its predicted error beats the
+    # current plan's (under the same fresh tails) by this relative margin —
+    # telemetry-noisy tails otherwise oscillate between neighbouring plans,
+    # each first visit stalling on a fresh XLA compile.
+    switch_threshold: float = 0.02
+    # Retained compiled steps in the runtime's cache (LRU beyond this).
+    max_cached_steps: int = 8
+
+    def __post_init__(self):
+        if not (1 <= self.min_bits <= self.max_bits <= 8):
+            raise ValueError("need 1 <= min_bits <= max_bits <= 8")
+        if self.replan_every < 1:
+            raise ValueError("replan_every must be >= 1")
+        if not (0.0 < self.ema < 1.0):
+            raise ValueError("ema must be in (0, 1)")
+        if self.switch_threshold < 0.0:
+            raise ValueError("switch_threshold must be >= 0")
+        if self.max_cached_steps < 1:
+            raise ValueError("max_cached_steps must be >= 1")
+
+
+class BitPlan(NamedTuple):
+    """One allocation round's result (host-side Python scalars)."""
+
+    bits: tuple[int, ...]     # per-bucket wire bits
+    alphas: tuple[float, ...]  # solver α at the chosen bits (for reports)
+    spend_bytes: int          # wire bytes/step of this plan
+    budget_bytes: int         # the budget it was solved under
+    err: float = 0.0          # predicted size-weighted total error of the plan
+
+
+def _tail_rows(tails: PowerLawTail | Sequence[PowerLawTail]) -> list[PowerLawTail]:
+    """Accept a stacked PowerLawTail (vmap output) or a list of scalars."""
+    if isinstance(tails, PowerLawTail) and getattr(tails.gamma, "ndim", 0) == 1:
+        return [PowerLawTail(*(jnp.asarray(f[b]) for f in tails))
+                for b in range(tails.gamma.shape[0])]
+    return list(tails)
+
+
+def budget_bytes(cfg: AdaptiveConfig, ccfg: CompressorConfig, sizes: Sequence[int]) -> int:
+    """Global wire budget in bytes/step over the fused bucket list."""
+    if cfg.wire_budget_mb > 0:
+        return int(cfg.wire_budget_mb * (1 << 20))
+    return int(wire_bytes(ccfg, list(sizes)))
+
+
+def _solve_bucket(tail: PowerLawTail, dens: Optional[EmpiricalDensity], k: int,
+                  ccfg: CompressorConfig, iters: int) -> tuple[float, float]:
+    """(α, per-element E_TQ) for one bucket at ``k`` bits, dispatched on the
+    compressor method so both track what the codec's ``plan`` actually does:
+    untruncated codecs (qsgd/nqsgd) pin α = max|g|; tnqsgd gets Eq. 19's α
+    and the Q_N model (tbqsgd approximates with the same — Q_N ≤ Q_B by
+    Hölder); tqsgd gets Eq. 12 / Eq. 11.  Without a density the uniform
+    model is the fallback for every non-uniform codec."""
+    method = ccfg.method
+    if method in ("qsgd", "nqsgd", "dsgd"):
+        a = tail.g_max
+        if dens is not None and method == "nqsgd":
+            return float(a), float(theory.e_tq_nonuniform(tail, dens, a, k))
+        return float(a), float(theory.e_tq_uniform(tail, a, k))
+    if dens is not None and method in ("tnqsgd", "tbqsgd"):
+        a = optimal.solve_alpha_nonuniform(tail, dens, k, iters=iters)
+        return float(a), float(theory.e_tq_nonuniform(tail, dens, a, k))
+    a = optimal.solve_alpha_uniform(tail, k, iters=iters)
+    return float(a), float(theory.e_tq_uniform(tail, a, k))
+
+
+def predicted_error(
+    tails: PowerLawTail | Sequence[PowerLawTail],
+    sizes: Sequence[int],
+    bits: Sequence[int],
+    ccfg: CompressorConfig,
+    *,
+    dens: Optional[Sequence[EmpiricalDensity]] = None,
+    alpha_iters: int = 10,
+) -> float:
+    """Size-weighted total model error of an arbitrary bit assignment —
+    the hysteresis comparison the runtime runs before adopting a new plan."""
+    rows = _tail_rows(tails)
+    return sum(
+        _solve_bucket(rows[b], dens[b] if dens is not None else None,
+                      int(bits[b]), ccfg, alpha_iters)[1] * sizes[b]
+        for b in range(len(sizes)))
+
+
+def allocate_bits(
+    tails: PowerLawTail | Sequence[PowerLawTail],
+    sizes: Sequence[int],
+    budget: int,
+    ccfg: CompressorConfig,
+    *,
+    dens: Optional[Sequence[EmpiricalDensity]] = None,
+    min_bits: int = 2,
+    max_bits: int = 8,
+    alpha_iters: int = 10,
+) -> BitPlan:
+    """Greedy marginal-utility water-filling of discrete bits-per-bucket.
+
+    Each +1-bit upgrade is scored by (predicted error reduction) / (extra
+    wire bytes); upgrades are applied best-first while they fit ``budget``.
+    ``min_bits`` everywhere is the floor even if it alone overshoots the
+    budget (the codec cannot go below 1 bit).  ``dens`` (per-bucket
+    empirical densities, e.g. ``telemetry.estimate_densities``) switches
+    the non-uniform codecs to their own α solver and error model.
+    """
+    rows = _tail_rows(tails)
+    if len(rows) != len(sizes):
+        raise ValueError(f"{len(rows)} tails vs {len(sizes)} bucket sizes")
+    if dens is not None and len(dens) != len(sizes):
+        raise ValueError(f"{len(dens)} densities vs {len(sizes)} bucket sizes")
+    nb = len(sizes)
+    widths = range(min_bits, max_bits + 1)
+    # err[b][k], alpha[b][k]: size-weighted model error + solver α per width.
+    err: list[dict[int, float]] = []
+    alph: list[dict[int, float]] = []
+    for b in range(nb):
+        e_row, a_row = {}, {}
+        for k in widths:
+            a, e = _solve_bucket(rows[b], dens[b] if dens is not None else None,
+                                 k, ccfg, alpha_iters)
+            e_row[k] = e * sizes[b]
+            a_row[k] = a
+        err.append(e_row)
+        alph.append(a_row)
+
+    def cost(b: int, k: int) -> int:
+        return int(wire_bytes(ccfg, sizes[b], k))
+
+    bits = [min_bits] * nb
+    spend = sum(cost(b, min_bits) for b in range(nb))
+    while True:
+        best = None
+        for b in range(nb):
+            k = bits[b] + 1
+            if k > max_bits:
+                continue
+            dcost = cost(b, k) - cost(b, bits[b])
+            if spend + dcost > budget:
+                continue
+            gain = err[b][bits[b]] - err[b][k]
+            score = gain / max(dcost, 1)
+            if best is None or score > best[0]:
+                best = (score, b, k, dcost)
+        if best is None or best[0] <= 0.0:
+            break
+        _, b, k, dcost = best
+        bits[b] = k
+        spend += dcost
+    return BitPlan(
+        bits=tuple(bits),
+        alphas=tuple(alph[b][bits[b]] for b in range(nb)),
+        spend_bytes=spend,
+        budget_bytes=int(budget),
+        err=sum(err[b][bits[b]] for b in range(nb)),
+    )

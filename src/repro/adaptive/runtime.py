@@ -1,0 +1,133 @@
+"""Replan loop driver: compiled-step cache keyed on the bit tuple.
+
+Bit plans are shape-static inside a compiled train step (packed-word counts
+and codebook sizes depend on them), so the adaptive runtime never retraces
+mid-flight: every distinct per-bucket bit tuple maps to its own
+``make_train_step`` product, built on first use and reused while hot.
+Between replans the stepper just dispatches to the cached step; at a replan
+boundary it pulls the telemetry pytree to the host, merges the per-peer
+rows, estimates tails/densities, re-solves the allocation and switches only
+when the new plan's predicted error beats the *current* plan's (under the
+same fresh tails) by ``switch_threshold`` — hysteresis against noisy-tail
+oscillation, where each first visit to a neighbouring plan would stall on an
+XLA compile.  The cache itself is LRU-bounded at ``max_cached_steps`` so a
+long run cannot accumulate executables without bound.
+
+Kept out of ``repro.adaptive.__init__`` so ``dist.train_step`` can import
+the adaptive config/telemetry types without a module cycle.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import train_step as tsmod
+from repro.dist.train_step import TrainStepConfig, make_train_step
+
+from . import telemetry
+from .controller import BitPlan, allocate_bits, budget_bytes, predicted_error
+
+
+class AdaptiveStepper:
+    """Owns the telemetry state layout, the bit plan, and the step cache.
+
+    ``stepper.step(params, opt_state, ef_state, tstate, batch, i)`` runs one
+    training step (pass ``ef_state=None`` when EF is off) and returns
+    ``(params, opt_state, ef_state, tstate, metrics)``; replans fire every
+    ``ts.adaptive.replan_every`` calls once the telemetry has warmed up.
+    The current plan is exposed as ``stepper.plan`` (a
+    :class:`~repro.adaptive.controller.BitPlan`), ``None`` until the first
+    replan — before that the uniform ``ts.compressor.bits`` plan runs.
+    """
+
+    def __init__(self, cfg, mesh, logical, opt, ts: TrainStepConfig, batch0,
+                 opt_state_like: Any = None, params_like: Any = None):
+        if ts.adaptive is None:
+            raise ValueError("AdaptiveStepper needs TrainStepConfig.adaptive set")
+        if params_like is None:
+            from repro.models import transformer
+
+            params_like = jax.eval_shape(lambda: transformer.init_lm(jax.random.key(0), cfg)[0])
+        # The plan/telemetry hot loop never full-sorts: force the histogram
+        # quantile for g_min unless the caller already chose.
+        if not ts.compressor.approx_gmin:
+            ts = dataclasses.replace(
+                ts, compressor=dataclasses.replace(ts.compressor, approx_gmin=True))
+        self.ts = ts
+        self.cfg, self.mesh, self.logical, self.opt = cfg, mesh, logical, opt
+        self.batch0 = batch0
+        self.opt_state_like = opt_state_like
+        self.params_like = params_like
+        self._cache: collections.OrderedDict[tuple[int, ...], Any] = collections.OrderedDict()
+        self.plan: Optional[BitPlan] = None
+        self.tails = None  # last telemetry-estimated stacked PowerLawTail
+        # First build fixes pspecs and the bucket layout (uniform plan).
+        step0, self.pspecs = self._build(None)
+        self.sizes = tsmod.local_bucket_sizes(params_like, mesh, self.pspecs, ts)
+        self.bits = (ts.compressor.bits,) * len(self.sizes)
+        self._cache[self.bits] = step0
+
+    def _build(self, bits: Optional[tuple[int, ...]]):
+        ts_b = dataclasses.replace(self.ts, bits_plan=bits)
+        return make_train_step(
+            self.cfg, self.mesh, self.logical, self.opt, ts_b, self.batch0,
+            opt_state_like=self.opt_state_like, params_like=self.params_like)
+
+    def _step_for(self, bits: tuple[int, ...]):
+        if bits not in self._cache:
+            self._cache[bits], _ = self._build(bits)
+        self._cache.move_to_end(bits)
+        while len(self._cache) > self.ts.adaptive.max_cached_steps:
+            self._cache.popitem(last=False)
+        return self._cache[bits]
+
+    def init_telemetry(self) -> Any:
+        return tsmod.init_telemetry_state(self.params_like, self.mesh, self.pspecs, self.ts)
+
+    @property
+    def budget(self) -> int:
+        return budget_bytes(self.ts.adaptive, self.ts.compressor, self.sizes)
+
+    def replan(self, tstate: Any) -> BitPlan:
+        """Host-side: merge peer telemetry, estimate tails/densities,
+        re-solve bits, and adopt the new plan only past the hysteresis
+        margin (the first replan away from the uniform bootstrap always
+        adopts — there is nothing compiled worth protecting yet)."""
+        acfg = self.ts.adaptive
+        merged = telemetry.aggregate_peers(jax.device_get(tstate))
+        if float(merged.steps) < acfg.warmup_steps:
+            return self.plan if self.plan is not None else BitPlan(
+                self.bits, (), 0, self.budget)
+        tails = telemetry.estimate_tails(merged, gmin_quantile=acfg.gmin_quantile)
+        dens = telemetry.estimate_densities(merged)
+        self.tails = tails
+        plan = allocate_bits(tails, self.sizes, self.budget, self.ts.compressor,
+                             dens=dens, min_bits=acfg.min_bits, max_bits=acfg.max_bits,
+                             alpha_iters=self.ts.compressor.alpha_iters)
+        if plan.bits != self.bits and self.plan is not None:
+            e_current = predicted_error(tails, self.sizes, self.bits,
+                                        self.ts.compressor, dens=dens,
+                                        alpha_iters=self.ts.compressor.alpha_iters)
+            if plan.err > e_current * (1.0 - acfg.switch_threshold):
+                # Not enough predicted gain to risk a compile: keep the
+                # current plan.
+                return self.plan
+        self.plan, self.bits = plan, plan.bits
+        return plan
+
+    def step(self, params, opt_state, ef_state, tstate, batch, i: int):
+        acfg = self.ts.adaptive
+        if i and i % acfg.replan_every == 0:
+            self.replan(tstate)
+        fn = self._step_for(self.bits)
+        step = jnp.uint32(i)
+        if self.ts.error_feedback:
+            p, o, e, t, m = fn(params, opt_state, ef_state, tstate, batch, step)
+        else:
+            p, o, t, m = fn(params, opt_state, tstate, batch, step)
+            e = None
+        return p, o, e, t, m

@@ -49,6 +49,7 @@ class CompressorConfig:
     use_pallas: bool = False       # fused encode kernel for uniform codebooks
     pack: bool = True              # bit-pack codes into uint32 words on the wire
     plan_sample: int = 65536       # max elements used for the statistics pass
+    approx_gmin: bool = False      # histogram quantile for g_min (no full sort)
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -73,7 +74,8 @@ def plan(cfg: CompressorConfig, g: jax.Array) -> QuantMeta:
     if cfg.plan_sample and g32.size > cfg.plan_sample:
         stride = -(-g32.size // cfg.plan_sample)
         g32 = g32[::stride]
-    tail = dist.fit_power_law_tail(g32, gmin_quantile=cfg.gmin_quantile)
+    tail = dist.fit_power_law_tail(g32, gmin_quantile=cfg.gmin_quantile,
+                                   approx_quantile=cfg.approx_gmin)
     if cfg.method == "qsgd":
         alpha = tail.g_max
         levels = uniform_levels(alpha, cfg.bits)
@@ -133,27 +135,45 @@ def compress_decompress(cfg: CompressorConfig, g: jax.Array, key: jax.Array) -> 
     return decode(cfg, wire, meta, g.shape).astype(g.dtype)
 
 
-def wire_bytes(cfg: CompressorConfig, n_elements: int) -> int:
-    """Bytes on the wire for one tensor of ``n_elements`` (payload + meta).
+def wire_bytes(cfg: CompressorConfig, n_elements, bits=None) -> int:
+    """Bytes on the wire for one tensor (payload + meta).
 
     This is the single source of truth for wire accounting (used by
     ``dist.collectives.wire_bytes_per_device`` and the benchmarks): packed
     payload of ``bits``/element rounded up to uint32 groups, plus the
     codebook metadata — ``s+1`` fp32 levels and the fp32 alpha, ``s+2``
     words total.
+
+    Heterogeneous adaptive formats are first-class: ``n_elements`` may be a
+    sequence of per-bucket sizes, optionally with a matching sequence of
+    per-bucket ``bits`` (scalar ``bits`` overrides ``cfg.bits`` uniformly).
+    The result is the total over buckets — the fused wire tensor pays one
+    codebook per bucket, which is exactly this sum.
     """
+    if isinstance(n_elements, (list, tuple)):
+        if isinstance(bits, (list, tuple)):
+            if len(bits) != len(n_elements):
+                raise ValueError(f"{len(bits)} bit-widths vs {len(n_elements)} buckets")
+            return sum(wire_bytes(cfg, n, b) for n, b in zip(n_elements, bits))
+        return sum(wire_bytes(cfg, n, bits) for n in n_elements)
+    if isinstance(bits, (list, tuple)):
+        raise ValueError("per-bucket bits need a matching list of bucket sizes")
     if cfg.method == "dsgd":
         return 4 * n_elements
-    from .quantizers import packed_size
+    from .quantizers import num_levels, packed_size
 
-    payload = 4 * packed_size(n_elements, cfg.bits) if cfg.pack else n_elements
-    meta = 4 * (cfg.s + 2)
+    b = cfg.bits if bits is None else int(bits)
+    if not (1 <= b <= 8):
+        raise ValueError("bits must be in [1, 8]")
+    payload = 4 * packed_size(n_elements, b) if cfg.pack else n_elements
+    meta = 4 * (num_levels(b) + 2)
     return payload + meta
 
 
-def wire_bits_per_element(cfg: CompressorConfig, n_elements: int) -> float:
+def wire_bits_per_element(cfg: CompressorConfig, n_elements, bits=None) -> float:
     """Effective wire bits per element, metadata included (8·wire_bytes/n)."""
-    return 8.0 * wire_bytes(cfg, n_elements) / max(n_elements, 1)
+    total = sum(n_elements) if isinstance(n_elements, (list, tuple)) else n_elements
+    return 8.0 * wire_bytes(cfg, n_elements, bits) / max(total, 1)
 
 
 # ---------------------------------------------------------------------------

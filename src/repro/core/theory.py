@@ -53,6 +53,16 @@ def e_tq_uniform(tail: PowerLawTail, alpha: jax.Array, bits: int) -> jax.Array:
     return quant_variance_uniform(tail, alpha, bits) + truncation_bias(tail, alpha)
 
 
+def e_tq_nonuniform(
+    tail: PowerLawTail, dens: EmpiricalDensity, alpha: jax.Array, bits: int
+) -> jax.Array:
+    """Per-element E_TQ for the truncated *non-uniform* quantizer:
+    Q_N(α) α²/s² quantization variance (Eq. 15 with λ ∝ p^(1/3)) plus the
+    same power-law truncation bias as Eq. 11."""
+    s = num_levels(bits)
+    return q_n(dens, alpha) * alpha**2 / s**2 + truncation_bias(tail, alpha)
+
+
 def e_tq_bound(tail: PowerLawTail, q_value: jax.Array, bits: int) -> jax.Array:
     """Theorem 1/2/3 master bound (per element, without d/N):
 

@@ -29,8 +29,18 @@ from repro.core.compressors import CompressorConfig, wire_bytes
 MODES = ("dsgd", "two_phase", "hierarchical", "faithful")
 
 
-def wire_bytes_per_device(cfg: CompressorConfig, n: int, shards: int, mode: str) -> float:
-    """Per-device, per-hop wire bytes for one n-element gradient sync."""
+def wire_bytes_per_device(cfg: CompressorConfig, n, shards: int, mode: str, bits=None) -> float:
+    """Per-device, per-hop wire bytes for one n-element gradient sync.
+
+    ``n`` may be a sequence of per-bucket sizes with a matching sequence of
+    per-bucket ``bits`` (the adaptive fused wire format); the cost is then
+    the sum over buckets, each chunked per the mode.
+    """
+    if isinstance(n, (list, tuple)):
+        bl = bits if isinstance(bits, (list, tuple)) else [bits] * len(n)
+        if len(bl) != len(n):
+            raise ValueError(f"{len(bl)} bit-widths vs {len(n)} buckets")
+        return sum(wire_bytes_per_device(cfg, nb, shards, mode, b) for nb, b in zip(n, bl))
     if mode not in MODES:
         raise ValueError(f"unknown sync mode {mode!r}; expected one of {MODES}")
     if shards < 1:
@@ -39,9 +49,9 @@ def wire_bytes_per_device(cfg: CompressorConfig, n: int, shards: int, mode: str)
         return 4.0 * n / shards
     chunk = -(-n // shards)
     if mode == "two_phase":
-        return float(wire_bytes(cfg, chunk))
+        return float(wire_bytes(cfg, chunk, bits))
     if mode == "faithful":
-        return wire_bytes(cfg, n) / shards
+        return wire_bytes(cfg, n, bits) / shards
     # hierarchical: intra-pod two-phase chunk + the pod-mean faithful
     # exchange across pods, spread over the pod's members.
-    return float(wire_bytes(cfg, chunk)) + wire_bytes(cfg, n) / shards
+    return float(wire_bytes(cfg, chunk, bits)) + wire_bytes(cfg, n, bits) / shards

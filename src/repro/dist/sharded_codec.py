@@ -24,9 +24,12 @@ The bucketed fast path (:func:`bucketed_two_phase_mean`,
 takes a *list* of coalesced fp32 buckets (``core.compressors.plan_buckets``),
 plans one codebook per bucket, and fuses every bucket's packed codes and
 bitcast codebook into a single wire tensor so each phase issues exactly one
-collective regardless of bucket or leaf count.  Each function also returns
-the peer's own dequantized buckets, which is what error feedback needs to
-form the residual ``corrected - C(corrected)``.
+collective regardless of bucket or leaf count.  An optional per-bucket
+``bits`` plan (``repro.adaptive``) gives each bucket its own static wire
+width inside the same fused tensor — offsets stay trace-time static, and the
+collective count does not change.  Each function also returns the peer's own
+dequantized buckets, which is what error feedback needs to form the residual
+``corrected - C(corrected)``.
 
 Per-chunk codebooks ride along with the codes as (levels, alpha) pairs —
 ``wire_bytes`` in ``core.compressors`` accounts for them.
@@ -43,7 +46,8 @@ a stream.
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -268,29 +272,50 @@ def _levels_from_wire(words: jax.Array) -> jax.Array:
     return jax.lax.bitcast_convert_type(words, jnp.float32)
 
 
+def _bucket_cfgs(
+    cfg: CompressorConfig, n_buckets: int, bits: Optional[Sequence[int]]
+) -> list[CompressorConfig]:
+    """Per-bucket compressor configs for a (possibly heterogeneous) bit plan.
+
+    ``bits=None`` keeps ``cfg`` everywhere; otherwise one config per bucket
+    with that bucket's static wire width.  The bit plan is trace-time
+    Python, so bucket offsets in the fused wire tensor stay static.
+    """
+    if bits is None:
+        return [cfg] * n_buckets
+    if len(bits) != n_buckets:
+        raise ValueError(f"bit plan has {len(bits)} entries for {n_buckets} buckets")
+    return [cfg if int(b) == cfg.bits else dataclasses.replace(cfg, bits=int(b))
+            for b in bits]
+
+
 def bucketed_faithful_ring_mean(
     cfg: CompressorConfig,
     buckets: list,
     axis_name,
     key: jax.Array,
     use_pallas: bool = False,
+    bits: Optional[Sequence[int]] = None,
 ) -> tuple[list, list]:
     """Faithful ring mean over a bucket list with ONE all-gather total.
 
     Each bucket is quantized once with its own codebook; all buckets' packed
     words and bitcast codebooks are concatenated into a single uint32 wire
-    tensor.  Returns ``(mean_buckets, own_dequant_buckets)`` — the latter is
-    this peer's transmitted surrogate, the EF residual reference.
+    tensor.  ``bits`` optionally assigns each bucket its own static wire
+    width (the adaptive bit plan) — bucket offsets stay static because the
+    plan is trace-time Python.  Returns ``(mean_buckets,
+    own_dequant_buckets)`` — the latter is this peer's transmitted
+    surrogate, the EF residual reference.
     """
     n = compat.axis_size(axis_name)
     if n > 1:
         key = _peer_key(key, axis_name)
-    nl = cfg.s + 1
+    cfgs = _bucket_cfgs(cfg, len(buckets), bits)
     parts, owns, sizes = [], [], []
     for b, g in enumerate(buckets):
         flat = g.reshape(-1).astype(jnp.float32)
-        meta = plan(cfg, flat)
-        words, codes = _encode_packed_flat(cfg, flat, meta, jax.random.fold_in(key, b),
+        meta = plan(cfgs[b], flat)
+        words, codes = _encode_packed_flat(cfgs[b], flat, meta, jax.random.fold_in(key, b),
                                            use_pallas)
         owns.append(jnp.take(meta.levels, codes.astype(jnp.int32)))
         parts.append(words)
@@ -301,12 +326,13 @@ def bucketed_faithful_ring_mean(
     wire = jnp.concatenate(parts)
     rows = compat.all_gather_stacked(wire, axis_name)                    # (n, T)
     means, off = [], 0
-    for m in sizes:
-        w = packed_size(m, cfg.bits)
+    for m, cfgb in zip(sizes, cfgs):
+        w = packed_size(m, cfgb.bits)
+        nl = cfgb.s + 1
         words = rows[:, off:off + w]
         levels = _levels_from_wire(rows[:, off + w:off + w + nl])
         off += w + nl
-        means.append(jnp.mean(_decode_rows(words, levels, m, cfg.bits), axis=0))
+        means.append(jnp.mean(_decode_rows(words, levels, m, cfgb.bits), axis=0))
     return means, owns
 
 
@@ -316,30 +342,32 @@ def bucketed_two_phase_mean(
     axis_name,
     key: jax.Array,
     use_pallas: bool = False,
+    bits: Optional[Sequence[int]] = None,
 ) -> tuple[list, list]:
     """Two-phase compressed mean over a bucket list: ONE all-to-all (phase 1)
     plus ONE all-gather (phase 2) for every bucket together.
 
     Each bucket gets a single per-bucket codebook shared by its n peer
     chunks (padded to ``n*32`` elements so packed chunk words slice
-    cleanly); the codebook rides along once per all-to-all row.  Returns
-    ``(mean_buckets, own_dequant_buckets)``.
+    cleanly); the codebook rides along once per all-to-all row.  ``bits``
+    optionally assigns per-bucket wire widths (both phases use the bucket's
+    width).  Returns ``(mean_buckets, own_dequant_buckets)``.
     """
     n = compat.axis_size(axis_name)
     flats = [g.reshape(-1).astype(jnp.float32) for g in buckets]
     if n == 1:
         return flats, flats
     k1, k2 = jax.random.split(_peer_key(key, axis_name))
-    nl = cfg.s + 1
+    cfgs = _bucket_cfgs(cfg, len(buckets), bits)
     parts, owns, chunk_meta = [], [], []
     for b, flat in enumerate(flats):
         padded = jnp.pad(flat, (0, (-flat.size) % (n * 32)))
-        meta = plan(cfg, flat)
-        words, codes = _encode_packed_flat(cfg, padded, meta, jax.random.fold_in(k1, b),
+        meta = plan(cfgs[b], flat)
+        words, codes = _encode_packed_flat(cfgs[b], padded, meta, jax.random.fold_in(k1, b),
                                            use_pallas)
         owns.append(jnp.take(meta.levels, codes.astype(jnp.int32))[: flat.size])
         mc = padded.size // n                                            # chunk elements
-        wc = packed_size(mc, cfg.bits)                                   # chunk words
+        wc = packed_size(mc, cfgs[b].bits)                               # chunk words
         parts.append(words.reshape(n, wc))
         parts.append(jnp.tile(_levels_to_wire(meta.levels)[None], (n, 1)))
         chunk_meta.append((mc, wc))
@@ -348,26 +376,29 @@ def bucketed_two_phase_mean(
 
     # Phase 1 decode: this peer's chunk of every bucket's mean.
     mean_chunks, off = [], 0
-    for mc, wc in chunk_meta:
+    for (mc, wc), cfgb in zip(chunk_meta, cfgs):
+        nl = cfgb.s + 1
         words = recv[:, off:off + wc]
         levels = _levels_from_wire(recv[:, off + wc:off + wc + nl])
         off += wc + nl
-        mean_chunks.append(jnp.mean(_decode_rows(words, levels, mc, cfg.bits), axis=0))
+        mean_chunks.append(jnp.mean(_decode_rows(words, levels, mc, cfgb.bits), axis=0))
 
     # Phase 2: re-quantize the mean chunks, one fused all-gather back.
     parts2 = []
     for b, ch in enumerate(mean_chunks):
-        meta2 = plan(cfg, ch)
-        words2, _ = _encode_packed_flat(cfg, ch, meta2, jax.random.fold_in(k2, b), use_pallas)
+        meta2 = plan(cfgs[b], ch)
+        words2, _ = _encode_packed_flat(cfgs[b], ch, meta2, jax.random.fold_in(k2, b),
+                                        use_pallas)
         parts2.append(words2)
         parts2.append(_levels_to_wire(meta2.levels))
     rows2 = compat.all_gather_stacked(jnp.concatenate(parts2), axis_name)  # (n, T2)
     means, off = [], 0
-    for (mc, wc), flat in zip(chunk_meta, flats):
+    for (mc, wc), cfgb, flat in zip(chunk_meta, cfgs, flats):
+        nl = cfgb.s + 1
         words = rows2[:, off:off + wc]
         levels = _levels_from_wire(rows2[:, off + wc:off + wc + nl])
         off += wc + nl
-        vals = _decode_rows(words, levels, mc, cfg.bits)                 # row j = chunk j
+        vals = _decode_rows(words, levels, mc, cfgb.bits)                # row j = chunk j
         means.append(vals.reshape(n * mc)[: flat.size])
     return means, owns
 
@@ -378,6 +409,7 @@ def bucketed_hierarchical_mean(
     dp: tuple,
     key: jax.Array,
     use_pallas: bool = False,
+    bits: Optional[Sequence[int]] = None,
 ) -> tuple[list, list]:
     """Two-phase inside the innermost data axis, faithful exchange of the
     pod means across the leading pod axes — 3 collectives total.
@@ -391,6 +423,6 @@ def bucketed_hierarchical_mean(
     pod_axes, data_axis = dp[:-1], dp[-1:]
     k1, k2 = jax.random.split(key)
     k1 = _peer_key(k1, dp)
-    means, owns = bucketed_two_phase_mean(cfg, buckets, data_axis, k1, use_pallas)
-    means, _ = bucketed_faithful_ring_mean(cfg, means, pod_axes, k2, use_pallas)
+    means, owns = bucketed_two_phase_mean(cfg, buckets, data_axis, k1, use_pallas, bits)
+    means, _ = bucketed_faithful_ring_mean(cfg, means, pod_axes, k2, use_pallas, bits)
     return means, owns

@@ -35,12 +35,14 @@ is live at a time.  It is numerically equivalent to the plain schedule.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.adaptive import telemetry as adaptive_telemetry
+from repro.adaptive.controller import AdaptiveConfig
 from repro.core import compressors
 from repro.core.compressors import CompressorConfig
 from repro.models import transformer
@@ -66,6 +68,15 @@ class TrainStepConfig:
     opt_state, ef_state, batch, step) -> (params, opt_state, ef_state,
     metrics)`` — compensating the truncated quantizers' bias
     (``core.error_feedback`` semantics: transmit C(g+e), keep e' = g+e-C(g+e)).
+
+    ``adaptive`` (an :class:`repro.adaptive.AdaptiveConfig`) threads a
+    per-client telemetry pytree through the signature the same way — the
+    state slot follows ``ef_state`` when both are on — updated inside the
+    sync region from the exact buckets the codec quantizes, with no extra
+    collectives.  ``bits_plan`` assigns each bucket its own static wire
+    width; bit plans are static per compiled step, so the adaptive runtime
+    (``repro.adaptive.runtime``) swaps between compiled steps through a
+    cache keyed on the bit tuple instead of retracing.
     """
 
     sync: str = "dsgd"
@@ -73,6 +84,8 @@ class TrainStepConfig:
     compressor: CompressorConfig = dataclasses.field(default_factory=CompressorConfig)
     bucket_mb: float = 4.0
     error_feedback: bool = False
+    adaptive: Optional[AdaptiveConfig] = None
+    bits_plan: Optional[tuple[int, ...]] = None
 
     def __post_init__(self):
         if self.sync not in SYNC_MODES:
@@ -84,6 +97,17 @@ class TrainStepConfig:
                 raise ValueError("error_feedback requires a compressed sync mode/method")
             if self.bucket_mb <= 0:
                 raise ValueError("error_feedback requires the bucketed codec (bucket_mb > 0)")
+        if self.adaptive is not None:
+            if self.sync == "dsgd" or self.compressor.method == "dsgd":
+                raise ValueError("adaptive telemetry requires a compressed sync mode/method")
+            if self.bucket_mb <= 0:
+                raise ValueError("adaptive telemetry requires the bucketed codec (bucket_mb > 0)")
+        if self.bits_plan is not None:
+            if self.bucket_mb <= 0:
+                raise ValueError("bits_plan targets the bucketed codec (bucket_mb > 0)")
+            object.__setattr__(self, "bits_plan", tuple(int(b) for b in self.bits_plan))
+            if any(not (1 <= b <= 8) for b in self.bits_plan):
+                raise ValueError("bits_plan entries must be in [1, 8]")
 
     @property
     def bucket_elements(self) -> int:
@@ -184,32 +208,44 @@ def _sync_leaf(ts: TrainStepConfig, g: jax.Array, key: jax.Array, dp: tuple) -> 
     return sc.faithful_ring_mean(cfg, g, pod_axes, k2, cfg.use_pallas)
 
 
-def _sync_buckets(ts: TrainStepConfig, vals: list, key: jax.Array, dp: tuple):
-    """Bucketed sync of a flat leaf list.  Returns (mean_leaves, residual_leaves).
+def _sync_buckets(ts: TrainStepConfig, vals: list, key: jax.Array, dp: tuple,
+                  tstate=None):
+    """Bucketed sync of a flat leaf list.
+    Returns (mean_leaves, residual_leaves, new_telemetry).
 
     The bucket plan is derived at trace time from the *local* (post-shard)
     leaf sizes; each phase of the selected mode moves one fused wire tensor
     for the whole bucket list, so the per-step collective count is bounded
-    by the mode (1-3), not by the leaf or bucket count.
+    by the mode (1-3), not by the leaf or bucket count — including under a
+    heterogeneous ``bits_plan``.  Telemetry (when threaded) accumulates from
+    the same corrected buckets the codec quantizes, per peer, collective-free.
     """
     cfg = ts.compressor
     bp = compressors.plan_buckets([v.size for v in vals], ts.bucket_elements)
     buckets = compressors.bucket_concat(vals, bp)
+    new_t = None
+    if tstate is not None:
+        new_t = adaptive_telemetry.update_telemetry(
+            tstate, buckets, decay=ts.adaptive.ema, use_pallas=cfg.use_pallas)
+    bits = ts.bits_plan
     if ts.sync == "dsgd" or cfg.method == "dsgd":
         means = [jax.lax.pmean(b, dp) for b in buckets]
         owns = buckets
     elif ts.sync == "faithful":
-        means, owns = sc.bucketed_faithful_ring_mean(cfg, buckets, dp, key, cfg.use_pallas)
+        means, owns = sc.bucketed_faithful_ring_mean(cfg, buckets, dp, key,
+                                                     cfg.use_pallas, bits)
     elif ts.sync == "two_phase" or len(dp) == 1:
-        means, owns = sc.bucketed_two_phase_mean(cfg, buckets, dp, key, cfg.use_pallas)
+        means, owns = sc.bucketed_two_phase_mean(cfg, buckets, dp, key,
+                                                 cfg.use_pallas, bits)
     else:
-        means, owns = sc.bucketed_hierarchical_mean(cfg, buckets, dp, key, cfg.use_pallas)
+        means, owns = sc.bucketed_hierarchical_mean(cfg, buckets, dp, key,
+                                                    cfg.use_pallas, bits)
     shapes = [v.shape for v in vals]
     mean_leaves = compressors.bucket_split(means, bp, shapes)
     if not ts.error_feedback:
-        return mean_leaves, None
+        return mean_leaves, None, new_t
     resid = [c - o for c, o in zip(buckets, owns)]
-    return mean_leaves, compressors.bucket_split(resid, bp, shapes)
+    return mean_leaves, compressors.bucket_split(resid, bp, shapes), new_t
 
 
 def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
@@ -221,8 +257,9 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
     bytes, so the unchecked replication in ``out_specs`` is sound).
 
     With ``ts.error_feedback`` the callable takes and returns the stacked
-    per-client EF residual alongside the grads:
-    ``sync_fn(grads, key, ef) -> (mean, new_ef)``.
+    per-client EF residual alongside the grads; with ``ts.adaptive`` the
+    stacked per-client telemetry state follows it:
+    ``sync_fn(grads, key[, ef][, tstate]) -> (mean[, new_ef][, new_tstate])``.
     """
     dp = sharding.manual_axes(mesh)
 
@@ -235,27 +272,44 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
     g_in = _tree_map_with_specs(in_spec, grads_like, pspecs)
     g_out = _tree_map_with_specs(out_spec, grads_like, pspecs)
 
-    def sync(stacked, key, *maybe_ef):
+    def sync(stacked, key, *extras):
+        idx = 0
+        ef = tstate = None
+        if ts.error_feedback:
+            ef, idx = extras[idx], idx + 1
+        if ts.adaptive is not None:
+            tstate = extras[idx]
         leaves, treedef = jax.tree.flatten(stacked)
         vals = [g[0] for g in leaves]
         if ts.error_feedback:
-            errs = jax.tree.leaves(maybe_ef[0])
+            errs = jax.tree.leaves(ef)
             vals = [v + e[0] for v, e in zip(vals, errs)]
         if ts.bucket_mb > 0:
-            out, resid = _sync_buckets(ts, vals, key, dp)
+            t_in = None if tstate is None else jax.tree.map(lambda x: x[0], tstate)
+            out, resid, new_t = _sync_buckets(ts, vals, key, dp, t_in)
         else:
             out = [_sync_leaf(ts, g, jax.random.fold_in(key, i), dp)
                    for i, g in enumerate(vals)]
-            resid = None
-        g_mean = jax.tree.unflatten(treedef, out)
+            resid, new_t = None, None
+        result = [jax.tree.unflatten(treedef, out)]
         if ts.error_feedback:
-            return g_mean, jax.tree.unflatten(treedef, [r[None] for r in resid])
-        return g_mean
+            result.append(jax.tree.unflatten(treedef, [r[None] for r in resid]))
+        if ts.adaptive is not None:
+            result.append(jax.tree.map(lambda x: x[None], new_t))
+        return tuple(result) if len(result) > 1 else result[0]
 
-    in_specs = (g_in, P(), g_in) if ts.error_feedback else (g_in, P())
-    out_specs = (g_out, g_in) if ts.error_feedback else g_out
+    in_specs = [g_in, P()]
+    out_specs = [g_out]
+    if ts.error_feedback:
+        in_specs.append(g_in)
+        out_specs.append(g_in)
+    if ts.adaptive is not None:
+        t_spec = jax.tree.map(lambda _: P(dp), adaptive_telemetry.init_telemetry(1))
+        in_specs.append(t_spec)
+        out_specs.append(t_spec)
     return compat.shard_map(
-        sync, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        sync, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=tuple(out_specs) if len(out_specs) > 1 else out_specs[0],
         axis_names=set(mesh.axis_names), check_vma=False,
     )
 
@@ -350,7 +404,11 @@ def make_train_step(
     With ``ts.error_feedback`` the EF residual is an explicit extra pytree in
     the step signature — ``step_fn(params, opt_state, ef_state, batch, step)
     -> (params, opt_state, ef_state, metrics)`` — initialized with
-    :func:`init_ef_state`.
+    :func:`init_ef_state`.  With ``ts.adaptive`` the telemetry state is one
+    more explicit pytree in the slot after the EF residual (or in its place
+    when EF is off) — ``step_fn(params, opt_state[, ef_state], tstate,
+    batch, step) -> (params, opt_state[, ef_state], tstate, metrics)`` —
+    initialized with :func:`init_telemetry_state`.
     """
     if params_like is None:
         params_like = jax.eval_shape(lambda: transformer.init_lm(jax.random.key(0), cfg)[0])
@@ -394,7 +452,11 @@ def make_train_step(
 
         return _tree_map_with_specs(one, grads, pspecs)
 
-    def _step(params, opt_state, ef_state, batch_g, step):
+    adaptive = ts.adaptive is not None
+    if adaptive and not dp:
+        raise ValueError("adaptive telemetry needs data-parallel mesh axes (the sync path)")
+
+    def _step(params, opt_state, ef_state, tstate, batch_g, step):
         with sharding.axis_rules(mesh, rules):
             cbatch, caxes = _client_batch(batch_g, n_clients)
 
@@ -408,12 +470,23 @@ def make_train_step(
             # pin one client per data shard before the manual sync region
             grads = constrain_client_grads(grads)
             key = jax.random.fold_in(jax.random.key(_KEY_SEED), step)
-            new_ef = ef_state
-            if sync_fn is not None and ts.error_feedback:
-                g_mean, new_ef = sync_fn(grads, key, constrain_client_grads(ef_state))
-                new_ef = constrain_client_grads(new_ef)
-            elif sync_fn is not None:
-                g_mean = sync_fn(grads, key)
+            new_ef, new_t = ef_state, tstate
+            if sync_fn is not None:
+                args = [grads, key]
+                if ts.error_feedback:
+                    args.append(constrain_client_grads(ef_state))
+                if adaptive:
+                    args.append(tstate)
+                res = sync_fn(*args)
+                if ts.error_feedback or adaptive:
+                    res = list(res)
+                    g_mean = res.pop(0)
+                    if ts.error_feedback:
+                        new_ef = constrain_client_grads(res.pop(0))
+                    if adaptive:
+                        new_t = res.pop(0)
+                else:
+                    g_mean = res
             else:
                 g_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
             gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g_mean)))
@@ -423,16 +496,26 @@ def make_train_step(
         loss = jnp.mean(losses)
         metrics = {"loss": jnp.full((max(n_dp, 1),), loss, jnp.float32),
                    "gnorm": jnp.full((max(n_dp, 1),), gnorm, jnp.float32)}
-        return new_params, new_opt, new_ef, metrics
+        return new_params, new_opt, new_ef, new_t, metrics
 
-    if ts.error_feedback:
+    if ts.error_feedback and adaptive:
+        @jax.jit
+        def step_fn(params, opt_state, ef_state, tstate, batch_g, step):
+            return _step(params, opt_state, ef_state, tstate, batch_g, step)
+    elif ts.error_feedback:
         @jax.jit
         def step_fn(params, opt_state, ef_state, batch_g, step):
-            return _step(params, opt_state, ef_state, batch_g, step)
+            p, o, e, _, m = _step(params, opt_state, ef_state, None, batch_g, step)
+            return p, o, e, m
+    elif adaptive:
+        @jax.jit
+        def step_fn(params, opt_state, tstate, batch_g, step):
+            p, o, _, t, m = _step(params, opt_state, None, tstate, batch_g, step)
+            return p, o, t, m
     else:
         @jax.jit
         def step_fn(params, opt_state, batch_g, step):
-            p, o, _, m = _step(params, opt_state, None, batch_g, step)
+            p, o, _, _, m = _step(params, opt_state, None, None, batch_g, step)
             return p, o, m
 
     return step_fn, pspecs
@@ -447,3 +530,41 @@ def init_ef_state(params_like: Any, mesh) -> Any:
         n *= mesh.shape[a]
     return jax.tree.map(
         lambda x: jnp.zeros((max(n, 1),) + tuple(x.shape), jnp.float32), params_like)
+
+
+def local_bucket_sizes(params_like: Any, mesh, pspecs: Any, ts: TrainStepConfig) -> tuple[int, ...]:
+    """Element counts of the codec's buckets as seen *inside* the sync region.
+
+    Reproduces the trace-time bucket plan of :func:`_sync_buckets`: each
+    gradient leaf is shrunk to its model-parallel local shard (the manual
+    data/pod axes are the peer axis, not a size divisor) and the local sizes
+    are coalesced by ``core.compressors.plan_buckets``.  The adaptive
+    controller sizes its telemetry state and bit plans from this.
+    """
+    leaves = jax.tree.leaves(params_like)
+    specs = jax.tree.leaves(pspecs, is_leaf=lambda s: isinstance(s, P))
+    sizes = []
+    for x, spec in zip(leaves, specs):
+        entries = _auto_only_entries(spec, mesh)
+        size = 1
+        for d, dim in enumerate(tuple(x.shape)):
+            axes = entries[d] if d < len(entries) else None
+            axes = axes if isinstance(axes, tuple) else (axes,) if axes is not None else ()
+            div = 1
+            for a in axes:
+                div *= mesh.shape[a]
+            size *= dim // div
+        sizes.append(size)
+    return compressors.plan_buckets(sizes, ts.bucket_elements).sizes
+
+
+def init_telemetry_state(params_like: Any, mesh, pspecs: Any, ts: TrainStepConfig) -> Any:
+    """Zero telemetry: one stacked row per client over the bucket-plan-sized
+    :class:`repro.adaptive.TelemetryState` (mirrors :func:`init_ef_state`)."""
+    n_buckets = len(local_bucket_sizes(params_like, mesh, pspecs, ts))
+    dp = sharding.manual_axes(mesh)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    t0 = adaptive_telemetry.init_telemetry(n_buckets)
+    return jax.tree.map(lambda x: jnp.tile(x[None], (max(n, 1),) + (1,) * x.ndim), t0)

@@ -11,7 +11,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from typing import NamedTuple
+
 from . import quantize as _k
+from . import stats as _s
 
 LANES = _k.LANES
 
@@ -108,3 +111,27 @@ def codebook_decode(
     c2, n = _to_2d(codes.astype(jnp.int32))
     vals = _k.codebook_decode_2d(c2, levels.astype(jnp.float32), interpret=interpret)
     return vals.reshape(-1)[:n]
+
+
+class BucketStats(NamedTuple):
+    """One-pass telemetry statistics of a flat gradient bucket."""
+
+    counts: jax.Array    # (NUM_BINS,) log2-spaced |g| histogram counts
+    log_sums: jax.Array  # (NUM_BINS,) per-bin sums of ln|g|
+    g_max: jax.Array     # scalar max |g|
+    g_sum: jax.Array     # scalar sum g
+    g_sumsq: jax.Array   # scalar sum g²
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def bucket_stats(g: jax.Array, *, interpret: bool | None = None) -> BucketStats:
+    """Fused histogram + Hill-sum + max/moments pass (``kernels.stats``).
+
+    Replaces the full-sort quantile in the telemetry hot loop: everything
+    the online power-law tail estimator needs comes out of one VMEM pass.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    g2, n = _to_2d(g.astype(jnp.float32))
+    out = _s.bucket_stats_2d(g2, n, interpret=interpret)
+    return BucketStats(counts=out[0], log_sums=out[1], g_max=out[2, 0],
+                       g_sum=out[3, 0], g_sumsq=out[4, 0])

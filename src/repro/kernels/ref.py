@@ -6,6 +6,8 @@ reference paths can be compared bit-exactly).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -52,3 +54,52 @@ def codebook_encode(g: jax.Array, levels: jax.Array, rand: jax.Array) -> jax.Arr
 
 def codebook_decode(codes: jax.Array, levels: jax.Array) -> jax.Array:
     return jnp.take(levels, codes.astype(jnp.int32))
+
+
+def bucket_stats(g: jax.Array) -> jax.Array:
+    """Blockwise jnp oracle for ``stats.bucket_stats_2d``.
+
+    Walks the padded (rows, 128) layout in the kernel's BLOCK_ROWS grid
+    order, builds each block's log2-spaced histogram / ln-sum / max / moment
+    partials with the same one-hot-matmul reduction, and folds them with the
+    same add-or-maximum merge — so kernel and oracle agree bit-for-bit
+    (interpret mode executes identical ops in identical order).
+    """
+    from . import stats as S
+
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    rows = -(-n // S.LANES)
+    blocks = -(-rows // S.BLOCK_ROWS)
+    padded = jnp.pad(flat, (0, blocks * S.BLOCK_ROWS * S.LANES - n))
+    w = (S.LOG2_HI - S.LOG2_LO) / S.NUM_BINS
+    acc = jnp.zeros((S.STATS_ROWS, S.NUM_BINS), jnp.float32)
+    for i in range(blocks):
+        m = S.BLOCK_ROWS * S.LANES
+        gb = padded[i * m:(i + 1) * m].reshape(S.BLOCK_ROWS, S.LANES)
+        valid = (jnp.arange(i * m, (i + 1) * m) < n).reshape(S.BLOCK_ROWS, S.LANES)
+        vmask = valid.astype(jnp.float32)
+        gabs = jnp.abs(gb) * vmask
+        lnab = jnp.log(jnp.maximum(gabs, 1e-30))
+        b = jnp.clip(jnp.floor((lnab / math.log(2.0) - S.LOG2_LO) / w),
+                     0.0, S.NUM_BINS - 1.0)
+        b = jnp.where(valid, b, -1.0)
+        iota = jax.lax.broadcasted_iota(jnp.float32, (m, S.NUM_BINS), 1)
+        onehot = (iota == b.reshape(m)[:, None]).astype(jnp.float32)
+        counts = jnp.ones((1, m), jnp.float32) @ onehot
+        logsum = (lnab * vmask).reshape(1, m) @ onehot
+        gv = gb * vmask
+        part = jnp.concatenate(
+            [
+                counts,
+                logsum,
+                jnp.full((1, S.NUM_BINS), jnp.max(gabs), jnp.float32),
+                jnp.full((1, S.NUM_BINS), jnp.sum(gv), jnp.float32),
+                jnp.full((1, S.NUM_BINS), jnp.sum(gv * gv), jnp.float32),
+                jnp.zeros((S.STATS_ROWS - 5, S.NUM_BINS), jnp.float32),
+            ],
+            axis=0,
+        )
+        row = jax.lax.broadcasted_iota(jnp.int32, (S.STATS_ROWS, S.NUM_BINS), 0)
+        acc = jnp.where(row == 2, jnp.maximum(acc, part), acc + part)
+    return acc

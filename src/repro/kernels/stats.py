@@ -1,0 +1,131 @@
+"""Fused Pallas bucket-statistics kernel for the adaptive telemetry pass.
+
+One VMEM pass over a flat fp32 bucket produces everything the online tail
+estimator needs — replacing the per-step full sort (``jnp.quantile``) the
+offline fit uses:
+
+- per-bin counts of a 128-bin log2-spaced |g| histogram (bin 0 catches
+  underflow/zeros, bin K-1 catches overflow);
+- per-bin sums of ln|g| (the Hill-estimator accumulator: the tail's
+  ``sum log(g_j/g_min)`` is a suffix sum of these minus ``n_tail ln g_min``);
+- max |g|, sum g, sum g² (scale envelope + EMA moments).
+
+Tiling matches the quantize kernels: (rows, 128) fp32 input blocked
+(BLOCK_ROWS, 128) per grid step; every grid step accumulates into the same
+(8, 128) output tile (row 0 counts, row 1 log-sums, row 2 max, row 3 sum,
+row 4 sum-of-squares — max rows combine with ``maximum``, the rest add).
+The per-block histogram is built from a one-hot (block_elems, 128) compare
+matrix reduced on the MXU; BLOCK_ROWS=64 keeps that matrix at 4 MB.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 64          # 64·128 elems/block -> (8192, 128) one-hot = 4 MB VMEM
+
+NUM_BINS = 128           # == LANES so one output row holds the histogram
+LOG2_LO = -24.0          # |g| below 2^-24 (incl. zeros) lands in bin 0
+LOG2_HI = 8.0            # |g| above 2^8 lands in bin NUM_BINS-1
+STATS_ROWS = 8           # output tile rows (5 used, see module docstring)
+
+_LN2 = math.log(2.0)
+_TINY = 1e-30            # ln argument floor for exact zeros
+
+
+def bin_edges() -> jax.Array:
+    """(NUM_BINS+1,) |g| bin edges: edges[0]=0, edges[k]=2^(LO+k·w) else.
+
+    Bin k covers [edges[k], edges[k+1]); the telemetry quantile snaps to an
+    upper edge so tail sums over whole bins are exact w.r.t. the histogram.
+    """
+    w = (LOG2_HI - LOG2_LO) / NUM_BINS
+    e = jnp.exp2(LOG2_LO + w * jnp.arange(NUM_BINS + 1, dtype=jnp.float32))
+    return e.at[0].set(0.0)
+
+
+def _block_stats(g: jax.Array, valid: jax.Array) -> jax.Array:
+    """(BM, 128) fp32 + validity mask -> (STATS_ROWS, NUM_BINS) partials."""
+    bm = g.shape[0]
+    n = bm * LANES
+    vmask = valid.astype(jnp.float32)
+    gabs = jnp.abs(g) * vmask
+    lnab = jnp.log(jnp.maximum(gabs, _TINY))
+    w = (LOG2_HI - LOG2_LO) / NUM_BINS
+    b = jnp.floor((lnab / _LN2 - LOG2_LO) / w)
+    b = jnp.clip(b, 0.0, NUM_BINS - 1.0)
+    b = jnp.where(valid, b, -1.0)                     # padding matches no bin
+    flat_b = b.reshape(n)
+    iota = jax.lax.broadcasted_iota(jnp.float32, (n, NUM_BINS), 1)
+    onehot = (iota == flat_b[:, None]).astype(jnp.float32)
+    counts = (jnp.ones((1, n), jnp.float32) @ onehot)             # (1, K)
+    logsum = ((lnab * vmask).reshape(1, n) @ onehot)              # (1, K)
+    gv = g * vmask
+    gmax = jnp.max(gabs)
+    gsum = jnp.sum(gv)
+    gsq = jnp.sum(gv * gv)
+    return jnp.concatenate(
+        [
+            counts,
+            logsum,
+            jnp.full((1, NUM_BINS), gmax, jnp.float32),
+            jnp.full((1, NUM_BINS), gsum, jnp.float32),
+            jnp.full((1, NUM_BINS), gsq, jnp.float32),
+            jnp.zeros((STATS_ROWS - 5, NUM_BINS), jnp.float32),
+        ],
+        axis=0,
+    )
+
+
+def _merge(acc: jax.Array, part: jax.Array) -> jax.Array:
+    """Combine two stats tiles: row 2 (max) joins with maximum, the rest add."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (STATS_ROWS, NUM_BINS), 0)
+    return jnp.where(row == 2, jnp.maximum(acc, part), acc + part)
+
+
+def _bucket_stats_kernel(n_ref, g_ref, out_ref):
+    g = g_ref[...]
+    bm = g.shape[0]
+    base = pl.program_id(0) * bm
+    row = jax.lax.broadcasted_iota(jnp.int32, (bm, LANES), 0) + base
+    col = jax.lax.broadcasted_iota(jnp.int32, (bm, LANES), 1)
+    valid = row * LANES + col < n_ref[0]
+    part = _block_stats(g, valid)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] = _merge(out_ref[...], part)
+
+
+def bucket_stats_2d(g: jax.Array, n: int, *, interpret: bool) -> jax.Array:
+    """g: (rows, 128) fp32, n true elements -> (STATS_ROWS, NUM_BINS) fp32."""
+    rows = g.shape[0]
+    grid = (pl.cdiv(rows, BLOCK_ROWS),)
+    return pl.pallas_call(
+        _bucket_stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=None),       # n: full (1,) operand
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((STATS_ROWS, NUM_BINS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((STATS_ROWS, NUM_BINS), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray([n], jnp.int32), g)
+
+
+__all__ = [
+    "BLOCK_ROWS",
+    "LOG2_HI",
+    "LOG2_LO",
+    "NUM_BINS",
+    "STATS_ROWS",
+    "bin_edges",
+    "bucket_stats_2d",
+]

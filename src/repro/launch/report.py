@@ -73,6 +73,24 @@ def dryrun_table(recs) -> str:
     return "\n".join(rows)
 
 
+def adaptive_table(sizes, bits, alphas=None, gammas=None, rhos=None) -> str:
+    """Markdown table of one adaptive bit plan: per-bucket elements, wire
+    bits, solver α and (when known) the telemetry-estimated tail (γ, ρ).
+    Used by ``launch.train --adaptive`` and ``examples/train_8clients.py``."""
+    n = len(sizes)
+    alphas = list(alphas) if alphas else [None] * n
+    gammas = list(gammas) if gammas is not None else [None] * n
+    rhos = list(rhos) if rhos is not None else [None] * n
+    rows = ["| bucket | elements | bits | alpha | gamma | rho |",
+            "|---|---|---|---|---|---|"]
+    fmt = lambda v, spec: format(float(v), spec) if v is not None else "-"
+    for b in range(n):
+        rows.append(
+            f"| {b} | {sizes[b]} | {bits[b]} | {fmt(alphas[b], '.3e')} "
+            f"| {fmt(gammas[b], '.2f')} | {fmt(rhos[b], '.3f')} |")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default=str(RUNS))

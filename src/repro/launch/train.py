@@ -52,6 +52,13 @@ def main(argv=None) -> int:
                     help="bucketed-codec target bucket size; 0 = per-leaf codec")
     ap.add_argument("--ef", action="store_true",
                     help="error feedback on the worker-side compressor (not checkpointed)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="online tail telemetry + wire-budget bit allocation per bucket")
+    ap.add_argument("--wire-budget-mb", type=float, default=0.0,
+                    help="adaptive wire budget (bytes/step, MB); 0 = match the "
+                         "fixed --bits allocation")
+    ap.add_argument("--replan-every", type=int, default=10,
+                    help="steps between adaptive bit replans")
     ap.add_argument("--optimizer", default="momentum_sgd")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--ckpt-dir", default=None)
@@ -68,11 +75,31 @@ def main(argv=None) -> int:
 
     params, logical = init_lm(jax.random.key(0), cfg)
     opt = get_optimizer(args.optimizer, lr=args.lr) if args.optimizer == "momentum_sgd" else get_optimizer(args.optimizer)
-    ts = TrainStepConfig(sync=args.sync, compressor=CompressorConfig(method=args.method, bits=args.bits),
-                         bucket_mb=args.bucket_mb, error_feedback=args.ef)
+    acfg = None
+    if args.adaptive:
+        from repro.adaptive.controller import AdaptiveConfig
+
+        acfg = AdaptiveConfig(wire_budget_mb=args.wire_budget_mb,
+                              replan_every=args.replan_every)
+    ts = TrainStepConfig(sync=args.sync,
+                         compressor=CompressorConfig(method=args.method, bits=args.bits,
+                                                     approx_gmin=args.adaptive),
+                         bucket_mb=args.bucket_mb, error_feedback=args.ef, adaptive=acfg)
     batch0 = lm_batch(cfg, jnp.uint32(0), args.batch, args.seq)
     opt_state = opt.init(params)
-    step_fn, pspecs = make_train_step(cfg, mesh, logical, opt, ts, batch0, opt_state_like=jax.eval_shape(lambda: opt_state))
+    stepper = None
+    if args.adaptive:
+        from repro.adaptive.runtime import AdaptiveStepper
+
+        stepper = AdaptiveStepper(cfg, mesh, logical, opt, ts, batch0,
+                                  opt_state_like=jax.eval_shape(lambda: opt_state),
+                                  params_like=params)
+        pspecs = stepper.pspecs
+        print(f"adaptive: {len(stepper.sizes)} buckets, wire budget "
+              f"{stepper.budget/2**20:.2f} MB/step, replan every {acfg.replan_every}")
+    else:
+        step_fn, pspecs = make_train_step(cfg, mesh, logical, opt, ts, batch0,
+                                          opt_state_like=jax.eval_shape(lambda: opt_state))
 
     sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P))
     start = 0
@@ -87,10 +114,23 @@ def main(argv=None) -> int:
     opt_state = jax.device_put(opt_state, jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
                                                        is_leaf=lambda x: isinstance(x, _P)))
     ef_state = init_ef_state(params, mesh) if args.ef else None
+    tstate = stepper.init_telemetry() if stepper is not None else None
 
     for i in range(start, start + args.steps):
         b = lm_batch(cfg, jnp.uint32(i), args.batch, args.seq)
-        if args.ef:
+        if stepper is not None:
+            prev_bits = stepper.bits
+            params, opt_state, ef_state, tstate, m = stepper.step(
+                params, opt_state, ef_state, tstate, b, i)
+            if stepper.bits != prev_bits:
+                from repro.launch.report import adaptive_table
+                plan, tails = stepper.plan, stepper.tails
+                print(f"step {i}: replanned bits -> {plan.bits} "
+                      f"({plan.spend_bytes}/{plan.budget_bytes} B/step)")
+                print(adaptive_table(stepper.sizes, plan.bits, plan.alphas,
+                                     gammas=None if tails is None else tails.gamma,
+                                     rhos=None if tails is None else tails.rho))
+        elif args.ef:
             params, opt_state, ef_state, m = step_fn(params, opt_state, ef_state, b, jnp.uint32(i))
         else:
             params, opt_state, m = step_fn(params, opt_state, b, jnp.uint32(i))

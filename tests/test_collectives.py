@@ -92,3 +92,42 @@ def test_rejects_bad_inputs():
         wire_bytes_per_device(cfg, N, SHARDS, "ring")
     with pytest.raises(ValueError):
         wire_bytes_per_device(cfg, N, 0, "faithful")
+
+
+def test_wire_bytes_heterogeneous_bits():
+    """Adaptive wire format: per-bucket bit widths sum per-bucket costs."""
+    cfg = CompressorConfig(method="tnqsgd", bits=3)
+    sizes = [1000, 2000, 31]
+    bits = [2, 4, 8]
+    # decomposition: total == sum of the scalar calls
+    assert wire_bytes(cfg, sizes, bits) == sum(
+        wire_bytes(cfg, n, b) for n, b in zip(sizes, bits))
+    # scalar-bits overrides cfg.bits; None keeps it
+    assert wire_bytes(cfg, 1000, 5) == wire_bytes(
+        CompressorConfig(method="tnqsgd", bits=5), 1000)
+    assert wire_bytes(cfg, sizes) == sum(wire_bytes(cfg, n) for n in sizes)
+    # a uniform per-bucket plan equals the scalar path exactly
+    assert wire_bytes(cfg, sizes, [3, 3, 3]) == wire_bytes(cfg, sizes)
+    # per-element view uses the total element count
+    assert wire_bits_per_element(cfg, sizes, bits) == pytest.approx(
+        8.0 * wire_bytes(cfg, sizes, bits) / sum(sizes))
+    with pytest.raises(ValueError):
+        wire_bytes(cfg, 1000, [2, 3])          # bits list without bucket sizes
+    with pytest.raises(ValueError):
+        wire_bytes(cfg, sizes, [2, 3])         # length mismatch
+    with pytest.raises(ValueError):
+        wire_bytes(cfg, 1000, 9)               # out-of-range width
+
+
+def test_wire_bytes_per_device_heterogeneous():
+    """Mode chunking applies per bucket for sequence inputs."""
+    cfg = CompressorConfig(method="tnqsgd", bits=3)
+    sizes = [400_000, 600_000]
+    bits = [2, 4]
+    for mode in ("two_phase", "faithful", "hierarchical"):
+        got = wire_bytes_per_device(cfg, sizes, SHARDS, mode, bits)
+        want = sum(wire_bytes_per_device(cfg, n, SHARDS, mode, b)
+                   for n, b in zip(sizes, bits))
+        assert got == pytest.approx(want), mode
+    with pytest.raises(ValueError):
+        wire_bytes_per_device(cfg, sizes, SHARDS, "faithful", [2])

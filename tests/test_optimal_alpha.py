@@ -1,0 +1,74 @@
+"""Property test for the α fixed-point solvers (paper Eq. 12 / Eq. 19):
+the solved threshold must land within tolerance of the argmin of the
+closed-form ``theory.e_tq_*`` error over a dense α grid, across a sweep of
+tail indices γ, tail masses ρ, and bit widths."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import distributions as D
+from repro.core import optimal as O
+from repro.core import theory as Th
+from repro.core.distributions import PowerLawTail
+
+UNIFORM_CASES = [
+    (3.3, 0.25, 2),
+    (3.6, 0.15, 3),
+    (4.2, 0.10, 4),
+    (4.8, 0.05, 3),
+    (4.0, 0.20, 5),
+]
+
+
+def _grid(lo: float, hi: float, n: int = 600) -> jax.Array:
+    return jnp.exp(jnp.linspace(jnp.log(lo), jnp.log(hi), n))
+
+
+@pytest.mark.parametrize("gamma,rho,bits", UNIFORM_CASES)
+def test_solve_alpha_uniform_matches_grid_argmin(gamma, rho, bits):
+    """Eq. 12's fixed point is (near-)exact for the uniform scheme: the
+    solver's error is within 2% of the dense-grid minimum of Eq. 11 and the
+    threshold itself within ~25% of the grid argmin."""
+    tail = PowerLawTail(gamma=jnp.float32(gamma), g_min=jnp.float32(0.01),
+                        rho=jnp.float32(rho), g_max=jnp.float32(30.0))
+    grid = _grid(0.01, 30.0)
+    errs = jax.vmap(lambda a: Th.e_tq_uniform(tail, a, bits))(grid)
+    i = int(jnp.argmin(errs))
+    assert 0 < i < grid.size - 1, "grid argmin must be interior"
+    a_star, e_star = float(grid[i]), float(errs[i])
+    a_sol = float(O.solve_alpha_uniform(tail, bits))
+    e_sol = float(Th.e_tq_uniform(tail, jnp.float32(a_sol), bits))
+    assert e_sol <= 1.02 * e_star, (e_sol, e_star)
+    assert 0.8 <= a_sol / a_star <= 1.25, (a_sol, a_star)
+
+
+@pytest.mark.parametrize("gamma,rho,bits", [(3.4, 0.2, 3), (4.0, 0.1, 4), (4.5, 0.15, 3)])
+def test_solve_alpha_nonuniform_matches_grid_argmin(gamma, rho, bits):
+    """Eq. 19 optimizes the Theorem-2 bound, not the exact integral, so the
+    tolerance is looser: the solver's e_tq_nonuniform stays within 30% of
+    the dense-grid minimum (and far from the boundary blow-ups)."""
+    g = D.sample_power_law(jax.random.key(int(gamma * 10)), (200_000,),
+                           gamma=gamma, g_min=0.01, rho=rho)
+    tail = D.fit_power_law_tail(g)
+    dens = D.fit_empirical_density(g)
+    grid = _grid(float(tail.g_min), float(tail.g_max), 400)
+    errs = jax.vmap(lambda a: Th.e_tq_nonuniform(tail, dens, a, bits))(grid)
+    i = int(jnp.argmin(errs))
+    assert 0 < i < grid.size - 1, "grid argmin must be interior"
+    e_star = float(errs[i])
+    a_sol = float(O.solve_alpha_nonuniform(tail, dens, bits))
+    e_sol = float(Th.e_tq_nonuniform(tail, dens, jnp.float32(a_sol), bits))
+    assert e_sol <= 1.3 * e_star, (e_sol, e_star)
+
+
+def test_e_tq_nonuniform_below_uniform_at_common_alpha():
+    """Hölder ordering carried into the error model: at the same α and bits,
+    the λ ∝ p^(1/3) codebook's variance term never exceeds the uniform one."""
+    g = D.sample_power_law(jax.random.key(7), (200_000,), gamma=3.8, g_min=0.01, rho=0.15)
+    tail = D.fit_power_law_tail(g)
+    dens = D.fit_empirical_density(g)
+    for bits in (2, 3, 4):
+        a = O.solve_alpha_uniform(tail, bits)
+        e_n = float(Th.e_tq_nonuniform(tail, dens, a, bits))
+        e_u = float(Th.e_tq_uniform(tail, a, bits))
+        assert e_n <= e_u * 1.02, (bits, e_n, e_u)

@@ -115,3 +115,39 @@ def test_bound_decreases_with_bits(g):
     tail = fit_power_law_tail(g)
     vals = [float(T.e_tq_bound(tail, jnp.float32(1.0), b)) for b in (2, 3, 4, 5)]
     assert all(v2 < v1 for v1, v2 in zip(vals, vals[1:]))
+
+
+def test_approx_quantile_agrees_with_exact(g):
+    """The O(n) histogram quantile (hot-loop path) pins to the full-sort
+    quantile within 2% across the useful range, and the resulting tail fit
+    is indistinguishable for downstream α solving."""
+    gabs = jnp.abs(g)
+    for q in (0.5, 0.9, 0.95, 0.99):
+        exact = float(jnp.quantile(gabs, q))
+        approx = float(D.approx_abs_quantile(gabs, q))
+        assert abs(approx - exact) / exact < 0.02, (q, exact, approx)
+    t_exact = fit_power_law_tail(g)
+    t_approx = fit_power_law_tail(g, approx_quantile=True)
+    assert abs(float(t_exact.gamma) - float(t_approx.gamma)) < 0.05
+    assert abs(float(t_exact.g_min) - float(t_approx.g_min)) / float(t_exact.g_min) < 0.02
+    a_exact = float(O.solve_alpha_uniform(t_exact, bits=3))
+    a_approx = float(O.solve_alpha_uniform(t_approx, bits=3))
+    assert abs(a_exact - a_approx) / a_exact < 0.05
+
+
+def test_approx_gmin_compressor_path(g):
+    """CompressorConfig(approx_gmin=True) routes the plan through the
+    histogram quantile and changes the MSE only marginally."""
+    from repro.core.compressors import plan
+
+    for method in ("tqsgd", "tnqsgd"):
+        exact_cfg = CompressorConfig(method=method, bits=3)
+        approx_cfg = CompressorConfig(method=method, bits=3, approx_gmin=True)
+        m_exact = plan(exact_cfg, g)
+        m_approx = plan(approx_cfg, g)
+        assert abs(float(m_exact.alpha) - float(m_approx.alpha)) / float(m_exact.alpha) < 0.1
+        out = compress_decompress(approx_cfg, g, jax.random.key(11))
+        ref = compress_decompress(exact_cfg, g, jax.random.key(11))
+        mse_a = float(jnp.mean((out - g) ** 2))
+        mse_e = float(jnp.mean((ref - g) ** 2))
+        assert mse_a < mse_e * 1.15, (method, mse_a, mse_e)
