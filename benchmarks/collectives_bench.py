@@ -17,7 +17,7 @@ import sys
 import textwrap
 
 from repro.core.compressors import CompressorConfig
-from repro.dist.collectives import wire_bytes_per_device
+from repro.dist.collectives import decode_hbm_bytes, wire_bytes_per_device
 
 RUNS = pathlib.Path(__file__).resolve().parents[1] / "runs" / "dryrun"
 ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -118,6 +118,22 @@ def main(quick: bool = False):
         uni = wire_bytes_per_device(cfg, bsizes, shards, mode)
         rows.append(f"collectives,adaptive_2244_{mode}_bytes_1B,0,{het:.3e}")
         rows.append(f"collectives,adaptive_2244_{mode}_vs_uniform3,0,{uni/het:.4f}")
+
+    # decode-side HBM traffic: the fused unpack→dequant→reduce kernels read
+    # the packed wire once and write the (n,) mean, vs the unfused path that
+    # round-trips the (peers, n) unpacked code and value tensors through HBM.
+    cfg = CompressorConfig(method="tnqsgd", bits=3)
+    for bits in (2, 3, 4, 8):
+        un = decode_hbm_bytes(cfg, n, shards, fused=False, bits=bits)
+        fu = decode_hbm_bytes(cfg, n, shards, fused=True, bits=bits)
+        rows.append(f"collectives,decode_b{bits}_unfused_hbm_1B,0,{un:.3e}")
+        rows.append(f"collectives,decode_b{bits}_fused_hbm_1B,0,{fu:.3e}")
+        rows.append(f"collectives,decode_b{bits}_fused_vs_unfused,0,{un / fu:.2f}")
+    # the adaptive heterogeneous wire decodes bucket-by-bucket through the
+    # same fused kernels — the accounting is the per-bucket sum
+    un = decode_hbm_bytes(cfg, bsizes, shards, fused=False, bits=[2, 2, 4, 4])
+    fu = decode_hbm_bytes(cfg, bsizes, shards, fused=True, bits=[2, 2, 4, 4])
+    rows.append(f"collectives,decode_adaptive_2244_fused_vs_unfused,0,{un / fu:.2f}")
 
     # bucketed codec vs per-leaf codec on a live 4-device host mesh — skipped
     # in quick mode (CI smoke): the tier-1 test job runs the same script via

@@ -51,6 +51,68 @@ def main(quick: bool = False):
     f_dec = jax.jit(lambda c: ops.codebook_decode(c, levels))
     us = time_us(f_dec, codes, repeats=5)
     rows.append(f"kernels,pallas_codebook_decode_{n},{us:.0f},{n/us/1e3:.2f}")
+
+    rows.extend(_decode_reduce_rows(quick))
+    return rows
+
+
+def _decode_reduce_rows(quick: bool) -> list:
+    """Fused decode-reduce vs the unfused unpack→dequant→mean pipeline.
+
+    Derived column: effective GB/s over the decode-side HBM traffic model
+    (``dist.collectives.decode_hbm_bytes``).  The equal-results contract is
+    asserted here (maxdiff row): fused and unfused decode the same wire to
+    the same mean up to summation-order ulps.
+    """
+    from repro.core.quantizers import pack_codes, unpack_codes
+    from repro.dist.collectives import decode_hbm_bytes
+    from repro.core.compressors import CompressorConfig
+
+    bits, peers = 3, 8
+    n = 2**16 if quick else 2**18
+    key = jax.random.key(5)
+    codes = jax.random.randint(key, (peers, n), 0, 2**bits).astype(jnp.uint8)
+    words = jnp.stack([pack_codes(codes[j], bits) for j in range(peers)])
+    levels = jnp.sort(jax.random.uniform(jax.random.fold_in(key, 1), (peers, 2**bits),
+                                         minval=-0.1, maxval=0.1), axis=1)
+    alphas = levels[:, -1]
+    cfg = CompressorConfig(method="tnqsgd", bits=bits)
+    hbm_fused = decode_hbm_bytes(cfg, n, peers, fused=True)
+    hbm_unfused = decode_hbm_bytes(cfg, n, peers, fused=False)
+    rows = [f"kernels,decode_hbm_fused_vs_unfused_{n},0,{hbm_unfused / hbm_fused:.2f}"]
+
+    f_fused = jax.jit(lambda w, lv: ops.codebook_decode_reduce(w, lv, n, bits))
+    us = time_us(f_fused, words, levels, repeats=5)
+    rows.append(f"kernels,pallas_codebook_decode_reduce_{n}x{peers},{us:.0f},"
+                f"{hbm_fused / us / 1e3:.2f}")
+
+    @jax.jit
+    def unfused(w, lv):
+        c = jax.vmap(lambda row: unpack_codes(row, n, bits))(w)
+        return jnp.mean(jax.vmap(lambda cc, l: jnp.take(l, cc.astype(jnp.int32)))(c, lv),
+                        axis=0)
+
+    us = time_us(unfused, words, levels, repeats=5)
+    rows.append(f"kernels,unfused_decode_mean_{n}x{peers},{us:.0f},"
+                f"{hbm_unfused / us / 1e3:.2f}")
+
+    diff = float(jnp.max(jnp.abs(f_fused(words, levels) - unfused(words, levels))))
+    rows.append(f"kernels,decode_fused_vs_unfused_maxdiff,0,{diff:.1e}")
+    assert diff < 1e-6, f"fused decode-reduce diverged from the unfused mean: {diff}"
+
+    f_uni = jax.jit(lambda w, a: ops.uniform_decode_reduce(w, a, n, bits))
+    us = time_us(f_uni, words, alphas, repeats=5)
+    rows.append(f"kernels,pallas_uniform_decode_reduce_{n}x{peers},{us:.0f},"
+                f"{hbm_fused / us / 1e3:.2f}")
+
+    # the rows (no-reduce) kernel writes the full (peers, n) output — its
+    # traffic model is the fused wire read plus that payload, not the (n,)
+    # mean the reduce model charges
+    hbm_rows = hbm_fused - 4.0 * n + 4.0 * peers * n
+    f_rows = jax.jit(lambda w, lv: ops.codebook_decode_rows(w, lv, n, bits))
+    us = time_us(f_rows, words, levels, repeats=5)
+    rows.append(f"kernels,pallas_codebook_decode_rows_{n}x{peers},{us:.0f},"
+                f"{hbm_rows / us / 1e3:.2f}")
     return rows
 
 

@@ -122,7 +122,22 @@ def decode(cfg: CompressorConfig, wire: jax.Array, meta: QuantMeta, shape: tuple
     n = 1
     for d in shape:
         n *= d
-    codes = unpack_codes(wire, n, cfg.bits) if cfg.pack else wire
+    if cfg.pack:
+        from .quantizers import packed_size
+
+        expected = packed_size(n, cfg.bits)
+        if wire.shape != (expected,):
+            # unpack_codes would silently truncate (or read garbage from) a
+            # wire whose packed length disagrees with shape/bits
+            raise ValueError(
+                f"wire has shape {tuple(wire.shape)}; {n} elements at "
+                f"{cfg.bits} bits need ({expected},) packed uint32 words")
+        codes = unpack_codes(wire, n, cfg.bits)
+    else:
+        if wire.shape != (n,):
+            raise ValueError(
+                f"unpacked wire has shape {tuple(wire.shape)}; expected ({n},) codes")
+        codes = wire
     return _decode(codes, meta).reshape(shape)
 
 

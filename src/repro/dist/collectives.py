@@ -55,3 +55,32 @@ def wire_bytes_per_device(cfg: CompressorConfig, n, shards: int, mode: str, bits
     # hierarchical: intra-pod two-phase chunk + the pod-mean faithful
     # exchange across pods, spread over the pod's members.
     return float(wire_bytes(cfg, chunk, bits)) + wire_bytes(cfg, n, bits) / shards
+
+
+def decode_hbm_bytes(cfg: CompressorConfig, n, peers: int, fused: bool, bits=None) -> float:
+    """HBM bytes one device moves to decode + average ``peers`` gathered
+    n-element wire rows (the decode half of ``faithful`` / the reduce side of
+    ``two_phase``).
+
+    - unfused (the pre-fusion ``vmap(unpack_codes)`` → ``take`` → ``mean``
+      path): reads the packed words, then writes *and re-reads* the
+      (peers, n) int32 unpacked code tensor and the (peers, n) fp32
+      dequantized tensor before reducing to the (n,) output;
+    - fused (``kernels.decode``): reads the packed words once and writes the
+      (n,) mean once — codes and values never leave VMEM.
+
+    Both include the per-peer codebook reads.  ``n``/``bits`` may be
+    per-bucket sequences (the adaptive fused wire format); the cost sums.
+    """
+    if isinstance(n, (list, tuple)):
+        bl = bits if isinstance(bits, (list, tuple)) else [bits] * len(n)
+        if len(bl) != len(n):
+            raise ValueError(f"{len(bl)} bit-widths vs {len(n)} buckets")
+        return sum(decode_hbm_bytes(cfg, nb, peers, fused, b) for nb, b in zip(n, bl))
+    from repro.core.quantizers import num_levels, packed_size
+
+    b = cfg.bits if bits is None else int(bits)
+    words = 4.0 * peers * packed_size(n, b) + 4.0 * peers * (num_levels(b) + 1)
+    if fused:
+        return words + 4.0 * n
+    return words + 2 * 4.0 * peers * n + 2 * 4.0 * peers * n + 4.0 * n

@@ -1,0 +1,280 @@
+"""Single-device reference of the sharded gradient-sync collectives.
+
+Replays exactly what ``train_step._make_sync_fn``'s shard_map body computes
+on an (pods…, data) mesh — same bucket plan, same per-peer RNG folding, same
+encode/decode helpers — but with every collective replaced by explicit
+indexing over a stacked peer axis on one device:
+
+- ``all_gather_stacked``  →  the stacked array itself;
+- ``all_to_all_rows``     →  a transpose of the stacked chunk rows;
+- ``flat_axis_index``     →  the row index (row-major over the dp axes).
+
+The *local* codec ops are not re-implemented: planning, encoding and the
+fused decode go through the very same ``sharded_codec`` helpers the mesh
+path calls (``_plan_encode_rows``, ``_encode_flat``, ``_encode_packed_flat``,
+``decode_reduce``, ``decode_rows``), so under a common jit the reference is
+**bit-identical** to the mesh result for every compressed mode — only the
+collective wiring and key folding are spelled out here, which is precisely
+what ``tests/test_mesh_invariance.py`` pins.  (``dsgd`` uses ``jnp.mean``
+where the mesh runs ``lax.pmean``; the all-reduce's summation order is the
+partitioner's, so that one mode is compared within float tolerance.)
+
+``tests/test_golden_convergence.py`` reuses :func:`reference_sync` to run
+fixed-seed multi-client training per sync mode without devices, so codec
+refactors that silently bias the mean fail tier-1.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressors
+from repro.core.compressors import CompressorConfig, plan
+from repro.core.quantizers import pack_codes
+
+from . import sharded_codec as sc
+
+
+def _fold(key: jax.Array, i: int) -> jax.Array:
+    """``sc._peer_key`` for the peer whose flat axis index is ``i``."""
+    return jax.random.fold_in(key, i)
+
+
+def _in_keys(key, n: int) -> list:
+    """Per-peer *incoming* key list: collectives normally receive one
+    replicated key, but the hierarchical intra-pod phase hands each peer an
+    already-folded key — accept both."""
+    return list(key) if isinstance(key, (list, tuple)) else [key] * n
+
+
+# ---------------------------------------------------------------------------
+# Single-tensor modes (the per-leaf codec, ``bucket_mb=0``)
+# ---------------------------------------------------------------------------
+
+
+def faithful_ring_mean(cfg: CompressorConfig, stacked: jax.Array, key,
+                       use_pallas: bool = False) -> jax.Array:
+    """``sc.faithful_ring_mean`` over ``stacked`` (n, m) per-peer tensors."""
+    n = stacked.shape[0]
+    keys = _in_keys(key, n)
+    if n == 1:
+        flat = stacked[0].reshape(-1).astype(jnp.float32)
+        meta = plan(cfg, flat)
+        codes = sc._encode_flat(cfg, flat, meta, keys[0], use_pallas)
+        return jnp.take(meta.levels, codes.astype(jnp.int32))
+    words, levels = [], []
+    for i in range(n):
+        flat = stacked[i].reshape(-1).astype(jnp.float32)
+        meta = plan(cfg, flat)
+        codes = sc._encode_flat(cfg, flat, meta, _fold(keys[i], i), use_pallas)
+        words.append(pack_codes(codes, cfg.bits))
+        levels.append(meta.levels)
+    m = stacked.shape[1]
+    return sc.decode_reduce(cfg, jnp.stack(words), jnp.stack(levels), m, use_pallas)
+
+
+def two_phase_mean(cfg: CompressorConfig, stacked: jax.Array, key,
+                   use_pallas: bool = False) -> jax.Array:
+    """``sc.two_phase_mean`` over ``stacked`` (n, m): compressed
+    reduce-scatter then compressed all-gather, identical on every peer."""
+    n, size = stacked.shape
+    if n == 1:
+        return stacked[0]
+    keys = [jax.random.split(_fold(k, j)) for j, k in enumerate(_in_keys(key, n))]
+    pad = (-size) % n
+    m = (size + pad) // n
+    # Phase 1 (reduce-scatter): peer i packs its n chunk rows; peer j decodes
+    # row j of every peer (the all-to-all transpose) into its mean chunk.
+    words, levels = [], []
+    for i in range(n):
+        flats = jnp.pad(stacked[i].astype(jnp.float32), (0, pad)).reshape(n, m)
+        w, metas = sc._plan_encode_rows(cfg, flats, _fold(keys[i][0], i), use_pallas)
+        words.append(w)
+        levels.append(metas.levels)
+    chunks = [
+        sc.decode_reduce(cfg, jnp.stack([words[i][j] for i in range(n)]),
+                         jnp.stack([levels[i][j] for i in range(n)]), m, use_pallas)
+        for j in range(n)
+    ]
+    # Phase 2 (all-gather): each peer re-quantizes its mean chunk.
+    words2, levels2 = [], []
+    for j in range(n):
+        meta2 = plan(cfg, chunks[j])
+        codes2 = sc._encode_flat(cfg, chunks[j], meta2, keys[j][1], use_pallas)
+        words2.append(pack_codes(codes2, cfg.bits))
+        levels2.append(meta2.levels)
+    full = sc.decode_rows(cfg, jnp.stack(words2), jnp.stack(levels2), m, use_pallas)
+    return full.reshape(n * m)[:size]
+
+
+def hierarchical_mean(cfg: CompressorConfig, stacked: jax.Array, n_pod: int, key,
+                      use_pallas: bool = False) -> jax.Array:
+    """``train_step._sync_leaf``'s hierarchical composition: two-phase inside
+    each pod's data axis, faithful exchange of the pod means across pods."""
+    n = stacked.shape[0]
+    nd = n // n_pod
+    k1, k2 = jax.random.split(key)
+    pod_means = []
+    for p in range(n_pod):
+        in_keys = [_fold(k1, p * nd + d) for d in range(nd)]
+        pod_means.append(two_phase_mean(cfg, stacked[p * nd:(p + 1) * nd], in_keys,
+                                        use_pallas))
+    return faithful_ring_mean(cfg, jnp.stack(pod_means), k2, use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed modes (the default codec)
+# ---------------------------------------------------------------------------
+
+
+def bucketed_faithful_ring_mean(
+    cfg: CompressorConfig, buckets: list, key, use_pallas: bool = False,
+    bits: Optional[Sequence[int]] = None,
+) -> list:
+    """``sc.bucketed_faithful_ring_mean`` over stacked (n, m_b) buckets."""
+    n = buckets[0].shape[0]
+    keys = _in_keys(key, n)
+    keys = [_fold(k, i) for i, k in enumerate(keys)] if n > 1 else keys
+    cfgs = sc._bucket_cfgs(cfg, len(buckets), bits)
+    means = []
+    for b, sb in enumerate(buckets):
+        words, levels, owns = [], [], []
+        for i in range(n):
+            flat = sb[i].astype(jnp.float32)
+            meta = plan(cfgs[b], flat)
+            w, codes = sc._encode_packed_flat(cfgs[b], flat, meta,
+                                              jax.random.fold_in(keys[i], b), use_pallas)
+            words.append(w)
+            levels.append(meta.levels)
+            owns.append(jnp.take(meta.levels, codes.astype(jnp.int32)))
+        if n == 1:
+            means.append(owns[0])
+        else:
+            means.append(sc.decode_reduce(cfgs[b], jnp.stack(words), jnp.stack(levels),
+                                          sb.shape[1], use_pallas))
+    return means
+
+
+def bucketed_two_phase_mean(
+    cfg: CompressorConfig, buckets: list, key, use_pallas: bool = False,
+    bits: Optional[Sequence[int]] = None,
+) -> list:
+    """``sc.bucketed_two_phase_mean`` over stacked (n, m_b) buckets."""
+    n = buckets[0].shape[0]
+    if n == 1:
+        return [sb[0].astype(jnp.float32) for sb in buckets]
+    keys = [jax.random.split(_fold(k, j)) for j, k in enumerate(_in_keys(key, n))]
+    cfgs = sc._bucket_cfgs(cfg, len(buckets), bits)
+    means = []
+    for b, sb in enumerate(buckets):
+        size = sb.shape[1]
+        mc = (size + (-size) % (n * 32)) // n
+        words, levels = [], []
+        for i in range(n):
+            flat = sb[i].astype(jnp.float32)
+            padded = jnp.pad(flat, (0, (-size) % (n * 32)))
+            meta = plan(cfgs[b], flat)
+            w, _ = sc._encode_packed_flat(cfgs[b], padded, meta,
+                                          jax.random.fold_in(keys[i][0], b), use_pallas)
+            words.append(w.reshape(n, -1))
+            levels.append(meta.levels)
+        chunks = [
+            sc.decode_reduce(cfgs[b], jnp.stack([words[i][j] for i in range(n)]),
+                             jnp.stack(levels), mc, use_pallas)
+            for j in range(n)
+        ]
+        words2, levels2 = [], []
+        for j in range(n):
+            meta2 = plan(cfgs[b], chunks[j])
+            w2, _ = sc._encode_packed_flat(cfgs[b], chunks[j], meta2,
+                                           jax.random.fold_in(keys[j][1], b), use_pallas)
+            words2.append(w2)
+            levels2.append(meta2.levels)
+        vals = sc.decode_rows(cfgs[b], jnp.stack(words2), jnp.stack(levels2), mc,
+                              use_pallas)
+        means.append(vals.reshape(n * mc)[:size])
+    return means
+
+
+def bucketed_hierarchical_mean(
+    cfg: CompressorConfig, buckets: list, n_pod: int, key, use_pallas: bool = False,
+    bits: Optional[Sequence[int]] = None,
+) -> list:
+    """``sc.bucketed_hierarchical_mean``: intra-pod two-phase (keys folded by
+    the *full* dp index), faithful pod-mean exchange across pods."""
+    n = buckets[0].shape[0]
+    nd = n // n_pod
+    k1, k2 = jax.random.split(key)
+    pod_means = []
+    for p in range(n_pod):
+        in_keys = [_fold(k1, p * nd + d) for d in range(nd)]
+        pod_means.append(bucketed_two_phase_mean(
+            cfg, [sb[p * nd:(p + 1) * nd] for sb in buckets], in_keys, use_pallas, bits))
+    stacked = [jnp.stack([pod_means[p][b] for p in range(n_pod)])
+               for b in range(len(buckets))]
+    return bucketed_faithful_ring_mean(cfg, stacked, k2, use_pallas, bits)
+
+
+# ---------------------------------------------------------------------------
+# Top level: the shard_map body of ``_make_sync_fn``
+# ---------------------------------------------------------------------------
+
+
+def reference_sync(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Array) -> list:
+    """Synced gradient mean as every peer of the mesh must compute it.
+
+    ``stacked_leaves``: one (n, *leaf_shape) fp32 array per gradient leaf
+    (traversal order), peer axis row-major over ``dp_sizes`` = the mesh's
+    (pods…, data) manual axis sizes.  Returns the mean leaves (leaf shapes).
+    Mirrors ``train_step._sync_buckets`` / ``_sync_leaf`` dispatch, including
+    the ``bucket_mb=0`` per-leaf codec and heterogeneous ``bits_plan``.
+    """
+    cfg = ts.compressor
+    n = 1
+    for s in dp_sizes:
+        n *= s
+    n_pod = n // dp_sizes[-1]
+    shapes = [tuple(x.shape[1:]) for x in stacked_leaves]
+    if ts.bucket_mb > 0:
+        bp = compressors.plan_buckets([x[0].size for x in stacked_leaves],
+                                      ts.bucket_elements)
+        per_peer = [compressors.bucket_concat([x[j] for x in stacked_leaves], bp)
+                    for j in range(n)]
+        buckets = [jnp.stack([per_peer[j][b] for j in range(n)])
+                   for b in range(bp.n_buckets)]
+        if ts.sync == "dsgd" or cfg.method == "dsgd":
+            means = [jnp.mean(sb, axis=0) for sb in buckets]
+        elif ts.sync == "faithful":
+            means = bucketed_faithful_ring_mean(cfg, buckets, key,
+                                                cfg.use_pallas, ts.bits_plan)
+        elif ts.sync == "two_phase" or len(dp_sizes) == 1:
+            means = bucketed_two_phase_mean(cfg, buckets, key,
+                                            cfg.use_pallas, ts.bits_plan)
+        else:
+            means = bucketed_hierarchical_mean(cfg, buckets, n_pod, key,
+                                               cfg.use_pallas, ts.bits_plan)
+        return compressors.bucket_split(means, bp, shapes)
+    out = []
+    for i, x in enumerate(stacked_leaves):
+        ki = jax.random.fold_in(key, i)
+        flat = x.reshape(n, -1).astype(jnp.float32)
+        if ts.sync == "dsgd" or cfg.method == "dsgd":
+            mean = jnp.mean(flat, axis=0)
+        elif ts.sync == "faithful":
+            mean = faithful_ring_mean(cfg, flat, ki, cfg.use_pallas)
+        elif ts.sync == "two_phase" or len(dp_sizes) == 1:
+            mean = two_phase_mean(cfg, flat, ki, cfg.use_pallas)
+        else:
+            k1, k2 = jax.random.split(ki)
+            in_keys = [_fold(k1, j) for j in range(n)]
+            nd = dp_sizes[-1]
+            pod_means = [
+                two_phase_mean(cfg, flat[p * nd:(p + 1) * nd],
+                               in_keys[p * nd:(p + 1) * nd], cfg.use_pallas)
+                for p in range(n_pod)
+            ]
+            mean = faithful_ring_mean(cfg, jnp.stack(pod_means), k2, cfg.use_pallas)
+        out.append(mean.reshape(shapes[i]))
+    return out

@@ -34,6 +34,13 @@ dequantized buckets, which is what error feedback needs to form the residual
 Per-chunk codebooks ride along with the codes as (levels, alpha) pairs —
 ``wire_bytes`` in ``core.compressors`` accounts for them.
 
+Decode side: every decode site routes through :func:`decode_reduce` /
+:func:`decode_rows` — fused unpack → dequant → (mean) passes over the
+gathered wire rows (``kernels.decode`` Pallas kernels under ``use_pallas``,
+the bit-identical ``kernels.ref`` sequential-peer jnp oracle otherwise) that
+never materialize the (n_peers, m) unpacked code tensor the old
+``vmap(unpack_codes)`` + ``jnp.mean`` path staged in HBM.
+
 Peer RNG independence: every encode folds ``compat.flat_axis_index`` of the
 collective's own axes into the key.  The paper's Lemma 2 (mean error
 concentrating as 1/n across workers) assumes independent stochastic rounding
@@ -122,10 +129,56 @@ def _encode_flat(cfg: CompressorConfig, flat: jax.Array, meta: QuantMeta, key: j
     return stochastic_encode(flat, meta, key)
 
 
-def _decode_rows(words: jax.Array, levels: jax.Array, n: int, bits: int) -> jax.Array:
-    """(peers, packed_words) + (peers, s+1) codebooks -> (peers, n) fp32."""
-    codes = jax.vmap(lambda w: unpack_codes(w, n, bits))(words)
-    return jax.vmap(lambda c, lv: jnp.take(lv, c.astype(jnp.int32)))(codes, levels)
+# Methods whose codebook is the uniform linspace: the fused decode kernels
+# dequantize them straight from α (code · 2α/s − α) instead of a table walk.
+_UNIFORM_DECODE = ("qsgd", "tqsgd", "dsgd")
+
+
+def decode_reduce(cfg: CompressorConfig, words: jax.Array, levels: jax.Array, n: int,
+                  use_pallas: bool) -> jax.Array:
+    """Fused unpack → dequant → peer mean of gathered codec rows.
+
+    ``words``: (peers, packed_words) uint32 wire rows; ``levels``: (peers,
+    s+1) codebooks; returns the (n,) fp32 mean over peers, never
+    materializing the (peers, n) unpacked tensor.  ``use_pallas`` selects the
+    ``kernels.decode`` Pallas kernels (interpret-mode off-TPU); the fallback
+    is the sequential-peer jnp oracle from ``kernels.ref``, which runs the
+    same op sequence (bit-exact for codebook methods, ulp-level FMA slack
+    for the uniform dequant — see ``tests/test_decode_kernels.py``) and is
+    safe under shard_map tracing on the pinned toolchain.  Every peer of a
+    collective runs one compiled program over identical gathered bytes, so
+    peers agree bit-for-bit on the result regardless of path (the
+    peer-agreement contract).
+    """
+    return _decode_dispatch(cfg, "decode_reduce", words, levels, n, use_pallas)
+
+
+def decode_rows(cfg: CompressorConfig, words: jax.Array, levels: jax.Array, n: int,
+                use_pallas: bool) -> jax.Array:
+    """Fused unpack → dequant of gathered rows, one (n,) row per peer.
+
+    The all-gather phase-2 shape: peer j's decode is output chunk j, so the
+    (peers, n) result *is* the payload (no reduction) — the fusion removes
+    the (peers, n) int32 code intermediate.  Same dispatch contract as
+    :func:`decode_reduce`.
+    """
+    return _decode_dispatch(cfg, "decode_rows", words, levels, n, use_pallas)
+
+
+def _decode_dispatch(cfg: CompressorConfig, op: str, words: jax.Array, levels: jax.Array,
+                     n: int, use_pallas: bool) -> jax.Array:
+    """Select kernel vs fallback module and uniform vs codebook variant.
+
+    Uniform-codebook methods dequantize from α alone (``levels[:, -1]``);
+    everything else walks the shipped codebook.
+    """
+    if use_pallas:
+        from repro.kernels import ops as mod
+    else:
+        from repro.kernels import ref as mod
+    if cfg.method in _UNIFORM_DECODE:
+        return getattr(mod, f"uniform_{op}")(words, levels[:, -1], n, cfg.bits)
+    return getattr(mod, f"codebook_{op}")(words, levels, n, cfg.bits)
 
 
 def _encode_packed_flat(cfg: CompressorConfig, flat: jax.Array, meta: QuantMeta, key: jax.Array,
@@ -195,7 +248,7 @@ def two_phase_reduce_scatter_sharded(
     words, metas = _plan_encode_rows(cfg, flat, key, use_pallas)
     recv_words = compat.all_to_all_rows(words, axis_name)            # (n, w)
     recv_levels = compat.all_to_all_rows(metas.levels, axis_name)
-    mean_flat = jnp.mean(_decode_rows(recv_words, recv_levels, m, cfg.bits), axis=0)
+    mean_flat = decode_reduce(cfg, recv_words, recv_levels, m, use_pallas)
     return jnp.moveaxis(mean_flat.reshape((chunk_shape[dim],) + g.shape[:dim] + g.shape[dim + 1:]),
                         0, dim)
 
@@ -228,7 +281,7 @@ def two_phase_mean(
     words2 = pack_codes(codes2, cfg.bits)
     all_words = compat.all_gather_stacked(words2, axis_name)             # (n, w)
     all_levels = compat.all_gather_stacked(meta2.levels, axis_name)
-    full = _decode_rows(all_words, all_levels, chunk.size, cfg.bits).reshape(-1)
+    full = decode_rows(cfg, all_words, all_levels, chunk.size, use_pallas).reshape(-1)
     return full[: flat.size].reshape(g.shape).astype(g.dtype)
 
 
@@ -255,8 +308,8 @@ def faithful_ring_mean(
     words = pack_codes(codes, cfg.bits)
     all_words = compat.all_gather_stacked(words, axis_name)              # (n, w)
     all_levels = compat.all_gather_stacked(meta.levels, axis_name)
-    vals = _decode_rows(all_words, all_levels, flat.size, cfg.bits)      # (n, m)
-    return jnp.mean(vals, axis=0).reshape(g.shape).astype(g.dtype)
+    mean_flat = decode_reduce(cfg, all_words, all_levels, flat.size, use_pallas)
+    return mean_flat.reshape(g.shape).astype(g.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -332,7 +385,7 @@ def bucketed_faithful_ring_mean(
         words = rows[:, off:off + w]
         levels = _levels_from_wire(rows[:, off + w:off + w + nl])
         off += w + nl
-        means.append(jnp.mean(_decode_rows(words, levels, m, cfgb.bits), axis=0))
+        means.append(decode_reduce(cfgb, words, levels, m, use_pallas))
     return means, owns
 
 
@@ -381,7 +434,7 @@ def bucketed_two_phase_mean(
         words = recv[:, off:off + wc]
         levels = _levels_from_wire(recv[:, off + wc:off + wc + nl])
         off += wc + nl
-        mean_chunks.append(jnp.mean(_decode_rows(words, levels, mc, cfgb.bits), axis=0))
+        mean_chunks.append(decode_reduce(cfgb, words, levels, mc, use_pallas))
 
     # Phase 2: re-quantize the mean chunks, one fused all-gather back.
     parts2 = []
@@ -398,7 +451,7 @@ def bucketed_two_phase_mean(
         words = rows2[:, off:off + wc]
         levels = _levels_from_wire(rows2[:, off + wc:off + wc + nl])
         off += wc + nl
-        vals = _decode_rows(words, levels, mc, cfgb.bits)                # row j = chunk j
+        vals = decode_rows(cfgb, words, levels, mc, use_pallas)          # row j = chunk j
         means.append(vals.reshape(n * mc)[: flat.size])
     return means, owns
 

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from typing import NamedTuple
 
+from . import decode as _d
 from . import quantize as _k
 from . import stats as _s
 
@@ -111,6 +112,92 @@ def codebook_decode(
     c2, n = _to_2d(codes.astype(jnp.int32))
     vals = _k.codebook_decode_2d(c2, levels.astype(jnp.float32), interpret=interpret)
     return vals.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# Fused decode: packed wire rows + per-peer codebooks -> peer mean (or per-
+# peer rows) without materializing the (n_peers, m) unpacked code tensor.
+# ---------------------------------------------------------------------------
+
+
+def _to_words3(words: jax.Array, n: int, bits: int, block_rows: int) -> jax.Array:
+    """(peers, packed_size(n, bits)) uint32 -> (peers, rows_p, 4·bits) int32.
+
+    Pads each peer's word row out to whole (block_rows, 128)-element tiles;
+    the pad words decode to garbage values that land past element ``n`` and
+    are sliced off by the callers (packing is independent per 32-element
+    group, so padding never perturbs valid elements).
+    """
+    from repro.core.quantizers import packed_size
+
+    p, w = words.shape
+    if w != packed_size(n, bits):
+        raise ValueError(
+            f"wire has {w} words per peer; {n} elements at {bits} bits need "
+            f"{packed_size(n, bits)}")
+    wc = _d.words_per_row(bits)
+    rows = -(-n // LANES)
+    rows_p = -(-rows // block_rows) * block_rows
+    padded = jnp.pad(words, ((0, 0), (0, rows_p * wc - w)))
+    return jax.lax.bitcast_convert_type(padded, jnp.int32).reshape(p, rows_p, wc)
+
+
+@partial(jax.jit, static_argnames=("n", "bits", "interpret"))
+def uniform_decode_reduce(
+    words: jax.Array, alphas: jax.Array, n: int, bits: int, *, interpret: bool | None = None
+) -> jax.Array:
+    """Fused unpack + uniform dequant + peer mean.
+
+    ``words``: (n_peers, packed_size(n, bits)) uint32 wire rows (one
+    independently packed code row per peer, the ``pack_codes`` layout);
+    ``alphas``: (n_peers,) truncation thresholds.  Returns the (n,) fp32
+    mean over peers of ``code · 2α_p/s − α_p``.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    words3 = _to_words3(words, n, bits, _d.BLOCK_ROWS)
+    a2 = alphas.astype(jnp.float32).reshape(-1, 1)
+    out = _d.uniform_decode_reduce_3d(words3, a2, bits=bits, interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("n", "bits", "interpret"))
+def codebook_decode_reduce(
+    words: jax.Array, levels: jax.Array, n: int, bits: int, *, interpret: bool | None = None
+) -> jax.Array:
+    """Fused unpack + codebook dequant + peer mean; ``levels``: (n_peers, s+1).
+
+    Returns the (n,) fp32 mean over peers of ``levels_p[code]``.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    words3 = _to_words3(words, n, bits, _d.BLOCK_ROWS_CODEBOOK)
+    out = _d.codebook_decode_reduce_3d(
+        words3, levels.astype(jnp.float32), bits=bits, interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("n", "bits", "interpret"))
+def uniform_decode_rows(
+    words: jax.Array, alphas: jax.Array, n: int, bits: int, *, interpret: bool | None = None
+) -> jax.Array:
+    """Fused unpack + uniform dequant, one (n,) row per peer (no reduce) —
+    the all-gather phase-2 sites, where peer j's decode is output chunk j."""
+    interpret = _use_interpret() if interpret is None else interpret
+    words3 = _to_words3(words, n, bits, _d.BLOCK_ROWS)
+    a2 = alphas.astype(jnp.float32).reshape(-1, 1)
+    out = _d.uniform_decode_rows_3d(words3, a2, bits=bits, interpret=interpret)
+    return out.reshape(words.shape[0], -1)[:, :n]
+
+
+@partial(jax.jit, static_argnames=("n", "bits", "interpret"))
+def codebook_decode_rows(
+    words: jax.Array, levels: jax.Array, n: int, bits: int, *, interpret: bool | None = None
+) -> jax.Array:
+    """Fused unpack + codebook dequant, one (n,) row per peer (no reduce)."""
+    interpret = _use_interpret() if interpret is None else interpret
+    words3 = _to_words3(words, n, bits, _d.BLOCK_ROWS_CODEBOOK)
+    out = _d.codebook_decode_rows_3d(
+        words3, levels.astype(jnp.float32), bits=bits, interpret=interpret)
+    return out.reshape(words.shape[0], -1)[:, :n]
 
 
 class BucketStats(NamedTuple):

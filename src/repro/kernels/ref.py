@@ -56,6 +56,71 @@ def codebook_decode(codes: jax.Array, levels: jax.Array) -> jax.Array:
     return jnp.take(levels, codes.astype(jnp.int32))
 
 
+# ---------------------------------------------------------------------------
+# Fused decode oracles (``kernels.decode``).
+#
+# The decode-reduce kernels fold peers into the output tile *sequentially*
+# (grid peer axis innermost) and divide by n at the last peer; per element
+# that is exactly ``(((v_0 + v_1) + ...) + v_{n-1}) / n`` regardless of the
+# row blocking, so the oracle is a plain per-peer accumulation loop.  All
+# remaining ops are element-wise (or exact one-hot lookups), hence kernel and
+# oracle agree bit-for-bit in interpret mode — and these same functions
+# double as the shard_map-safe jnp fallback of ``dist.sharded_codec``, which
+# streams one peer at a time instead of materializing the (n_peers, m)
+# unpacked code tensor.
+# ---------------------------------------------------------------------------
+
+
+def uniform_decode_reduce(words: jax.Array, alphas: jax.Array, n: int, bits: int) -> jax.Array:
+    """(peers, packed_words) uint32 + (peers,) alphas -> (n,) fp32 peer mean."""
+    from repro.core.quantizers import unpack_codes
+
+    s = num_levels(bits)
+    p = words.shape[0]
+    acc = jnp.zeros((n,), jnp.float32)
+    for j in range(p):
+        codes = unpack_codes(words[j], n, bits).astype(jnp.float32)
+        alpha = alphas[j].astype(jnp.float32)
+        acc = acc + (codes * (2.0 * alpha / s) - alpha)
+    return acc / p
+
+
+def codebook_decode_reduce(words: jax.Array, levels: jax.Array, n: int, bits: int) -> jax.Array:
+    """(peers, packed_words) + (peers, s+1) codebooks -> (n,) fp32 peer mean."""
+    from repro.core.quantizers import unpack_codes
+
+    p = words.shape[0]
+    acc = jnp.zeros((n,), jnp.float32)
+    for j in range(p):
+        codes = unpack_codes(words[j], n, bits)
+        acc = acc + jnp.take(levels[j].astype(jnp.float32), codes.astype(jnp.int32))
+    return acc / p
+
+
+def uniform_decode_rows(words: jax.Array, alphas: jax.Array, n: int, bits: int) -> jax.Array:
+    """(peers, packed_words) uint32 + (peers,) alphas -> (peers, n) fp32."""
+    from repro.core.quantizers import unpack_codes
+
+    s = num_levels(bits)
+    rows = []
+    for j in range(words.shape[0]):
+        codes = unpack_codes(words[j], n, bits).astype(jnp.float32)
+        alpha = alphas[j].astype(jnp.float32)
+        rows.append(codes * (2.0 * alpha / s) - alpha)
+    return jnp.stack(rows)
+
+
+def codebook_decode_rows(words: jax.Array, levels: jax.Array, n: int, bits: int) -> jax.Array:
+    """(peers, packed_words) + (peers, s+1) codebooks -> (peers, n) fp32."""
+    from repro.core.quantizers import unpack_codes
+
+    rows = []
+    for j in range(words.shape[0]):
+        codes = unpack_codes(words[j], n, bits)
+        rows.append(jnp.take(levels[j].astype(jnp.float32), codes.astype(jnp.int32)))
+    return jnp.stack(rows)
+
+
 def bucket_stats(g: jax.Array) -> jax.Array:
     """Blockwise jnp oracle for ``stats.bucket_stats_2d``.
 

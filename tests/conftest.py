@@ -1,0 +1,29 @@
+"""Shared pytest wiring.
+
+``--interpret`` flips the codec tests onto the Pallas-kernel dispatch branch
+(``CompressorConfig.use_pallas=True``; on CPU the kernels execute in
+interpret mode).  Tier-1 runs without it and exercises the shard_map-safe
+jnp fallbacks; the CI ``kernels-interpret`` job runs with it so both decode
+dispatch branches are covered on every PR.  The option is exported through
+``REPRO_TEST_USE_PALLAS`` so the subprocess-based distributed tests inherit
+it.
+"""
+import os
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--interpret", action="store_true", default=False,
+        help="run codec paths with use_pallas=True (interpret-mode kernels off-TPU)")
+
+
+def pytest_configure(config):
+    if config.getoption("--interpret"):
+        os.environ["REPRO_TEST_USE_PALLAS"] = "1"
+
+
+@pytest.fixture
+def use_pallas() -> bool:
+    return os.environ.get("REPRO_TEST_USE_PALLAS", "0") not in ("", "0")

@@ -13,8 +13,8 @@ the tests below pin its exact decomposition and the per-element view.
 import pytest
 
 from repro.core.compressors import CompressorConfig, wire_bits_per_element, wire_bytes
-from repro.core.quantizers import packed_size
-from repro.dist.collectives import MODES, wire_bytes_per_device
+from repro.core.quantizers import num_levels, packed_size
+from repro.dist.collectives import MODES, decode_hbm_bytes, wire_bytes_per_device
 
 N = 1_000_000
 SHARDS = 16
@@ -117,6 +117,30 @@ def test_wire_bytes_heterogeneous_bits():
         wire_bytes(cfg, sizes, [2, 3])         # length mismatch
     with pytest.raises(ValueError):
         wire_bytes(cfg, 1000, 9)               # out-of-range width
+
+
+def test_decode_hbm_bytes_model():
+    """Decode-side HBM accounting: the fused path reads the wire once and
+    writes the mean once; unfused adds two (peers, n) HBM round-trips."""
+    cfg = CompressorConfig(method="tnqsgd", bits=3)
+    peers = 16
+    words = 4.0 * peers * packed_size(N, 3) + 4.0 * peers * (num_levels(3) + 1)
+    assert decode_hbm_bytes(cfg, N, peers, fused=True) == pytest.approx(words + 4.0 * N)
+    assert decode_hbm_bytes(cfg, N, peers, fused=False) == pytest.approx(
+        words + 16.0 * peers * N + 4.0 * N)
+    # the fusion removes the only O(peers·n) term: big win, monotone in peers
+    ratio = (decode_hbm_bytes(cfg, N, peers, fused=False)
+             / decode_hbm_bytes(cfg, N, peers, fused=True))
+    assert ratio > 20
+    assert ratio > (decode_hbm_bytes(cfg, N, 4, fused=False)
+                    / decode_hbm_bytes(cfg, N, 4, fused=True))
+    # heterogeneous buckets sum per bucket
+    sizes, bits = [400_000, 600_000], [2, 4]
+    assert decode_hbm_bytes(cfg, sizes, peers, fused=True, bits=bits) == pytest.approx(
+        sum(decode_hbm_bytes(cfg, n, peers, fused=True, bits=b)
+            for n, b in zip(sizes, bits)))
+    with pytest.raises(ValueError):
+        decode_hbm_bytes(cfg, sizes, peers, fused=True, bits=[2])
 
 
 def test_wire_bytes_per_device_heterogeneous():

@@ -1,0 +1,202 @@
+"""Fused decode kernel validation against the ``kernels/ref.py`` oracles
+(interpret mode executes the kernel body on CPU) across bit widths, ragged
+tails, and heterogeneous per-bucket bit tuples.
+
+Comparison contract: the **codebook** variants are bit-exact — their dequant
+is an exact one-hot table lookup and the peer accumulation is a chain of
+adds, so no compilation choice can perturb a bit.  The **uniform** variants
+contain a real multiply-add (``code · 2α/s − α``) whose FMA contraction is
+compiler-discretionary, so two separately compiled graphs may differ in the
+last couple of ulp; they are pinned at a ≤4-ulp tolerance (any real decode
+bug is off by a whole quantization step, ≥3 orders of magnitude larger).
+Oracles are compared under ``jax.jit`` — the codec always runs them inside a
+compiled step.
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sample_power_law
+from repro.core.compressors import CompressorConfig, plan
+from repro.core.quantizers import pack_codes, stochastic_encode
+from repro.kernels import ops, ref
+
+# Ragged tails: multiples of the 32-code packing group, the 128-lane row, the
+# (BLOCK_ROWS, 128) tile — and none of the above.
+SIZES = [64, 999, 128 * 128, 64 * 128 * 2 + 17, 4096 + 31]
+BITS = list(range(1, 9))
+N_PEERS = 5
+
+
+def _wire(key, n, bits, p=N_PEERS):
+    codes = jax.random.randint(key, (p, n), 0, 2**bits).astype(jnp.uint8)
+    words = jnp.stack([pack_codes(codes[j], bits) for j in range(p)])
+    return codes, words
+
+
+def _levels(key, bits, p=N_PEERS):
+    lv = jax.random.uniform(jax.random.fold_in(key, 7), (p, 2**bits), minval=-0.2, maxval=0.2)
+    return jnp.sort(lv, axis=1)
+
+
+def _assert_ulp_close(got, want, scale, ulps=4):
+    """Elementwise |got-want| ≤ ulps · ulp(scale), where ``scale`` bounds the
+    largest intermediate (the pre-division peer accumulator for the reduce
+    kernels — an element whose *mean* is near zero still carries the rounding
+    of its ~Σα-sized running sum)."""
+    got, want = np.asarray(got), np.asarray(want)
+    tol = ulps * np.spacing(np.float32(abs(scale)))
+    bad = np.abs(got - want) > tol
+    assert not bad.any(), (
+        f"{bad.sum()} elements beyond {ulps} ulp of scale {scale}; max diff "
+        f"{np.abs(got - want).max()} at {np.argmax(np.abs(got - want))}")
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("n", SIZES)
+def test_uniform_decode_reduce_matches_oracle(bits, n):
+    key = jax.random.key(bits * 1000 + n)
+    _, words = _wire(key, n, bits)
+    alphas = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (N_PEERS,))) + 0.1
+    got = ops.uniform_decode_reduce(words, alphas, n, bits)
+    want = jax.jit(partial(ref.uniform_decode_reduce, n=n, bits=bits))(words, alphas)
+    _assert_ulp_close(got, want, scale=float(jnp.sum(alphas)))
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("n", SIZES)
+def test_codebook_decode_reduce_bit_exact(bits, n):
+    key = jax.random.key(bits * 2000 + n)
+    _, words = _wire(key, n, bits)
+    levels = _levels(key, bits)
+    got = ops.codebook_decode_reduce(words, levels, n, bits)
+    want = jax.jit(partial(ref.codebook_decode_reduce, n=n, bits=bits))(words, levels)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("n", SIZES)
+def test_decode_rows_match_oracle(bits, n):
+    key = jax.random.key(bits * 3000 + n)
+    _, words = _wire(key, n, bits)
+    alphas = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (N_PEERS,))) + 0.1
+    levels = _levels(key, bits)
+    got = ops.uniform_decode_rows(words, alphas, n, bits)
+    want = jax.jit(partial(ref.uniform_decode_rows, n=n, bits=bits))(words, alphas)
+    _assert_ulp_close(got, want, scale=float(jnp.max(alphas)))
+    got = ops.codebook_decode_rows(words, levels, n, bits)
+    want = jax.jit(partial(ref.codebook_decode_rows, n=n, bits=bits))(words, levels)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_decode_reduce_is_unfused_peer_mean():
+    """The fused mean agrees with the obvious (peers, n) unpack→take→mean
+    formulation up to summation-order float noise."""
+    from repro.core.quantizers import unpack_codes
+
+    bits, n = 3, 2048 + 13
+    key = jax.random.key(42)
+    codes, words = _wire(key, n, bits)
+    levels = _levels(key, bits)
+    fused = ops.codebook_decode_reduce(words, levels, n, bits)
+
+    @jax.jit
+    def unfused(words, levels):
+        c = jax.vmap(lambda w: unpack_codes(w, n, bits))(words)
+        return jnp.mean(jax.vmap(lambda cc, lv: jnp.take(lv, cc.astype(jnp.int32)))(c, levels),
+                        axis=0)
+
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused(words, levels)),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_end_to_end_encode_decode_roundtrip():
+    """Real wire: plan + fused encode-pack per peer, fused decode-reduce back
+    — the mean of the peers' dequantized tensors, on the codebook."""
+    bits, n = 3, 5000
+    cfg = CompressorConfig(method="tnqsgd", bits=bits)
+    key = jax.random.key(3)
+    words, levels, owns = [], [], []
+    for p in range(4):
+        g = sample_power_law(jax.random.fold_in(key, p), (n,), gamma=4.0, g_min=0.01, rho=0.1)
+        meta = plan(cfg, g)
+        codes = stochastic_encode(g, meta, jax.random.fold_in(key, 100 + p))
+        words.append(pack_codes(codes, bits))
+        levels.append(meta.levels)
+        owns.append(jnp.take(meta.levels, codes.astype(jnp.int32)))
+    got = ops.codebook_decode_reduce(jnp.stack(words), jnp.stack(levels), n, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(jnp.mean(jnp.stack(owns), axis=0)),
+                               rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("method", ["tqsgd", "tnqsgd"])
+def test_decode_reduce_unbiased_fixed_seed(method):
+    """Fixed-seed statistical pin that the fused decode-reduce is unbiased:
+    the mean over R independent encode draws approaches the mean of the
+    peers' truncated tensors within a 5σ concentration bound
+    (Var ≤ Δ²/4 per peer draw ⇒ std of the R-draw n-peer mean ≤
+    Δmax/(2·sqrt(R·n))).  A deterministic twin of the hypothesis property in
+    ``test_properties.py``, which only runs where hypothesis is installed —
+    this one keeps the bias net live under the pinned CI deps.
+    """
+    from repro.core.quantizers import truncate
+
+    bits, n_peers, m, R = 3, 4, 256, 64
+    cfg = CompressorConfig(method=method, bits=bits)
+    g = sample_power_law(jax.random.key(11), (n_peers, m), gamma=3.8, g_min=0.01, rho=0.12)
+    metas = [plan(cfg, g[p]) for p in range(n_peers)]
+    levels = jnp.stack([mt.levels for mt in metas])
+    target = jnp.mean(
+        jnp.stack([truncate(g[p], metas[p].alpha) for p in range(n_peers)]), axis=0)
+    outs = []
+    for r in range(R):
+        words = jnp.stack([
+            pack_codes(stochastic_encode(g[p], metas[p], jax.random.key(r * 131 + p)), bits)
+            for p in range(n_peers)])
+        if method == "tqsgd":
+            outs.append(ops.uniform_decode_reduce(
+                words, jnp.stack([mt.alpha for mt in metas]), m, bits))
+        else:
+            outs.append(ops.codebook_decode_reduce(words, levels, m, bits))
+    emp = jnp.mean(jnp.stack(outs), axis=0)
+    step = float(jnp.max(jnp.stack([jnp.max(jnp.diff(mt.levels)) for mt in metas])))
+    tol = 5.0 * step / (2.0 * np.sqrt(R * n_peers)) + 1e-6
+    assert float(jnp.max(jnp.abs(emp - target))) < tol
+
+
+@pytest.mark.parametrize("plan_bits", [(1, 4, 3), (2, 2, 8), (5, 1, 2)])
+def test_heterogeneous_bucket_bits(plan_bits):
+    """An adaptive fused wire: per-bucket widths decode bucket-by-bucket
+    through the fused kernels, each slice bit-exact vs its oracle."""
+    from repro.core.quantizers import packed_size
+
+    sizes = (1500, 4096, 777)
+    key = jax.random.key(9)
+    wire_rows, per_bucket = [], []
+    for b, (n, bits) in enumerate(zip(sizes, plan_bits)):
+        codes, words = _wire(jax.random.fold_in(key, b), n, bits)
+        levels = _levels(jax.random.fold_in(key, 50 + b), bits)
+        wire_rows.append(words)
+        per_bucket.append((n, bits, levels))
+    wire = jnp.concatenate(wire_rows, axis=1)           # one fused row per peer
+    off = 0
+    for n, bits, levels in per_bucket:
+        w = packed_size(n, bits)
+        words = wire[:, off:off + w]
+        off += w
+        got = ops.codebook_decode_reduce(words, levels, n, bits)
+        want = jax.jit(partial(ref.codebook_decode_reduce, n=n, bits=bits))(words, levels)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert off == wire.shape[1]
+
+
+def test_wire_size_mismatch_raises():
+    """A wire row count that disagrees with (n, bits) is a hard error, not a
+    silent truncation."""
+    bits, n = 3, 1000
+    _, words = _wire(jax.random.key(0), n, bits)
+    with pytest.raises(ValueError, match="words per peer"):
+        ops.codebook_decode_reduce(words[:, :-1], _levels(jax.random.key(1), bits), n, bits)

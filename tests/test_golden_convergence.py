@@ -1,0 +1,78 @@
+"""Golden convergence regression: fixed-seed 30-step smallnet runs per sync
+method, with pinned final-loss windows.
+
+Gradients are synced through :func:`repro.dist.reference.reference_sync` —
+the single-device replica of the mesh codec that shares every local
+plan/encode/decode helper with ``dist.sharded_codec`` (and is itself pinned
+bit-for-bit against the mesh in ``test_mesh_invariance``) — so a codec
+refactor that silently biases the synced mean (a dropped 1/n, a truncation
+bias, a decode off-by-one) moves these losses far outside their windows and
+fails tier-1 instead of only drifting a benchmark curve.
+
+The windows are generous against ulp-level platform noise (runs are fully
+deterministic on the pinned CPU toolchain) but far tighter than the gap to
+a broken codec: the task converges from ≈6.5 to ≲0.02 in 30 steps, and a
+mean-perturbing bug stalls that decay orders of magnitude above the pinned
+values.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.compressors import CompressorConfig
+from repro.data.synthetic import client_batches, make_templates
+from repro.dist.reference import reference_sync
+from repro.dist.train_step import TrainStepConfig
+from repro.models.smallnet import init_smallnet, smallnet_loss
+from repro.optim.optimizers import momentum_sgd
+
+N_CLIENTS = 8
+BATCH = 32
+STEPS = 30
+
+# sync -> ((pods, data) layout, pinned final loss, tolerance).  The synthetic
+# shapes task converges hard in 30 steps (first-step loss ≈ 6.49); a codec
+# bias that perturbs the synced mean stalls convergence orders of magnitude
+# above these windows.
+GOLDEN = {
+    "dsgd": ((8,), 0.0000, 0.02),
+    "two_phase": ((8,), 0.0037, 0.05),
+    "hierarchical": ((2, 4), 0.0207, 0.05),
+    "faithful": ((8,), 0.0162, 0.05),
+}
+
+
+def _run(sync: str, dp: tuple) -> list:
+    ts = TrainStepConfig(sync=sync,
+                         compressor=CompressorConfig(method="tnqsgd", bits=3))
+    templates = make_templates(jax.random.key(42))
+    params = init_smallnet(jax.random.key(0))
+    opt = momentum_sgd(lr=0.01, momentum=0.9, weight_decay=5e-4)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, i):
+        imgs, labels = client_batches(templates, i, N_CLIENTS, BATCH)
+        losses, grads = jax.vmap(
+            lambda im, lb: jax.value_and_grad(smallnet_loss)(p, im, lb))(imgs, labels)
+        leaves, treedef = jax.tree.flatten(grads)
+        key = jax.random.fold_in(jax.random.key(0x5EED), i)
+        mean = reference_sync(ts, leaves, dp, key)
+        p2, s2 = opt.update(p, jax.tree.unflatten(treedef, mean), s, i)
+        return p2, s2, jnp.mean(losses)
+
+    hist = []
+    p, s = params, state
+    for i in range(STEPS):
+        p, s, loss = step(p, s, jnp.uint32(i))
+        hist.append(float(loss))
+    return hist
+
+
+@pytest.mark.parametrize("sync", sorted(GOLDEN))
+def test_golden_final_loss(sync):
+    dp, pinned, tol = GOLDEN[sync]
+    hist = _run(sync, dp)
+    assert hist[-1] == pytest.approx(pinned, abs=tol), (sync, hist)
+    # and training actually converged (quantization noise notwithstanding)
+    assert hist[-1] < hist[0] - 5.0, (sync, hist)

@@ -1,0 +1,162 @@
+"""Cross-mesh invariance suite for the compressed gradient collectives.
+
+Parameterized sweep over mesh shapes × sync methods asserting, for every
+combination, that
+
+(a) all peers of the collective hold **bitwise-identical** synced gradients
+    (the peer-agreement contract every mode promises), and
+(b) the synced gradient equals the **single-device reference**
+    (``repro.dist.reference``) — bit-for-bit for the codebook-method modes,
+    which share every local codec helper with the mesh path, and within
+    tight float tolerance for ``dsgd`` (the partitioner owns the all-reduce
+    order) and the uniform-method decode (ulp-level FMA-contraction
+    discretion, see ``test_decode_kernels``).
+
+One subprocess per mesh shape (fake host devices); each subprocess sweeps
+the sync modes, a uniform-codebook method, a heterogeneous per-bucket
+``bits_plan``, and the per-leaf (``bucket_mb=0``) codec.  Replaces the
+single-mesh spot check the old ``test_dist.py::test_sharded_codec_units``
+provided.  ``REPRO_TEST_USE_PALLAS=1`` (the CI ``--interpret`` job) runs the
+same sweep through the Pallas decode/encode kernels instead of the jnp
+fallbacks.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+MESHES = [
+    ((1,), ("data",)),
+    ((2,), ("data",)),
+    ((4,), ("data",)),
+    ((2, 2), ("pod", "data")),
+    ((2, 2, 2), ("pod", "data", "model")),
+]
+MESH_IDS = ["data1", "data2", "data4", "pod2x2", "pod2x2x2"]
+
+_SCRIPT = """
+import os
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.core.compressors import CompressorConfig
+from repro.dist import reference, sharding
+from repro.dist.train_step import TrainStepConfig, _sync_buckets, _sync_leaf
+
+MESH_SHAPE = %(shape)r
+AXES = %(axes)r
+USE_PALLAS = os.environ.get("REPRO_TEST_USE_PALLAS", "0") not in ("", "0")
+
+mesh = jax.make_mesh(MESH_SHAPE, AXES, axis_types=(AxisType.Auto,) * len(AXES))
+dp = sharding.manual_axes(mesh)
+dp_sizes = tuple(mesh.shape[a] for a in dp)
+n = 1
+for s in dp_sizes:
+    n *= s
+
+# Sizes chosen so plan_buckets at bucket_mb=1/64 MB (4096 elements) coalesces
+# them into three buckets of (3072, 2257, 3047) elements — mixed ragged tails.
+leaf_shapes = [(64, 48), (37, 61), (2048,), (999,)]
+key0 = jax.random.key(5)
+leaves = [
+    (jax.random.normal(jax.random.fold_in(key0, i), (n,) + s) * 0.05 * (i + 1)
+     ).astype(jnp.float32)
+    for i, s in enumerate(leaf_shapes)
+]
+skey = jax.random.key(123)
+
+
+def run_mesh(ts):
+    def body(key, *stacked):
+        vals = [x[0] for x in stacked]
+        if ts.bucket_mb > 0:
+            out, _, _ = _sync_buckets(ts, vals, key, dp)
+        else:
+            out = [_sync_leaf(ts, g, jax.random.fold_in(key, i), dp)
+                   for i, g in enumerate(vals)]
+        return tuple(o[None] for o in out)
+
+    smap = jax.shard_map(
+        body, mesh=mesh, in_specs=(P(),) + (P(dp),) * len(leaves),
+        out_specs=tuple(P(dp) for _ in leaves),
+        axis_names=set(mesh.axis_names), check_vma=False)
+    return jax.jit(smap)(skey, *leaves)
+
+
+def check(name, ts, exact):
+    got = run_mesh(ts)
+    want = jax.jit(lambda key, *ls: tuple(
+        reference.reference_sync(ts, list(ls), dp_sizes, key)))(skey, *leaves)
+    for leaf_i, (g, w) in enumerate(zip(got, want)):
+        g = np.asarray(g)
+        # (a) every peer decoded identical bytes to identical values
+        for peer in range(1, n):
+            np.testing.assert_array_equal(
+                g[0], g[peer], err_msg=f"{name}: peer {peer} diverges on leaf {leaf_i}")
+        # (b) the mesh result is the single-device reference
+        if exact:
+            np.testing.assert_array_equal(
+                g[0], np.asarray(w), err_msg=f"{name}: reference mismatch on leaf {leaf_i}")
+        else:
+            np.testing.assert_allclose(
+                g[0], np.asarray(w), atol=1e-6, rtol=1e-6,
+                err_msg=f"{name}: reference mismatch on leaf {leaf_i}")
+    print("OK", name)
+
+
+def ts_for(sync, method="tnqsgd", bits=3, bucket_mb=1.0 / 64.0, bits_plan=None):
+    return TrainStepConfig(
+        sync=sync, bucket_mb=bucket_mb, bits_plan=bits_plan,
+        compressor=CompressorConfig(method=method, bits=bits, use_pallas=USE_PALLAS))
+
+
+# Every mesh runs the four sync modes; the auxiliary surfaces (uniform-
+# codebook decode, heterogeneous bits_plan, per-leaf codec) get their full
+# sweep on the cheap 2-peer mesh and one targeted case elsewhere, keeping the
+# per-mesh subprocess inside the tier-1 budget.
+FULL = (n == 2)
+
+for sync in ("dsgd", "two_phase", "hierarchical", "faithful"):
+    check(f"bucketed/{sync}/tnqsgd", ts_for(sync), exact=sync != "dsgd")
+
+# uniform-codebook decode branch (alpha-formula dequant; near-exact — the
+# dequant multiply-add's FMA contraction is compiler-discretionary between
+# the mesh and reference graphs, see tests/test_decode_kernels.py)
+for sync in ("two_phase", "faithful") if FULL or n == 4 and len(dp_sizes) == 1 else ():
+    check(f"bucketed/{sync}/tqsgd", ts_for(sync, method="tqsgd", bits=4), exact=False)
+
+# heterogeneous per-bucket wire widths through the fused decode path
+het = ("two_phase", "hierarchical", "faithful") if FULL else (
+    ("hierarchical",) if len(dp_sizes) > 1 else ())
+for sync in het:
+    check(f"bucketed/{sync}/bits_plan", ts_for(sync, bits_plan=(2, 4, 3)), exact=True)
+
+# per-leaf codec (bucket_mb=0): ring-mean / all-gather decode sites
+per_leaf = ("two_phase", "hierarchical", "faithful") if FULL else (
+    ("hierarchical",) if len(dp_sizes) > 1 and MESH_SHAPE[-1] > 1 else
+    ("faithful",) if n == 1 else ())
+for sync in per_leaf:
+    check(f"per_leaf/{sync}/tnqsgd", ts_for(sync, bucket_mb=0.0), exact=True)
+
+print("ALL_OK")
+"""
+
+
+@pytest.mark.parametrize("shape,axes", MESHES, ids=MESH_IDS)
+def test_sync_matches_reference(shape, axes):
+    n_dev = 1
+    for s in shape:
+        n_dev *= s
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_SCRIPT % {"shape": shape, "axes": axes})],
+        capture_output=True, text=True, timeout=1800, env=env,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "ALL_OK" in r.stdout, r.stdout

@@ -89,6 +89,47 @@ def test_truncation_contracts(data):
     assert float(jnp.max(jnp.abs(t))) <= alpha * (1 + 1e-6)
 
 
+@settings(max_examples=8, deadline=None)
+@given(data=st.data(), method=st.sampled_from(("tqsgd", "tnqsgd")), bits=st.integers(2, 4))
+def test_fused_decode_reduce_unbiased(data, method, bits):
+    """The fused decode-reduce is an unbiased estimator of the peer mean.
+
+    For random per-peer codebooks/codes, the mean of the fused kernel output
+    over independent RNG draws approaches the analytic expectation — the
+    mean of the peers' *truncated* tensors (Lemma 1 unbiasedness survives
+    the unpack→dequant→reduce fusion) — within a 5σ concentration bound:
+    per element, Var ≤ Δ²/4 per peer draw, so the R-draw, n-peer mean has
+    std ≤ Δmax / (2·sqrt(R·n)).  A deterministic fixed-seed twin lives in
+    ``test_decode_kernels.py`` so the bias net stays live under the pinned
+    CI deps (which do not include hypothesis).
+    """
+    from repro.kernels import ops as kops
+
+    n_peers = data.draw(st.integers(2, 5))
+    m = 192
+    g = _gradients(data.draw, n_peers * m).reshape(n_peers, m)
+    cfg = CompressorConfig(method=method, bits=bits)
+    metas = [plan(cfg, g[p]) for p in range(n_peers)]
+    levels = jnp.stack([mt.levels for mt in metas])
+    target = jnp.mean(
+        jnp.stack([truncate(g[p], metas[p].alpha) for p in range(n_peers)]), axis=0)
+    R = 48
+    outs = []
+    for r in range(R):
+        words = jnp.stack([
+            pack_codes(stochastic_encode(g[p], metas[p], jax.random.key(r * 131 + p)), bits)
+            for p in range(n_peers)])
+        if method == "tqsgd":
+            outs.append(kops.uniform_decode_reduce(
+                words, jnp.stack([mt.alpha for mt in metas]), m, bits))
+        else:
+            outs.append(kops.codebook_decode_reduce(words, levels, m, bits))
+    emp = jnp.mean(jnp.stack(outs), axis=0)
+    step = float(jnp.max(jnp.stack([jnp.max(jnp.diff(mt.levels)) for mt in metas])))
+    tol = 5.0 * step / (2.0 * np.sqrt(R * n_peers)) + 1e-6
+    assert float(jnp.max(jnp.abs(emp - target))) < tol
+
+
 @settings(max_examples=10, deadline=None)
 @given(data=st.data(), method=st.sampled_from(METHODS))
 def test_statistical_unbiasedness_coarse(data, method):

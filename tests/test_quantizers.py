@@ -119,6 +119,31 @@ def test_compress_decompress_within_alpha(heavy_tailed):
         assert float(jnp.max(jnp.abs(out))) <= float(meta.alpha) * (1 + 1e-5)
 
 
+def test_decode_rejects_mismatched_wire(heavy_tailed):
+    """A wire whose packed length disagrees with shape/bits must raise, not
+    silently truncate through unpack_codes."""
+    from repro.core.compressors import decode, encode
+
+    g = heavy_tailed[:1000]
+    cfg = CompressorConfig(method="tqsgd", bits=3)
+    meta = plan(cfg, g)
+    wire = encode(cfg, g, meta, jax.random.key(0))
+    np.testing.assert_array_equal(
+        np.asarray(decode(cfg, wire, meta, g.shape)),
+        np.asarray(decode(cfg, wire, meta, g.shape)))  # correct wire round-trips
+    with pytest.raises(ValueError, match="packed uint32 words"):
+        decode(cfg, wire[:-1], meta, g.shape)          # truncated wire
+    with pytest.raises(ValueError, match="packed uint32 words"):
+        decode(cfg, jnp.concatenate([wire, wire[:3]]), meta, g.shape)  # oversized
+    with pytest.raises(ValueError, match="packed uint32 words"):
+        # right wire, wrong claimed element count
+        decode(cfg, wire, meta, (900,))
+    cfg_u = CompressorConfig(method="tqsgd", bits=3, pack=False)
+    codes = encode(cfg_u, g, meta, jax.random.key(0))
+    with pytest.raises(ValueError, match="unpacked wire"):
+        decode(cfg_u, codes[:-1], meta, g.shape)
+
+
 def test_dsgd_identity(heavy_tailed):
     cfg = CompressorConfig(method="dsgd")
     np.testing.assert_array_equal(
