@@ -17,7 +17,7 @@ import sys
 import textwrap
 
 from repro.core.compressors import CompressorConfig
-from repro.dist.collectives import decode_hbm_bytes, wire_bytes_per_device
+from repro.dist.collectives import decode_hbm_bytes, encode_hbm_bytes, wire_bytes_per_device
 
 RUNS = pathlib.Path(__file__).resolve().parents[1] / "runs" / "dryrun"
 ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -57,7 +57,8 @@ print(f"collectives,n_grad_leaves,0,{n_leaves}")
 for sync in ("two_phase", "faithful"):
     out, n_coll = {}, {}
     for name, mb in [("leaf", 0.0), ("bucket", 4.0)]:
-        ts = TrainStepConfig(sync=sync, compressor=CompressorConfig(method="tqsgd", bits=4), bucket_mb=mb)
+        ts = TrainStepConfig(sync=sync, compressor=CompressorConfig(method="tqsgd", bits=4),
+                             bucket_mb=mb, metrics_gnorm=False)
         jfn = jax.jit(_make_sync_fn(ts, mesh, pspecs, grads_like))
         n_coll[name] = sum(count(jfn.trace(grads, key).jaxpr.jaxpr, collections.Counter()).values())
         out[name] = jfn(grads, key)
@@ -134,6 +135,27 @@ def main(quick: bool = False):
     un = decode_hbm_bytes(cfg, bsizes, shards, fused=False, bits=[2, 2, 4, 4])
     fu = decode_hbm_bytes(cfg, bsizes, shards, fused=True, bits=[2, 2, 4, 4])
     rows.append(f"collectives,decode_adaptive_2244_fused_vs_unfused,0,{un / fu:.2f}")
+
+    # encode-side HBM traffic: the fused EF-correct→stats +
+    # quantize→pack→residual kernels vs the seed multi-pass pipeline
+    # (leaf EF add, telemetry sweep, sort-based plan, encode, pack,
+    # own-decode, residual, EF split/restack).  4 MB buckets = 1M elements.
+    nb4 = 1 << 20
+    for bits in (2, 3, 4, 8):
+        un = encode_hbm_bytes(cfg, nb4, fused=False, bits=bits)
+        fu = encode_hbm_bytes(cfg, nb4, fused=True, bits=bits)
+        rows.append(f"collectives,encode_b{bits}_unfused_hbm_4mb,0,{un:.3e}")
+        rows.append(f"collectives,encode_b{bits}_fused_hbm_4mb,0,{fu:.3e}")
+        rows.append(f"collectives,encode_b{bits}_fused_vs_unfused,0,{un / fu:.2f}")
+    # without EF/telemetry the fused path still wins (the one-pass stats
+    # read replaces the subsampled sort at better statistics)
+    un = encode_hbm_bytes(cfg, nb4, fused=False, ef=False, adaptive=False)
+    fu = encode_hbm_bytes(cfg, nb4, fused=True, ef=False, adaptive=False)
+    rows.append(f"collectives,encode_b3_noef_fused_vs_unfused,0,{un / fu:.2f}")
+    # heterogeneous adaptive wire: per-bucket sum
+    un = encode_hbm_bytes(cfg, bsizes, fused=False, bits=[2, 2, 4, 4])
+    fu = encode_hbm_bytes(cfg, bsizes, fused=True, bits=[2, 2, 4, 4])
+    rows.append(f"collectives,encode_adaptive_2244_fused_vs_unfused,0,{un / fu:.2f}")
 
     # bucketed codec vs per-leaf codec on a live 4-device host mesh — skipped
     # in quick mode (CI smoke): the tier-1 test job runs the same script via

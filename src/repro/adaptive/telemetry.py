@@ -21,15 +21,18 @@ full sort ``jnp.quantile`` runs in the offline fit.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.distributions import GAMMA_MAX, GAMMA_MIN, EmpiricalDensity, PowerLawTail
+from repro.core.distributions import (
+    EmpiricalDensity,
+    PowerLawTail,
+    density_from_histogram,
+    tail_from_histogram,
+)
 from repro.kernels import stats as kstats
-
-_EPS = 1e-12
 
 NUM_BINS = kstats.NUM_BINS
 
@@ -61,21 +64,16 @@ def init_telemetry(n_buckets: int) -> TelemetryState:
 def _stats_jnp(g: jax.Array):
     """Vectorized single-pass jnp fallback for the fused kernel.
 
-    Scatter-add histogram instead of the kernel's one-hot matmul: safe under
-    shard_map on the pinned toolchain and O(n).  Counts/max are identical to
-    the kernel; float sums may differ in the last bits (reduction order),
-    which the EMA telemetry does not care about — the bit-exact contract is
-    pinned between ``kernels.ops.bucket_stats`` and ``kernels.ref``.
+    Scatter-add histogram instead of the kernel's one-hot matmul
+    (``kernels.ref.bucket_stats_scatter``): safe under shard_map on the
+    pinned toolchain and O(n).  Counts/max are identical to the kernel;
+    float sums may differ in the last bits (reduction order), which the EMA
+    telemetry does not care about — the bit-exact contract is pinned
+    between ``kernels.ops.bucket_stats`` and ``kernels.ref``.
     """
-    flat = g.reshape(-1).astype(jnp.float32)
-    gabs = jnp.abs(flat)
-    lnab = jnp.log(jnp.maximum(gabs, 1e-30))
-    w = (kstats.LOG2_HI - kstats.LOG2_LO) / NUM_BINS
-    b = jnp.clip(jnp.floor((lnab / jnp.log(2.0) - kstats.LOG2_LO) / w),
-                 0.0, NUM_BINS - 1.0).astype(jnp.int32)
-    counts = jnp.zeros((NUM_BINS,), jnp.float32).at[b].add(1.0)
-    log_sums = jnp.zeros((NUM_BINS,), jnp.float32).at[b].add(lnab)
-    return counts, log_sums, jnp.max(gabs), jnp.sum(flat), jnp.sum(flat * flat)
+    from repro.kernels.ref import bucket_stats_scatter
+
+    return bucket_stats_scatter(g)
 
 
 def bucket_statistics(g: jax.Array, *, use_pallas: bool = False):
@@ -88,21 +86,51 @@ def bucket_statistics(g: jax.Array, *, use_pallas: bool = False):
     return _stats_jnp(g)
 
 
+def correct_stats(g: jax.Array, e=None, *, use_pallas: bool = False):
+    """One-pass EF correction + statistics of one flat gradient bucket.
+
+    Returns ``(corrected, (counts, log_sums, g_max, g_sum, g_sumsq))`` with
+    ``corrected = g + e`` (``g`` itself when ``e`` is None) and the stats of
+    the *corrected* bucket — everything ``compressors.plan_from_stats`` and
+    the telemetry EMA consume.  ``use_pallas`` selects the fused
+    ``kernels.ops.ef_correct_stats`` VMEM pass; the fallback is the
+    shard_map-safe scatter-add pass over ``g + e``.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        if e is None:
+            s = kops.bucket_stats(g)
+            return g, (s.counts, s.log_sums, s.g_max, s.g_sum, s.g_sumsq)
+        c, s = kops.ef_correct_stats(g, e)
+        return c, (s.counts, s.log_sums, s.g_max, s.g_sum, s.g_sumsq)
+    c = g if e is None else g + e
+    return c, _stats_jnp(c)
+
+
 def update_telemetry(
     state: TelemetryState,
     buckets: Sequence[jax.Array],
     *,
     decay: float = 0.9,
     use_pallas: bool = False,
+    stats: Optional[Sequence] = None,
 ) -> TelemetryState:
-    """Fold one step's buckets into the EMA state (B must match)."""
+    """Fold one step's buckets into the EMA state (B must match).
+
+    ``stats`` (one :func:`correct_stats`-shaped tuple per bucket) skips the
+    statistics pass entirely — the train step hands over the stats the
+    fused EF-correct kernel already produced, so the telemetry update costs
+    zero extra HBM sweeps.
+    """
     if len(buckets) != state.counts.shape[0]:
         raise ValueError(
             f"telemetry state has {state.counts.shape[0]} buckets, got {len(buckets)}")
     d = jnp.float32(decay)
     counts, log_sums, gmaxs, means, msqs = [], [], [], [], []
     for b, g in enumerate(buckets):
-        c, ls, gm, gs, gq = bucket_statistics(g, use_pallas=use_pallas)
+        c, ls, gm, gs, gq = (stats[b] if stats is not None
+                             else bucket_statistics(g, use_pallas=use_pallas))
         n = jnp.float32(max(g.size, 1))
         counts.append(d * state.counts[b] + (1.0 - d) * c)
         log_sums.append(d * state.log_sums[b] + (1.0 - d) * ls)
@@ -146,13 +174,8 @@ def estimate_densities(state: TelemetryState) -> list[EmpiricalDensity]:
     ``core.theory`` Q_N error model run straight off telemetry.
     """
     edges = kstats.bin_edges()
-    widths = jnp.maximum(jnp.diff(edges), _EPS)
-    out = []
-    for b in range(state.counts.shape[0]):
-        counts = state.counts[b]
-        total = jnp.maximum(jnp.sum(counts), 1.0)
-        out.append(EmpiricalDensity(edges=edges, density=counts / (2.0 * total * widths)))
-    return out
+    return [density_from_histogram(state.counts[b], edges)
+            for b in range(state.counts.shape[0])]
 
 
 def estimate_tails(state: TelemetryState, *, gmin_quantile: float = 0.9) -> PowerLawTail:
@@ -165,18 +188,7 @@ def estimate_tails(state: TelemetryState, *, gmin_quantile: float = 0.9) -> Powe
     without touching the raw gradients.
     """
     edges = kstats.bin_edges()
-
-    def one(counts, log_sums, g_max):
-        total = jnp.sum(counts)
-        cum = jnp.cumsum(counts)
-        idx = jnp.clip(jnp.searchsorted(cum, gmin_quantile * total), 0, NUM_BINS - 1)
-        g_min = jnp.maximum(jnp.minimum(edges[idx + 1], g_max), _EPS)
-        n_tail = total - cum[idx]
-        cum_log = jnp.cumsum(log_sums)
-        sum_log = (cum_log[NUM_BINS - 1] - cum_log[idx]) - n_tail * jnp.log(g_min)
-        gamma = jnp.clip(1.0 + n_tail / jnp.maximum(sum_log, _EPS), GAMMA_MIN, GAMMA_MAX)
-        rho = jnp.maximum(0.5 * n_tail / jnp.maximum(total, 1.0), _EPS)
-        return PowerLawTail(gamma=gamma, g_min=g_min, rho=rho,
-                            g_max=jnp.maximum(g_max, _EPS))
-
-    return jax.vmap(one)(state.counts, state.log_sums, state.g_max)
+    return jax.vmap(
+        lambda c, ls, gm: tail_from_histogram(c, ls, gm, edges,
+                                              gmin_quantile=gmin_quantile)
+    )(state.counts, state.log_sums, state.g_max)

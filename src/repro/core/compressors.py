@@ -62,18 +62,44 @@ class CompressorConfig:
         return num_levels(self.bits)
 
 
+_PLAN_SAMPLE_CHUNKS = 64
+
+
+def _plan_sample(g32: jax.Array, sample: int) -> jax.Array:
+    """Contiguous-chunk statistics subsample of a flat fp32 tensor.
+
+    The old ``g32[::stride]`` strided gather is a scatter/gather HBM access
+    pattern on TPU (one element per cache line).  Instead, take
+    ``_PLAN_SAMPLE_CHUNKS`` *contiguous* runs at evenly spaced offsets via
+    a reshape + leading-slice — each run is a sequential DMA — which keeps
+    the sample spread across the tensor (buckets concatenate leaves of
+    different scales, so a single leading chunk would be biased).
+    """
+    n = g32.size
+    if not sample or n <= sample:
+        return g32
+    # always spread the runs across the whole tensor (a single leading chunk
+    # would bias toward the first leaves of a bucket), but never more chunks
+    # than sampled elements: a tiny plan_sample must still yield >= 1
+    # element per run (the strided path it replaces always did)
+    chunks = max(min(_PLAN_SAMPLE_CHUNKS, sample), 1)
+    span = n // chunks
+    run = max(min(sample // chunks, span), 1)
+    return g32[: chunks * span].reshape(chunks, span)[:, :run].reshape(-1)
+
+
 def plan(cfg: CompressorConfig, g: jax.Array) -> QuantMeta:
     """Build the per-tensor quantization plan (codebook + α) for ``g``.
 
     This is the statistics pass of Alg. 1 line 6: fit the power-law tail,
     solve for α per the method, construct the codebook.  Tensors beyond
-    ``plan_sample`` elements are strided-subsampled for the statistics (the
+    ``plan_sample`` elements are subsampled with contiguous chunks (the
     tail fit is estimation; the encode itself always sees every element).
+    This sort-based fit is the *fallback* statistics path — the bucketed
+    codec feeds :func:`plan_from_stats` from the fused one-pass
+    histogram/Hill-sum kernels instead and never sorts.
     """
-    g32 = g.reshape(-1).astype(jnp.float32)
-    if cfg.plan_sample and g32.size > cfg.plan_sample:
-        stride = -(-g32.size // cfg.plan_sample)
-        g32 = g32[::stride]
+    g32 = _plan_sample(g.reshape(-1).astype(jnp.float32), cfg.plan_sample)
     tail = dist.fit_power_law_tail(g32, gmin_quantile=cfg.gmin_quantile,
                                    approx_quantile=cfg.approx_gmin)
     if cfg.method == "qsgd":
@@ -97,6 +123,49 @@ def plan(cfg: CompressorConfig, g: jax.Array) -> QuantMeta:
     else:  # dsgd
         alpha = tail.g_max
         levels = uniform_levels(alpha, cfg.bits)
+    return QuantMeta(levels=levels.astype(jnp.float32), alpha=jnp.asarray(alpha, jnp.float32))
+
+
+def plan_from_stats(
+    cfg: CompressorConfig,
+    counts: jax.Array,
+    log_sums: jax.Array,
+    g_max: jax.Array,
+) -> QuantMeta:
+    """Quantization plan from precomputed one-pass bucket statistics.
+
+    ``counts``/``log_sums`` are the 128-bin log2-spaced |g| histogram and
+    per-bin ln|g| Hill sums of ``kernels.stats`` (one fused VMEM pass —
+    ``kernels.ops.bucket_stats`` / ``ef_correct_stats`` — or the
+    scatter-add fallback), ``g_max`` the exact max |g|.  The tail comes
+    from :func:`repro.core.distributions.tail_from_histogram`, the density
+    for the non-uniform codebooks from :func:`density_from_histogram`, so
+    no sort, quantile, or second statistics sweep over the gradient bytes
+    is needed — :func:`plan` (sort-based ``fit_power_law_tail`` /
+    ``fit_empirical_density``) stays as the raw-tensor fallback.
+    """
+    from repro.kernels.stats import bin_edges
+
+    edges = bin_edges()
+    tail = dist.tail_from_histogram(counts, log_sums, g_max, edges,
+                                    gmin_quantile=cfg.gmin_quantile)
+    if cfg.method in ("qsgd", "dsgd"):
+        alpha = tail.g_max
+        levels = uniform_levels(alpha, cfg.bits)
+    elif cfg.method == "tqsgd":
+        alpha = optimal.solve_alpha_uniform(tail, cfg.bits, iters=cfg.alpha_iters)
+        levels = uniform_levels(alpha, cfg.bits)
+    else:
+        dens = dist.density_from_histogram(counts, edges)
+        if cfg.method == "nqsgd":
+            alpha = tail.g_max
+            levels = optimal.nonuniform_codebook(dens, alpha, cfg.bits)
+        elif cfg.method == "tnqsgd":
+            alpha = optimal.solve_alpha_nonuniform(tail, dens, cfg.bits, iters=cfg.alpha_iters)
+            levels = optimal.nonuniform_codebook(dens, alpha, cfg.bits)
+        else:  # tbqsgd
+            alpha, k = optimal.solve_biscaled(tail, dens, cfg.bits, iters=cfg.alpha_iters)
+            levels = optimal.biscaled_codebook(dens, alpha, k, cfg.bits)
     return QuantMeta(levels=levels.astype(jnp.float32), alpha=jnp.asarray(alpha, jnp.float32))
 
 

@@ -96,6 +96,42 @@ def fit_power_law_tail(
     return PowerLawTail(gamma=gamma, g_min=g_min, rho=rho, g_max=jnp.maximum(g_max, _EPS))
 
 
+def tail_from_histogram(
+    counts: jax.Array,
+    log_sums: jax.Array,
+    g_max: jax.Array,
+    edges: jax.Array,
+    *,
+    gmin_quantile: float = 0.9,
+) -> PowerLawTail:
+    """Power-law tail fit from a |g| histogram + per-bin ln|g| sums.
+
+    The one-pass-statistics twin of :func:`fit_power_law_tail`: ``g_min``
+    snaps to the upper edge of the bin where the |g| CDF crosses
+    ``gmin_quantile``, and the Hill estimator runs over the *whole* bins
+    above it — the suffix count / suffix ln-sum of the accumulators, so the
+    tail sum is exact with respect to the histogram (``Σ ln g_j − n_tail ln
+    g_min``) at the cost of ≤ one bin of quantile resolution.  ``counts``
+    and ``log_sums`` are (K,) on the (K+1,) ``edges``; scaling both by a
+    common factor (an EMA decay) cancels in every ratio, so EMA
+    accumulators need no debiasing.  This is what the fused encode kernels
+    feed ``compressors.plan_from_stats`` and what ``adaptive.telemetry``
+    estimates replan tails with.
+    """
+    k = counts.shape[0]
+    total = jnp.sum(counts)
+    cum = jnp.cumsum(counts)
+    idx = jnp.clip(jnp.searchsorted(cum, gmin_quantile * total), 0, k - 1)
+    g_min = jnp.maximum(jnp.minimum(edges[idx + 1], g_max), _EPS)
+    n_tail = total - cum[idx]
+    cum_log = jnp.cumsum(log_sums)
+    sum_log = (cum_log[k - 1] - cum_log[idx]) - n_tail * jnp.log(g_min)
+    gamma = jnp.clip(1.0 + n_tail / jnp.maximum(sum_log, _EPS), GAMMA_MIN, GAMMA_MAX)
+    rho = jnp.maximum(0.5 * n_tail / jnp.maximum(total, 1.0), _EPS)
+    return PowerLawTail(gamma=gamma, g_min=g_min, rho=rho,
+                        g_max=jnp.maximum(g_max, _EPS))
+
+
 def tail_mass(tail: PowerLawTail, alpha: jax.Array) -> jax.Array:
     """One-sided mass beyond ``alpha``:  int_alpha^inf p(g) dg = rho (g_min/alpha)^(gamma-1)."""
     return tail.rho * jnp.power(tail.g_min / jnp.maximum(alpha, _EPS), tail.gamma - 1.0)
@@ -162,6 +198,19 @@ class EmpiricalDensity:
     @property
     def num_bins(self) -> int:
         return self.density.shape[0]
+
+
+def density_from_histogram(counts: jax.Array, edges: jax.Array) -> EmpiricalDensity:
+    """Piecewise-constant two-sided density from a |g| histogram.
+
+    The same contract :func:`fit_empirical_density` produces, but from
+    precomputed (possibly EMA-scaled, possibly non-uniform-bin) counts —
+    ``_cum_integral`` handles non-uniform widths, so the ``core.optimal``
+    solvers and codebooks run straight off the one-pass statistics.
+    """
+    widths = jnp.maximum(jnp.diff(edges), _EPS)
+    total = jnp.maximum(jnp.sum(counts), 1.0)
+    return EmpiricalDensity(edges=edges, density=counts / (2.0 * total * widths))
 
 
 def fit_empirical_density(g: jax.Array, *, num_bins: int = 128) -> EmpiricalDensity:

@@ -84,3 +84,72 @@ def decode_hbm_bytes(cfg: CompressorConfig, n, peers: int, fused: bool, bits=Non
     if fused:
         return words + 4.0 * n
     return words + 2 * 4.0 * peers * n + 2 * 4.0 * peers * n + 4.0 * n
+
+
+def encode_hbm_bytes(cfg: CompressorConfig, n, fused: bool, *, ef: bool = True,
+                     adaptive: bool = True, bits=None) -> float:
+    """HBM bytes one device moves to turn an n-element gradient bucket into
+    wire words + next EF residual (the encode half of every sync mode).
+
+    The model covers the encode pipeline from corrected-gradient formation
+    through residual write-back; the leaf→bucket coalescing copy is
+    identical in both layouts and excluded from both.
+
+    - unfused (the pre-fusion path): the leaf-wise EF add (read g, read e,
+      write corrected), a telemetry statistics sweep (``adaptive``), the
+      ``plan()`` statistics pass — a subsample gather plus an
+      O(s·log s) sort for the exact quantile (``cfg.approx_gmin`` swaps the
+      sort for ~2 extra histogram passes over the sample), the encode (read
+      corrected, write uint8 codes), a separate ``pack_codes`` pass (read
+      codes, write words), the own-dequantization (read codes, write fp32
+      owns), the ``corrected − owns`` residual (read both, write), the
+      ``bucket_split`` of the residual back to leaf layout, and the
+      leaf-pytree EF restack/constraint round-trip on the next step;
+    - fused (``kernels.encode_fused``): ``ef_correct_stats`` reads g and e
+      once and writes the corrected bucket (statistics stay in VMEM — the
+      telemetry sweep and the whole ``plan()`` pass disappear into it), and
+      ``encode_pack_residual`` reads the corrected bucket and writes the
+      wire words + the bucket-resident residual.  Codes and owns never
+      reach HBM, and the EF state needs no split/restack.
+
+    ``ef=False`` drops the correction/residual terms on both sides (the
+    fused side still pays the full-bucket stats read that replaces the
+    subsampled sort — better statistics for strictly fewer bytes only once
+    the EF/telemetry sweeps are in play).  ``n``/``bits`` may be per-bucket
+    sequences (the heterogeneous adaptive wire); the cost sums.
+    """
+    if isinstance(n, (list, tuple)):
+        bl = bits if isinstance(bits, (list, tuple)) else [bits] * len(n)
+        if len(bl) != len(n):
+            raise ValueError(f"{len(bl)} bit-widths vs {len(n)} buckets")
+        return sum(encode_hbm_bytes(cfg, nb, fused, ef=ef, adaptive=adaptive, bits=b)
+                   for nb, b in zip(n, bl))
+    from math import ceil, log2
+
+    from repro.core.quantizers import packed_size
+
+    b = cfg.bits if bits is None else int(bits)
+    words = 4.0 * packed_size(n, b)
+    if fused:
+        total = 4.0 * n                      # ef_correct_stats: read g
+        if ef:
+            total += 8.0 * n                 # ... read e, write corrected
+        total += 4.0 * n + words             # encode_pack: read corrected, write wire
+        if ef:
+            total += 4.0 * n                 # ... write bucket-resident residual
+        return total
+    s = min(n, cfg.plan_sample) if cfg.plan_sample else n
+    if cfg.approx_gmin:
+        plan_pass = 4.0 * s * 3              # gather + 2 histogram passes
+    else:
+        plan_pass = 4.0 * s * (1 + 2 * max(ceil(log2(max(s, 2))), 1))  # gather + sort
+    total = plan_pass + 4.0 * n + 1.0 * n + 1.0 * n + words   # encode + pack passes
+    if adaptive:
+        total += 4.0 * n                     # standalone telemetry stats sweep
+    if ef:
+        total += 12.0 * n                    # leaf-wise EF add: read g, read e, write c
+        total += 1.0 * n + 4.0 * n           # own-decode: read codes, write owns
+        total += 12.0 * n                    # residual: read c + owns, write resid
+        total += 8.0 * n                     # bucket_split of the residual
+        total += 8.0 * n                     # leaf EF restack/constraint round-trip
+    return total

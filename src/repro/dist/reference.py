@@ -11,8 +11,10 @@ indexing over a stacked peer axis on one device:
 
 The *local* codec ops are not re-implemented: planning, encoding and the
 fused decode go through the very same ``sharded_codec`` helpers the mesh
-path calls (``_plan_encode_rows``, ``_encode_flat``, ``_encode_packed_flat``,
-``decode_reduce``, ``decode_rows``), so under a common jit the reference is
+path calls (``_plan_bucket``, ``_plan_encode_rows``, ``encode_pack``,
+``encode_pack_residual``, ``decode_reduce``, ``decode_rows``, and
+``adaptive.telemetry.correct_stats`` for the EF+stats pass), so under a
+common jit the reference is
 **bit-identical** to the mesh result for every compressed mode — only the
 collective wiring and key folding are spelled out here, which is precisely
 what ``tests/test_mesh_invariance.py`` pins.  (``dsgd`` uses ``jnp.mean``
@@ -30,9 +32,9 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.adaptive import telemetry as adaptive_telemetry
 from repro.core import compressors
 from repro.core.compressors import CompressorConfig, plan
-from repro.core.quantizers import pack_codes
 
 from . import sharded_codec as sc
 
@@ -62,14 +64,13 @@ def faithful_ring_mean(cfg: CompressorConfig, stacked: jax.Array, key,
     if n == 1:
         flat = stacked[0].reshape(-1).astype(jnp.float32)
         meta = plan(cfg, flat)
-        codes = sc._encode_flat(cfg, flat, meta, keys[0], use_pallas)
-        return jnp.take(meta.levels, codes.astype(jnp.int32))
+        words = sc.encode_pack(cfg, flat, meta, keys[0], use_pallas)
+        return sc.decode_reduce(cfg, words[None], meta.levels[None], flat.size, use_pallas)
     words, levels = [], []
     for i in range(n):
         flat = stacked[i].reshape(-1).astype(jnp.float32)
         meta = plan(cfg, flat)
-        codes = sc._encode_flat(cfg, flat, meta, _fold(keys[i], i), use_pallas)
-        words.append(pack_codes(codes, cfg.bits))
+        words.append(sc.encode_pack(cfg, flat, meta, _fold(keys[i], i), use_pallas))
         levels.append(meta.levels)
     m = stacked.shape[1]
     return sc.decode_reduce(cfg, jnp.stack(words), jnp.stack(levels), m, use_pallas)
@@ -102,8 +103,7 @@ def two_phase_mean(cfg: CompressorConfig, stacked: jax.Array, key,
     words2, levels2 = [], []
     for j in range(n):
         meta2 = plan(cfg, chunks[j])
-        codes2 = sc._encode_flat(cfg, chunks[j], meta2, keys[j][1], use_pallas)
-        words2.append(pack_codes(codes2, cfg.bits))
+        words2.append(sc.encode_pack(cfg, chunks[j], meta2, keys[j][1], use_pallas))
         levels2.append(meta2.levels)
     full = sc.decode_rows(cfg, jnp.stack(words2), jnp.stack(levels2), m, use_pallas)
     return full.reshape(n * m)[:size]
@@ -129,57 +129,79 @@ def hierarchical_mean(cfg: CompressorConfig, stacked: jax.Array, n_pod: int, key
 # ---------------------------------------------------------------------------
 
 
+def _peer_stats(cfg: CompressorConfig, buckets: list, use_pallas: bool,
+                stats: Optional[list]) -> list:
+    """Per-peer × per-bucket one-pass statistics tuples (computed from each
+    peer's bucket row when not handed in): ``stats[i][b]``."""
+    if stats is not None:
+        return stats
+    n = buckets[0].shape[0]
+    return [[adaptive_telemetry.bucket_statistics(sb[i].astype(jnp.float32),
+                                                  use_pallas=use_pallas)
+             for sb in buckets] for i in range(n)]
+
+
 def bucketed_faithful_ring_mean(
     cfg: CompressorConfig, buckets: list, key, use_pallas: bool = False,
-    bits: Optional[Sequence[int]] = None,
-) -> list:
-    """``sc.bucketed_faithful_ring_mean`` over stacked (n, m_b) buckets."""
+    bits: Optional[Sequence[int]] = None, stats: Optional[list] = None,
+) -> tuple[list, list]:
+    """``sc.bucketed_faithful_ring_mean`` over stacked (n, m_b) buckets.
+    Returns ``(mean_buckets, resid_stacked)`` with ``resid_stacked[b]`` the
+    (n, m_b) per-peer EF residuals."""
     n = buckets[0].shape[0]
     keys = _in_keys(key, n)
     keys = [_fold(k, i) for i, k in enumerate(keys)] if n > 1 else keys
     cfgs = sc._bucket_cfgs(cfg, len(buckets), bits)
-    means = []
+    stats = _peer_stats(cfg, buckets, use_pallas, stats)
+    means, resids = [], []
     for b, sb in enumerate(buckets):
-        words, levels, owns = [], [], []
+        words, levels, rs = [], [], []
         for i in range(n):
             flat = sb[i].astype(jnp.float32)
-            meta = plan(cfgs[b], flat)
-            w, codes = sc._encode_packed_flat(cfgs[b], flat, meta,
-                                              jax.random.fold_in(keys[i], b), use_pallas)
+            meta = sc._plan_bucket(cfgs[b], flat, stats[i][b], use_pallas)
+            w, r = sc.encode_pack_residual(cfgs[b], flat, meta,
+                                           jax.random.fold_in(keys[i], b), use_pallas)
             words.append(w)
             levels.append(meta.levels)
-            owns.append(jnp.take(meta.levels, codes.astype(jnp.int32)))
+            rs.append(r)
+        resids.append(jnp.stack(rs))
         if n == 1:
-            means.append(owns[0])
+            means.append(sc.decode_reduce(cfgs[b], words[0][None], levels[0][None],
+                                          sb.shape[1], use_pallas))
         else:
             means.append(sc.decode_reduce(cfgs[b], jnp.stack(words), jnp.stack(levels),
                                           sb.shape[1], use_pallas))
-    return means
+    return means, resids
 
 
 def bucketed_two_phase_mean(
     cfg: CompressorConfig, buckets: list, key, use_pallas: bool = False,
-    bits: Optional[Sequence[int]] = None,
-) -> list:
-    """``sc.bucketed_two_phase_mean`` over stacked (n, m_b) buckets."""
+    bits: Optional[Sequence[int]] = None, stats: Optional[list] = None,
+) -> tuple[list, list]:
+    """``sc.bucketed_two_phase_mean`` over stacked (n, m_b) buckets.
+    Returns ``(mean_buckets, resid_stacked)``."""
     n = buckets[0].shape[0]
     if n == 1:
-        return [sb[0].astype(jnp.float32) for sb in buckets]
+        flats = [sb[0].astype(jnp.float32) for sb in buckets]
+        return flats, [jnp.zeros_like(f)[None] for f in flats]
     keys = [jax.random.split(_fold(k, j)) for j, k in enumerate(_in_keys(key, n))]
     cfgs = sc._bucket_cfgs(cfg, len(buckets), bits)
-    means = []
+    stats = _peer_stats(cfg, buckets, use_pallas, stats)
+    means, resids = [], []
     for b, sb in enumerate(buckets):
         size = sb.shape[1]
         mc = (size + (-size) % (n * 32)) // n
-        words, levels = [], []
+        words, levels, rs = [], [], []
         for i in range(n):
             flat = sb[i].astype(jnp.float32)
             padded = jnp.pad(flat, (0, (-size) % (n * 32)))
-            meta = plan(cfgs[b], flat)
-            w, _ = sc._encode_packed_flat(cfgs[b], padded, meta,
-                                          jax.random.fold_in(keys[i][0], b), use_pallas)
+            meta = sc._plan_bucket(cfgs[b], flat, stats[i][b], use_pallas)
+            w, r = sc.encode_pack_residual(cfgs[b], padded, meta,
+                                           jax.random.fold_in(keys[i][0], b), use_pallas)
             words.append(w.reshape(n, -1))
             levels.append(meta.levels)
+            rs.append(r[:size])
+        resids.append(jnp.stack(rs))
         chunks = [
             sc.decode_reduce(cfgs[b], jnp.stack([words[i][j] for i in range(n)]),
                              jnp.stack(levels), mc, use_pallas)
@@ -187,39 +209,110 @@ def bucketed_two_phase_mean(
         ]
         words2, levels2 = [], []
         for j in range(n):
-            meta2 = plan(cfgs[b], chunks[j])
-            w2, _ = sc._encode_packed_flat(cfgs[b], chunks[j], meta2,
-                                           jax.random.fold_in(keys[j][1], b), use_pallas)
-            words2.append(w2)
+            meta2 = sc._plan_bucket(cfgs[b], chunks[j], None, use_pallas)
+            words2.append(sc.encode_pack(cfgs[b], chunks[j], meta2,
+                                         jax.random.fold_in(keys[j][1], b), use_pallas))
             levels2.append(meta2.levels)
         vals = sc.decode_rows(cfgs[b], jnp.stack(words2), jnp.stack(levels2), mc,
                               use_pallas)
         means.append(vals.reshape(n * mc)[:size])
-    return means
+    return means, resids
 
 
 def bucketed_hierarchical_mean(
     cfg: CompressorConfig, buckets: list, n_pod: int, key, use_pallas: bool = False,
-    bits: Optional[Sequence[int]] = None,
-) -> list:
+    bits: Optional[Sequence[int]] = None, stats: Optional[list] = None,
+) -> tuple[list, list]:
     """``sc.bucketed_hierarchical_mean``: intra-pod two-phase (keys folded by
-    the *full* dp index), faithful pod-mean exchange across pods."""
+    the *full* dp index), faithful pod-mean exchange across pods.  The EF
+    residual is the intra-pod stage's (mirroring the mesh path)."""
     n = buckets[0].shape[0]
     nd = n // n_pod
     k1, k2 = jax.random.split(key)
-    pod_means = []
+    stats = _peer_stats(cfg, buckets, use_pallas, stats)
+    pod_means, pod_resids = [], []
     for p in range(n_pod):
         in_keys = [_fold(k1, p * nd + d) for d in range(nd)]
-        pod_means.append(bucketed_two_phase_mean(
-            cfg, [sb[p * nd:(p + 1) * nd] for sb in buckets], in_keys, use_pallas, bits))
+        m, r = bucketed_two_phase_mean(
+            cfg, [sb[p * nd:(p + 1) * nd] for sb in buckets], in_keys, use_pallas,
+            bits, stats[p * nd:(p + 1) * nd])
+        pod_means.append(m)
+        pod_resids.append(r)
     stacked = [jnp.stack([pod_means[p][b] for p in range(n_pod)])
                for b in range(len(buckets))]
-    return bucketed_faithful_ring_mean(cfg, stacked, k2, use_pallas, bits)
+    means, _ = bucketed_faithful_ring_mean(cfg, stacked, k2, use_pallas, bits)
+    resids = [jnp.concatenate([pod_resids[p][b] for p in range(n_pod)])
+              for b in range(len(buckets))]
+    return means, resids
 
 
 # ---------------------------------------------------------------------------
 # Top level: the shard_map body of ``_make_sync_fn``
 # ---------------------------------------------------------------------------
+
+
+def reference_sync_state(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Array,
+                         ef=None, tstate=None):
+    """Full bucketed-sync replica over the bucket-resident state layout.
+
+    Replays ``train_step._sync_buckets`` for every peer on one device:
+    per-peer fused EF correction + one-pass statistics
+    (``adaptive.telemetry.correct_stats``), histogram-driven plans, the
+    fused encode-pack-residual, and the collective replay.  ``ef`` is a
+    list of stacked (n, m_b) bucket-resident residual arrays, ``tstate`` a
+    per-peer-stacked :class:`~repro.adaptive.TelemetryState`.  Returns
+    ``(mean_leaves, resid_stacked | None, new_tstate | None)`` —
+    bit-identical to the mesh under a common jit for the codebook methods,
+    which is what the EF+adaptive rows of ``tests/test_mesh_invariance.py``
+    pin.
+    """
+    cfg = ts.compressor
+    n = 1
+    for s in dp_sizes:
+        n *= s
+    n_pod = n // dp_sizes[-1]
+    shapes = [tuple(x.shape[1:]) for x in stacked_leaves]
+    bp = compressors.plan_buckets([x[0].size for x in stacked_leaves],
+                                  ts.bucket_elements)
+    per_peer = [compressors.bucket_concat([x[j] for x in stacked_leaves], bp)
+                for j in range(n)]
+    compressed = not (ts.sync == "dsgd" or cfg.method == "dsgd")
+    stats = None
+    if compressed or tstate is not None:
+        stats = []
+        for j in range(n):
+            row, srow = [], []
+            for b, g in enumerate(per_peer[j]):
+                c, st = adaptive_telemetry.correct_stats(
+                    g, ef[b][j] if ef is not None else None,
+                    use_pallas=cfg.use_pallas)
+                row.append(c)
+                srow.append(st)
+            per_peer[j] = row
+            stats.append(srow)
+    new_t = None
+    if tstate is not None:
+        rows = [adaptive_telemetry.update_telemetry(
+            jax.tree.map(lambda x, j=j: x[j], tstate), per_peer[j],
+            decay=ts.adaptive.ema, use_pallas=cfg.use_pallas, stats=stats[j])
+            for j in range(n)]
+        new_t = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+    buckets = [jnp.stack([per_peer[j][b] for j in range(n)])
+               for b in range(bp.n_buckets)]
+    if not compressed:
+        means, resids = [jnp.mean(sb, axis=0) for sb in buckets], None
+    elif ts.sync == "faithful":
+        means, resids = bucketed_faithful_ring_mean(cfg, buckets, key,
+                                                    cfg.use_pallas, ts.bits_plan, stats)
+    elif ts.sync == "two_phase" or len(dp_sizes) == 1:
+        means, resids = bucketed_two_phase_mean(cfg, buckets, key,
+                                                cfg.use_pallas, ts.bits_plan, stats)
+    else:
+        means, resids = bucketed_hierarchical_mean(cfg, buckets, n_pod, key,
+                                                   cfg.use_pallas, ts.bits_plan, stats)
+    if not ts.error_feedback:
+        resids = None
+    return compressors.bucket_split(means, bp, shapes), resids, new_t
 
 
 def reference_sync(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Array) -> list:
@@ -229,7 +322,8 @@ def reference_sync(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Array) ->
     (traversal order), peer axis row-major over ``dp_sizes`` = the mesh's
     (pods…, data) manual axis sizes.  Returns the mean leaves (leaf shapes).
     Mirrors ``train_step._sync_buckets`` / ``_sync_leaf`` dispatch, including
-    the ``bucket_mb=0`` per-leaf codec and heterogeneous ``bits_plan``.
+    the ``bucket_mb=0`` per-leaf codec and heterogeneous ``bits_plan``
+    (:func:`reference_sync_state` adds the EF/telemetry outputs).
     """
     cfg = ts.compressor
     n = 1
@@ -238,24 +332,8 @@ def reference_sync(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Array) ->
     n_pod = n // dp_sizes[-1]
     shapes = [tuple(x.shape[1:]) for x in stacked_leaves]
     if ts.bucket_mb > 0:
-        bp = compressors.plan_buckets([x[0].size for x in stacked_leaves],
-                                      ts.bucket_elements)
-        per_peer = [compressors.bucket_concat([x[j] for x in stacked_leaves], bp)
-                    for j in range(n)]
-        buckets = [jnp.stack([per_peer[j][b] for j in range(n)])
-                   for b in range(bp.n_buckets)]
-        if ts.sync == "dsgd" or cfg.method == "dsgd":
-            means = [jnp.mean(sb, axis=0) for sb in buckets]
-        elif ts.sync == "faithful":
-            means = bucketed_faithful_ring_mean(cfg, buckets, key,
-                                                cfg.use_pallas, ts.bits_plan)
-        elif ts.sync == "two_phase" or len(dp_sizes) == 1:
-            means = bucketed_two_phase_mean(cfg, buckets, key,
-                                            cfg.use_pallas, ts.bits_plan)
-        else:
-            means = bucketed_hierarchical_mean(cfg, buckets, n_pod, key,
-                                               cfg.use_pallas, ts.bits_plan)
-        return compressors.bucket_split(means, bp, shapes)
+        means, _, _ = reference_sync_state(ts, stacked_leaves, dp_sizes, key)
+        return means
     out = []
     for i, x in enumerate(stacked_leaves):
         ki = jax.random.fold_in(key, i)

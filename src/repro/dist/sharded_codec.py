@@ -28,11 +28,25 @@ collective regardless of bucket or leaf count.  An optional per-bucket
 ``bits`` plan (``repro.adaptive``) gives each bucket its own static wire
 width inside the same fused tensor — offsets stay trace-time static, and the
 collective count does not change.  Each function also returns the peer's own
-dequantized buckets, which is what error feedback needs to form the residual
-``corrected - C(corrected)``.
+per-bucket **EF residual** ``corrected − C(corrected)``, produced inside the
+fused encode.
 
 Per-chunk codebooks ride along with the codes as (levels, alpha) pairs —
 ``wire_bytes`` in ``core.compressors`` accounts for them.
+
+Encode side: the bucketed paths plan from precomputed one-pass statistics
+(``compressors.plan_from_stats`` over the histogram/Hill-sum tuples the
+train step's fused EF-correct→stats pass hands in via ``stats=``; computed
+inline for secondary stages like the two-phase phase-2 re-quantization) —
+the sort-based ``plan`` stays only on the per-leaf legacy codec.  All
+encodes route through :func:`encode_pack` / :func:`encode_pack_residual`,
+a kernel/jnp dispatch mirroring the decode side: ``use_pallas`` selects the
+``kernels.encode_fused`` Pallas kernels (quantize → bit-pack → residual in
+one VMEM pass; codes and the dequantized ``own`` tensor never reach HBM),
+otherwise the key-compatible sequential oracles in ``kernels.ref`` run the
+same op sequence (bit-identical wire words; the uniform residual's dequant
+multiply-add keeps ulp-level FMA slack) and stay shard_map-safe on the
+pinned toolchain.
 
 Decode side: every decode site routes through :func:`decode_reduce` /
 :func:`decode_rows` — fused unpack → dequant → (mean) passes over the
@@ -59,12 +73,11 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import CompressorConfig, plan
+from repro.core.compressors import CompressorConfig, plan, plan_from_stats
 from repro.core.quantizers import (
     QuantMeta,
     pack_codes,
     packed_size,
-    stochastic_encode,
     unpack_codes,
 )
 
@@ -115,23 +128,44 @@ def _peer_key(key: jax.Array, axis_name) -> jax.Array:
     return jax.random.fold_in(key, compat.flat_axis_index(axis_name))
 
 
-def _encode_flat(cfg: CompressorConfig, flat: jax.Array, meta: QuantMeta, key: jax.Array,
-                 use_pallas: bool) -> jax.Array:
-    """Flat fp32 -> uint8 codes, via the Pallas fast path when requested."""
-    if use_pallas and cfg.method in ("qsgd", "tqsgd", "dsgd"):
-        from repro.kernels import ops as kops
-
-        return kops.uniform_encode(flat, meta.alpha, cfg.bits, key)
-    if use_pallas:
-        from repro.kernels import ops as kops
-
-        return kops.codebook_encode(flat, meta.levels, key)
-    return stochastic_encode(flat, meta, key)
-
-
-# Methods whose codebook is the uniform linspace: the fused decode kernels
+# Methods whose codebook is the uniform linspace: the fused kernels encode/
 # dequantize them straight from α (code · 2α/s − α) instead of a table walk.
 _UNIFORM_DECODE = ("qsgd", "tqsgd", "dsgd")
+
+
+def _encode_dispatch(cfg: CompressorConfig, op: str, flat: jax.Array, meta: QuantMeta,
+                     key: jax.Array, use_pallas: bool):
+    """Kernel/jnp dispatch for the fused encode ops (mirror of
+    ``_decode_dispatch``): ``use_pallas`` selects ``kernels.encode_fused``
+    via the ``kernels.ops`` wrappers, else the key-compatible sequential
+    oracles in ``kernels.ref`` (shard_map-safe, bit-identical words)."""
+    if use_pallas:
+        from repro.kernels import ops as mod
+    else:
+        from repro.kernels import ref as mod
+    if cfg.method in _UNIFORM_DECODE:
+        return getattr(mod, f"uniform_{op}")(flat, meta.alpha, cfg.bits, key)
+    return getattr(mod, f"codebook_{op}")(flat, meta.levels, cfg.bits, key)
+
+
+def encode_pack(cfg: CompressorConfig, flat: jax.Array, meta: QuantMeta, key: jax.Array,
+                use_pallas: bool) -> jax.Array:
+    """Flat fp32 -> packed uint32 wire words in one fused pass (no codes,
+    no residual reach HBM)."""
+    return _encode_dispatch(cfg, "encode_pack", flat, meta, key, use_pallas)
+
+
+def encode_pack_residual(cfg: CompressorConfig, flat: jax.Array, meta: QuantMeta,
+                         key: jax.Array, use_pallas: bool) -> tuple[jax.Array, jax.Array]:
+    """Flat fp32 -> (uint32 wire words, ``flat − dequant(code)`` residual).
+
+    The fused EF encode: the residual is written in the same pass as the
+    pack, so the unpacked codes and the dequantized ``own`` tensor never
+    leave VMEM on the kernel path.  Exact for codebook methods
+    (``levels[code]`` is the interval endpoint the rounding chose); the
+    uniform dequant keeps ulp-level FMA slack.
+    """
+    return _encode_dispatch(cfg, "encode_pack_residual", flat, meta, key, use_pallas)
 
 
 def decode_reduce(cfg: CompressorConfig, words: jax.Array, levels: jax.Array, n: int,
@@ -181,36 +215,37 @@ def _decode_dispatch(cfg: CompressorConfig, op: str, words: jax.Array, levels: j
     return getattr(mod, f"codebook_{op}")(words, levels, n, cfg.bits)
 
 
-def _encode_packed_flat(cfg: CompressorConfig, flat: jax.Array, meta: QuantMeta, key: jax.Array,
-                        use_pallas: bool) -> tuple[jax.Array, jax.Array]:
-    """Flat fp32 -> (uint32 wire words, uint8 codes) in one pass.
+def _bucket_stats(flat: jax.Array, use_pallas: bool):
+    """One-pass (counts, log_sums, g_max, …) statistics dispatch for the
+    secondary plan sites (phase-2 chunks, pod means) that have no
+    precomputed stats from the train step's fused EF-correct pass."""
+    from repro.adaptive.telemetry import bucket_statistics
 
-    The Pallas path fuses encode + bit-pack in VMEM (codes come back anyway
-    for local dequantization); the jnp fallback runs ``pack_codes`` as a
-    second pass.  Both produce bit-identical words.
-    """
-    if use_pallas and cfg.method in ("qsgd", "tqsgd", "dsgd"):
-        from repro.kernels import ops as kops
+    return bucket_statistics(flat, use_pallas=use_pallas)
 
-        return kops.uniform_encode_packed(flat, meta.alpha, cfg.bits, key)
-    if use_pallas:
-        from repro.kernels import ops as kops
 
-        return kops.codebook_encode_packed(flat, meta.levels, cfg.bits, key)
-    codes = stochastic_encode(flat, meta, key)
-    return pack_codes(codes, cfg.bits), codes
+def _plan_bucket(cfg: CompressorConfig, flat: jax.Array, stat, use_pallas: bool) -> QuantMeta:
+    """Histogram-driven plan from precomputed or inline one-pass stats."""
+    if stat is None:
+        stat = _bucket_stats(flat, use_pallas)
+    return plan_from_stats(cfg, stat[0], stat[1], stat[2])
 
 
 def _plan_encode_rows(cfg: CompressorConfig, rows: jax.Array, key: jax.Array,
                       use_pallas: bool) -> tuple[jax.Array, QuantMeta]:
-    """Per-row plan + encode + pack.  rows: (k, m) fp32 -> ((k, words), metas)."""
+    """Per-row plan + fused encode-pack.  rows: (k, m) fp32 -> ((k, words), metas).
+
+    The per-leaf two-phase site: each peer chunk keeps the sort-based
+    ``plan`` (the raw-tensor fallback fit), but the encode routes through
+    the fused :func:`encode_pack` dispatch, so no unpacked code row is
+    staged between encode and pack.
+    """
     k = rows.shape[0]
     metas = jax.vmap(lambda r: plan(cfg, r))(rows)
     keys = jax.random.split(key, k)
-    codes = jax.vmap(lambda r, m_lv, m_a, kk: _encode_flat(
+    return jax.vmap(lambda r, m_lv, m_a, kk: encode_pack(
         cfg, r, QuantMeta(levels=m_lv, alpha=m_a), kk, use_pallas))(
-        rows, metas.levels, metas.alpha, keys)
-    return pack_dim(codes, 1, cfg.bits), metas
+        rows, metas.levels, metas.alpha, keys), metas
 
 
 # ---------------------------------------------------------------------------
@@ -277,8 +312,7 @@ def two_phase_mean(
 
     # Phase 2: broadcast this peer's mean chunk, freshly quantized.
     meta2 = plan(cfg, chunk)
-    codes2 = _encode_flat(cfg, chunk, meta2, k2, use_pallas)
-    words2 = pack_codes(codes2, cfg.bits)
+    words2 = encode_pack(cfg, chunk, meta2, k2, use_pallas)
     all_words = compat.all_gather_stacked(words2, axis_name)             # (n, w)
     all_levels = compat.all_gather_stacked(meta2.levels, axis_name)
     full = decode_rows(cfg, all_words, all_levels, chunk.size, use_pallas).reshape(-1)
@@ -301,11 +335,11 @@ def faithful_ring_mean(
     n = compat.axis_size(axis_name)
     flat = g.reshape(-1).astype(jnp.float32)
     meta = plan(cfg, flat)
-    codes = _encode_flat(cfg, flat, meta, _peer_key(key, axis_name) if n > 1 else key,
-                         use_pallas)
+    words = encode_pack(cfg, flat, meta, _peer_key(key, axis_name) if n > 1 else key,
+                        use_pallas)
     if n == 1:
-        return jnp.take(meta.levels, codes.astype(jnp.int32)).reshape(g.shape).astype(g.dtype)
-    words = pack_codes(codes, cfg.bits)
+        own = decode_reduce(cfg, words[None], meta.levels[None], flat.size, use_pallas)
+        return own.reshape(g.shape).astype(g.dtype)
     all_words = compat.all_gather_stacked(words, axis_name)              # (n, w)
     all_levels = compat.all_gather_stacked(meta.levels, axis_name)
     mean_flat = decode_reduce(cfg, all_words, all_levels, flat.size, use_pallas)
@@ -349,33 +383,45 @@ def bucketed_faithful_ring_mean(
     key: jax.Array,
     use_pallas: bool = False,
     bits: Optional[Sequence[int]] = None,
+    stats: Optional[list] = None,
 ) -> tuple[list, list]:
     """Faithful ring mean over a bucket list with ONE all-gather total.
 
-    Each bucket is quantized once with its own codebook; all buckets' packed
-    words and bitcast codebooks are concatenated into a single uint32 wire
-    tensor.  ``bits`` optionally assigns each bucket its own static wire
-    width (the adaptive bit plan) — bucket offsets stay static because the
-    plan is trace-time Python.  Returns ``(mean_buckets,
-    own_dequant_buckets)`` — the latter is this peer's transmitted
-    surrogate, the EF residual reference.
+    Each bucket is quantized once with its own codebook — planned with
+    ``compressors.plan_from_stats`` from the one-pass ``stats`` tuples (the
+    fused EF-correct→stats pass; computed inline when None) — and all
+    buckets' packed words and bitcast codebooks are concatenated into a
+    single uint32 wire tensor.  ``bits`` optionally assigns each bucket its
+    own static wire width (the adaptive bit plan) — bucket offsets stay
+    static because the plan is trace-time Python.  Returns ``(mean_buckets,
+    resid_buckets)`` with ``resid = corrected − own dequant``, the next EF
+    residual, produced inside the fused encode.
     """
     n = compat.axis_size(axis_name)
     if n > 1:
         key = _peer_key(key, axis_name)
     cfgs = _bucket_cfgs(cfg, len(buckets), bits)
-    parts, owns, sizes = [], [], []
+    parts, resids, sizes, metas = [], [], [], []
     for b, g in enumerate(buckets):
         flat = g.reshape(-1).astype(jnp.float32)
-        meta = plan(cfgs[b], flat)
-        words, codes = _encode_packed_flat(cfgs[b], flat, meta, jax.random.fold_in(key, b),
-                                           use_pallas)
-        owns.append(jnp.take(meta.levels, codes.astype(jnp.int32)))
+        meta = _plan_bucket(cfgs[b], flat, stats[b] if stats is not None else None,
+                            use_pallas)
+        words, resid = encode_pack_residual(cfgs[b], flat, meta,
+                                            jax.random.fold_in(key, b), use_pallas)
+        resids.append(resid)
         parts.append(words)
         parts.append(_levels_to_wire(meta.levels))
         sizes.append(flat.size)
+        metas.append(meta)
     if n == 1:
-        return list(owns), owns
+        # Degenerate single-peer ring: the "mean" is this peer's own
+        # dequantized transmission, recovered through the same fused decode
+        # every multi-peer site uses (exact codebook lookup).
+        means = [
+            decode_reduce(cfgb, parts[2 * b][None], metas[b].levels[None], m, use_pallas)
+            for b, (m, cfgb) in enumerate(zip(sizes, cfgs))
+        ]
+        return means, resids
     wire = jnp.concatenate(parts)
     rows = compat.all_gather_stacked(wire, axis_name)                    # (n, T)
     means, off = [], 0
@@ -386,7 +432,7 @@ def bucketed_faithful_ring_mean(
         levels = _levels_from_wire(rows[:, off + w:off + w + nl])
         off += w + nl
         means.append(decode_reduce(cfgb, words, levels, m, use_pallas))
-    return means, owns
+    return means, resids
 
 
 def bucketed_two_phase_mean(
@@ -396,29 +442,35 @@ def bucketed_two_phase_mean(
     key: jax.Array,
     use_pallas: bool = False,
     bits: Optional[Sequence[int]] = None,
+    stats: Optional[list] = None,
 ) -> tuple[list, list]:
     """Two-phase compressed mean over a bucket list: ONE all-to-all (phase 1)
     plus ONE all-gather (phase 2) for every bucket together.
 
     Each bucket gets a single per-bucket codebook shared by its n peer
     chunks (padded to ``n*32`` elements so packed chunk words slice
-    cleanly); the codebook rides along once per all-to-all row.  ``bits``
-    optionally assigns per-bucket wire widths (both phases use the bucket's
-    width).  Returns ``(mean_buckets, own_dequant_buckets)``.
+    cleanly); the codebook rides along once per all-to-all row.  Phase-1
+    plans come from the one-pass ``stats``; the phase-2 mean-chunk
+    re-quantization computes its own inline.  ``bits`` optionally assigns
+    per-bucket wire widths (both phases use the bucket's width).  Returns
+    ``(mean_buckets, resid_buckets)``.
     """
     n = compat.axis_size(axis_name)
     flats = [g.reshape(-1).astype(jnp.float32) for g in buckets]
     if n == 1:
-        return flats, flats
+        # Size-1 axis: nothing is transmitted (identity mean), so the EF
+        # residual of this stage is exactly zero.
+        return flats, [jnp.zeros_like(f) for f in flats]
     k1, k2 = jax.random.split(_peer_key(key, axis_name))
     cfgs = _bucket_cfgs(cfg, len(buckets), bits)
-    parts, owns, chunk_meta = [], [], []
+    parts, resids, chunk_meta = [], [], []
     for b, flat in enumerate(flats):
         padded = jnp.pad(flat, (0, (-flat.size) % (n * 32)))
-        meta = plan(cfgs[b], flat)
-        words, codes = _encode_packed_flat(cfgs[b], padded, meta, jax.random.fold_in(k1, b),
-                                           use_pallas)
-        owns.append(jnp.take(meta.levels, codes.astype(jnp.int32))[: flat.size])
+        meta = _plan_bucket(cfgs[b], flat, stats[b] if stats is not None else None,
+                            use_pallas)
+        words, resid = encode_pack_residual(cfgs[b], padded, meta,
+                                            jax.random.fold_in(k1, b), use_pallas)
+        resids.append(resid[: flat.size])
         mc = padded.size // n                                            # chunk elements
         wc = packed_size(mc, cfgs[b].bits)                               # chunk words
         parts.append(words.reshape(n, wc))
@@ -439,9 +491,8 @@ def bucketed_two_phase_mean(
     # Phase 2: re-quantize the mean chunks, one fused all-gather back.
     parts2 = []
     for b, ch in enumerate(mean_chunks):
-        meta2 = plan(cfgs[b], ch)
-        words2, _ = _encode_packed_flat(cfgs[b], ch, meta2, jax.random.fold_in(k2, b),
-                                        use_pallas)
+        meta2 = _plan_bucket(cfgs[b], ch, None, use_pallas)
+        words2 = encode_pack(cfgs[b], ch, meta2, jax.random.fold_in(k2, b), use_pallas)
         parts2.append(words2)
         parts2.append(_levels_to_wire(meta2.levels))
     rows2 = compat.all_gather_stacked(jnp.concatenate(parts2), axis_name)  # (n, T2)
@@ -453,7 +504,7 @@ def bucketed_two_phase_mean(
         off += wc + nl
         vals = decode_rows(cfgb, words, levels, mc, use_pallas)          # row j = chunk j
         means.append(vals.reshape(n * mc)[: flat.size])
-    return means, owns
+    return means, resids
 
 
 def bucketed_hierarchical_mean(
@@ -463,6 +514,7 @@ def bucketed_hierarchical_mean(
     key: jax.Array,
     use_pallas: bool = False,
     bits: Optional[Sequence[int]] = None,
+    stats: Optional[list] = None,
 ) -> tuple[list, list]:
     """Two-phase inside the innermost data axis, faithful exchange of the
     pod means across the leading pod axes — 3 collectives total.
@@ -472,10 +524,13 @@ def bucketed_hierarchical_mean(
     share a stream, and leaving them correlated caps the phase-1 error at
     1/sqrt(data) instead of 1/sqrt(n).  (The cross-pod faithful stage keeps
     per-pod streams — members of one pod must emit identical bytes.)
+    The EF residual comes from the intra-pod stage (what this peer actually
+    transmitted); the cross-pod stage plans from inline pod-mean stats.
     """
     pod_axes, data_axis = dp[:-1], dp[-1:]
     k1, k2 = jax.random.split(key)
     k1 = _peer_key(k1, dp)
-    means, owns = bucketed_two_phase_mean(cfg, buckets, data_axis, k1, use_pallas, bits)
+    means, resids = bucketed_two_phase_mean(cfg, buckets, data_axis, k1, use_pallas,
+                                            bits, stats)
     means, _ = bucketed_faithful_ring_mean(cfg, means, pod_axes, k2, use_pallas, bits)
-    return means, owns
+    return means, resids

@@ -64,7 +64,7 @@ class TrainStepConfig:
     buckets with one codebook per bucket and one fused collective per phase
     (vs one plan + 2-4 collectives per *leaf* on the per-leaf path, selected
     with ``bucket_mb=0``).  ``error_feedback=True`` carries a per-client
-    EF residual pytree through the step signature — ``step_fn(params,
+    EF residual through the step signature — ``step_fn(params,
     opt_state, ef_state, batch, step) -> (params, opt_state, ef_state,
     metrics)`` — compensating the truncated quantizers' bias
     (``core.error_feedback`` semantics: transmit C(g+e), keep e' = g+e-C(g+e)).
@@ -77,6 +77,17 @@ class TrainStepConfig:
     width; bit plans are static per compiled step, so the adaptive runtime
     (``repro.adaptive.runtime``) swaps between compiled steps through a
     cache keyed on the bit tuple instead of retracing.
+
+    The EF residual is **bucket-resident**: one stacked (n_clients,
+    bucket_elems) fp32 array per codec bucket (:func:`init_ef_state`), not
+    a leaf pytree — the residual the fused encode emits is carried to the
+    next step as-is, with no per-step ``bucket_concat``/``bucket_split`` of
+    the EF state and no leaf-spec constraint round-trip.
+
+    ``metrics_gnorm=False`` drops the global gradient-norm metric; when on
+    (the default) it is computed from the already-flat mean buckets inside
+    the sync region (one ``psum`` over the model axes) instead of
+    re-reducing the leaf pytree in the auto region.
     """
 
     sync: str = "dsgd"
@@ -86,6 +97,7 @@ class TrainStepConfig:
     error_feedback: bool = False
     adaptive: Optional[AdaptiveConfig] = None
     bits_plan: Optional[tuple[int, ...]] = None
+    metrics_gnorm: bool = True
 
     def __post_init__(self):
         if self.sync not in SYNC_MODES:
@@ -209,43 +221,77 @@ def _sync_leaf(ts: TrainStepConfig, g: jax.Array, key: jax.Array, dp: tuple) -> 
 
 
 def _sync_buckets(ts: TrainStepConfig, vals: list, key: jax.Array, dp: tuple,
-                  tstate=None):
+                  ef=None, tstate=None):
     """Bucketed sync of a flat leaf list.
-    Returns (mean_leaves, residual_leaves, new_telemetry).
+    Returns (mean_leaves, resid_buckets, new_telemetry, mean_buckets).
 
     The bucket plan is derived at trace time from the *local* (post-shard)
     leaf sizes; each phase of the selected mode moves one fused wire tensor
     for the whole bucket list, so the per-step collective count is bounded
     by the mode (1-3), not by the leaf or bucket count — including under a
-    heterogeneous ``bits_plan``.  Telemetry (when threaded) accumulates from
-    the same corrected buckets the codec quantizes, per peer, collective-free.
+    heterogeneous ``bits_plan``.
+
+    The encode side is one-pass: each gradient bucket is read once by the
+    fused EF-correct→stats pass (``adaptive.telemetry.correct_stats``),
+    which adds the bucket-resident EF residual ``ef`` and emits the
+    corrected bucket plus all statistics the codec's
+    ``plan_from_stats`` codebook fit *and* the telemetry EMA consume — no
+    separate telemetry sweep, no sort/quantile inside ``plan``.  The new
+    residual comes back from the fused encode itself (bucket-resident, so
+    the caller carries it to the next step without a ``bucket_split``);
+    ``bucket_split`` runs once, on the final mean.  The flat mean buckets
+    are also returned so the caller can derive ``gnorm`` without
+    re-reducing the leaf pytree.
     """
     cfg = ts.compressor
     bp = compressors.plan_buckets([v.size for v in vals], ts.bucket_elements)
     buckets = compressors.bucket_concat(vals, bp)
+    compressed = not (ts.sync == "dsgd" or cfg.method == "dsgd")
+    stats = None
+    if compressed or tstate is not None:
+        corrected, stats = [], []
+        for b, g in enumerate(buckets):
+            c, st = adaptive_telemetry.correct_stats(
+                g, ef[b] if ef is not None else None, use_pallas=cfg.use_pallas)
+            corrected.append(c)
+            stats.append(st)
+        buckets = corrected
     new_t = None
     if tstate is not None:
         new_t = adaptive_telemetry.update_telemetry(
-            tstate, buckets, decay=ts.adaptive.ema, use_pallas=cfg.use_pallas)
+            tstate, buckets, decay=ts.adaptive.ema, use_pallas=cfg.use_pallas,
+            stats=stats)
     bits = ts.bits_plan
-    if ts.sync == "dsgd" or cfg.method == "dsgd":
+    if not compressed:
         means = [jax.lax.pmean(b, dp) for b in buckets]
-        owns = buckets
+        resids = None
     elif ts.sync == "faithful":
-        means, owns = sc.bucketed_faithful_ring_mean(cfg, buckets, dp, key,
-                                                     cfg.use_pallas, bits)
+        means, resids = sc.bucketed_faithful_ring_mean(cfg, buckets, dp, key,
+                                                       cfg.use_pallas, bits, stats)
     elif ts.sync == "two_phase" or len(dp) == 1:
-        means, owns = sc.bucketed_two_phase_mean(cfg, buckets, dp, key,
-                                                 cfg.use_pallas, bits)
+        means, resids = sc.bucketed_two_phase_mean(cfg, buckets, dp, key,
+                                                   cfg.use_pallas, bits, stats)
     else:
-        means, owns = sc.bucketed_hierarchical_mean(cfg, buckets, dp, key,
-                                                    cfg.use_pallas, bits)
+        means, resids = sc.bucketed_hierarchical_mean(cfg, buckets, dp, key,
+                                                      cfg.use_pallas, bits, stats)
     shapes = [v.shape for v in vals]
     mean_leaves = compressors.bucket_split(means, bp, shapes)
     if not ts.error_feedback:
-        return mean_leaves, None, new_t
-    resid = [c - o for c, o in zip(buckets, owns)]
-    return mean_leaves, compressors.bucket_split(resid, bp, shapes), new_t
+        resids = None
+    return mean_leaves, resids, new_t, means
+
+
+def ef_bucket_spec(mesh) -> P:
+    """PartitionSpec of one bucket-resident EF state array.
+
+    Axis 0 is the client (data/pod) axis; axis 1 concatenates the model
+    shards' local buckets (each shard round-trips its own row segment
+    through the sync region, so the cross-shard element order is opaque and
+    never reinterpreted leaf-wise).
+    """
+    dp = sharding.manual_axes(mesh)
+    rest = tuple(a for a in mesh.axis_names if a not in dp)
+    return P(dp if dp else None, rest if rest else None)
 
 
 def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
@@ -256,12 +302,17 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
     replicated over data/pod (every mode leaves all peers with identical
     bytes, so the unchecked replication in ``out_specs`` is sound).
 
-    With ``ts.error_feedback`` the callable takes and returns the stacked
-    per-client EF residual alongside the grads; with ``ts.adaptive`` the
-    stacked per-client telemetry state follows it:
-    ``sync_fn(grads, key[, ef][, tstate]) -> (mean[, new_ef][, new_tstate])``.
+    With ``ts.error_feedback`` the callable takes and returns the
+    **bucket-resident** EF state (a tuple of stacked per-client bucket
+    arrays, :func:`init_ef_state`) alongside the grads; with ``ts.adaptive``
+    the stacked per-client telemetry state follows it; with
+    ``ts.metrics_gnorm`` the global gradient norm (computed from the flat
+    mean buckets, ``psum`` over the model axes) is the last output:
+    ``sync_fn(grads, key[, ef][, tstate]) ->
+    (mean[, new_ef][, new_tstate][, gnorm])``.
     """
     dp = sharding.manual_axes(mesh)
+    model_axes = tuple(a for a in mesh.axis_names if a not in dp)
 
     def in_spec(x, spec):
         return P(dp, *_auto_only_entries(spec, mesh))
@@ -281,32 +332,37 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
             tstate = extras[idx]
         leaves, treedef = jax.tree.flatten(stacked)
         vals = [g[0] for g in leaves]
-        if ts.error_feedback:
-            errs = jax.tree.leaves(ef)
-            vals = [v + e[0] for v, e in zip(vals, errs)]
         if ts.bucket_mb > 0:
             t_in = None if tstate is None else jax.tree.map(lambda x: x[0], tstate)
-            out, resid, new_t = _sync_buckets(ts, vals, key, dp, t_in)
+            ef_in = None if ef is None else [e[0] for e in ef]
+            out, resid, new_t, gsrc = _sync_buckets(ts, vals, key, dp, ef_in, t_in)
         else:
             out = [_sync_leaf(ts, g, jax.random.fold_in(key, i), dp)
                    for i, g in enumerate(vals)]
-            resid, new_t = None, None
+            resid, new_t, gsrc = None, None, out
         result = [jax.tree.unflatten(treedef, out)]
         if ts.error_feedback:
-            result.append(jax.tree.unflatten(treedef, [r[None] for r in resid]))
+            result.append(tuple(r[None] for r in resid))
         if ts.adaptive is not None:
             result.append(jax.tree.map(lambda x: x[None], new_t))
+        if ts.metrics_gnorm:
+            gsq = sum(jnp.sum(jnp.square(m.astype(jnp.float32))) for m in gsrc)
+            if model_axes:
+                gsq = jax.lax.psum(gsq, model_axes)
+            result.append(jnp.sqrt(gsq))
         return tuple(result) if len(result) > 1 else result[0]
 
     in_specs = [g_in, P()]
     out_specs = [g_out]
     if ts.error_feedback:
-        in_specs.append(g_in)
-        out_specs.append(g_in)
+        in_specs.append(ef_bucket_spec(mesh))
+        out_specs.append(ef_bucket_spec(mesh))
     if ts.adaptive is not None:
         t_spec = jax.tree.map(lambda _: P(dp), adaptive_telemetry.init_telemetry(1))
         in_specs.append(t_spec)
         out_specs.append(t_spec)
+    if ts.metrics_gnorm:
+        out_specs.append(P())
     return compat.shard_map(
         sync, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=tuple(out_specs) if len(out_specs) > 1 else out_specs[0],
@@ -398,13 +454,16 @@ def make_train_step(
 
     ``step_fn(params, opt_state, batch, step) -> (params, opt_state, metrics)``
     with ``metrics = {"loss": (n_dp,), "gnorm": (n_dp,)}`` (global values,
-    replicated per data shard).  ``pspecs`` is the parameter PartitionSpec
+    replicated per data shard; ``gnorm`` is computed from the flat mean
+    buckets inside the sync region and omitted under
+    ``ts.metrics_gnorm=False``).  ``pspecs`` is the parameter PartitionSpec
     tree the caller uses for ``device_put``.
 
-    With ``ts.error_feedback`` the EF residual is an explicit extra pytree in
-    the step signature — ``step_fn(params, opt_state, ef_state, batch, step)
-    -> (params, opt_state, ef_state, metrics)`` — initialized with
-    :func:`init_ef_state`.  With ``ts.adaptive`` the telemetry state is one
+    With ``ts.error_feedback`` the bucket-resident EF residual is an
+    explicit extra pytree in the step signature — ``step_fn(params,
+    opt_state, ef_state, batch, step) -> (params, opt_state, ef_state,
+    metrics)`` — initialized with :func:`init_ef_state(params_like, mesh,
+    pspecs, ts)`.  With ``ts.adaptive`` the telemetry state is one
     more explicit pytree in the slot after the EF residual (or in its place
     when EF is off) — ``step_fn(params, opt_state[, ef_state], tstate,
     batch, step) -> (params, opt_state[, ef_state], tstate, metrics)`` —
@@ -452,6 +511,13 @@ def make_train_step(
 
         return _tree_map_with_specs(one, grads, pspecs)
 
+    def constrain_ef(ef):
+        # Bucket-resident EF state: every bucket array shares one spec (the
+        # sync shard_map's in/out spec), pinned so the residual stays put
+        # between steps.
+        sh = NamedSharding(mesh, ef_bucket_spec(mesh))
+        return tuple(jax.lax.with_sharding_constraint(e, sh) for e in ef)
+
     adaptive = ts.adaptive is not None
     if adaptive and not dp:
         raise ValueError("adaptive telemetry needs data-parallel mesh axes (the sync path)")
@@ -470,32 +536,39 @@ def make_train_step(
             # pin one client per data shard before the manual sync region
             grads = constrain_client_grads(grads)
             key = jax.random.fold_in(jax.random.key(_KEY_SEED), step)
-            new_ef, new_t = ef_state, tstate
+            new_ef, new_t, gnorm = ef_state, tstate, None
             if sync_fn is not None:
                 args = [grads, key]
                 if ts.error_feedback:
-                    args.append(constrain_client_grads(ef_state))
+                    # bucket-resident EF state rides straight into the sync
+                    # shard_map — no leaf-spec constraint round-trip
+                    args.append(ef_state)
                 if adaptive:
                     args.append(tstate)
                 res = sync_fn(*args)
-                if ts.error_feedback or adaptive:
+                n_extra = int(ts.error_feedback) + int(adaptive) + int(ts.metrics_gnorm)
+                if n_extra:
                     res = list(res)
                     g_mean = res.pop(0)
                     if ts.error_feedback:
-                        new_ef = constrain_client_grads(res.pop(0))
+                        new_ef = constrain_ef(res.pop(0))
                     if adaptive:
                         new_t = res.pop(0)
+                    if ts.metrics_gnorm:
+                        gnorm = res.pop(0)
                 else:
                     g_mean = res
             else:
                 g_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
-            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g_mean)))
+            if ts.metrics_gnorm and gnorm is None:
+                gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g_mean)))
             new_params, new_opt = opt.update(params, g_mean, opt_state, step)
             new_params = constrain(new_params, pspecs)
             new_opt = constrain(new_opt, o_specs)
         loss = jnp.mean(losses)
-        metrics = {"loss": jnp.full((max(n_dp, 1),), loss, jnp.float32),
-                   "gnorm": jnp.full((max(n_dp, 1),), gnorm, jnp.float32)}
+        metrics = {"loss": jnp.full((max(n_dp, 1),), loss, jnp.float32)}
+        if ts.metrics_gnorm:
+            metrics["gnorm"] = jnp.full((max(n_dp, 1),), gnorm, jnp.float32)
         return new_params, new_opt, new_ef, new_t, metrics
 
     if ts.error_feedback and adaptive:
@@ -521,15 +594,30 @@ def make_train_step(
     return step_fn, pspecs
 
 
-def init_ef_state(params_like: Any, mesh) -> Any:
-    """Zero EF residual: one stacked row per client (the data/pod shards),
-    matching the stacked-gradient layout the sync shard_map consumes."""
+def init_ef_state(params_like: Any, mesh, pspecs: Any, ts: TrainStepConfig) -> Any:
+    """Zero **bucket-resident** EF residual.
+
+    One stacked fp32 array per codec bucket: axis 0 is the client (data/pod
+    shard) row, axis 1 concatenates the model shards' local buckets
+    (:func:`local_bucket_sizes` each).  This is exactly the layout the
+    fused encode's residual comes back in, so the state round-trips the
+    step signature with zero per-step reshaping — the pre-refactor leaf
+    pytree (``init_ef_state(params_like, mesh)``) required a
+    ``bucket_concat``/``bucket_split`` plus a leaf-spec constraint round
+    trip every step.  Callers migrating from that layout now pass the
+    ``pspecs`` returned by :func:`make_train_step` and the step's
+    ``TrainStepConfig`` (mirroring :func:`init_telemetry_state`).
+    """
+    sizes = local_bucket_sizes(params_like, mesh, pspecs, ts)
     dp = sharding.manual_axes(mesh)
     n = 1
     for a in dp:
         n *= mesh.shape[a]
-    return jax.tree.map(
-        lambda x: jnp.zeros((max(n, 1),) + tuple(x.shape), jnp.float32), params_like)
+    n_model = 1
+    for a in mesh.axis_names:
+        if a not in dp:
+            n_model *= mesh.shape[a]
+    return tuple(jnp.zeros((max(n, 1), n_model * s), jnp.float32) for s in sizes)
 
 
 def local_bucket_sizes(params_like: Any, mesh, pspecs: Any, ts: TrainStepConfig) -> tuple[int, ...]:

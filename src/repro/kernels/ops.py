@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from typing import NamedTuple
 
 from . import decode as _d
+from . import encode_fused as _e
 from . import quantize as _k
 from . import stats as _s
 
@@ -222,3 +223,101 @@ def bucket_stats(g: jax.Array, *, interpret: bool | None = None) -> BucketStats:
     out = _s.bucket_stats_2d(g2, n, interpret=interpret)
     return BucketStats(counts=out[0], log_sums=out[1], g_max=out[2, 0],
                        g_sum=out[3, 0], g_sumsq=out[4, 0])
+
+
+# ---------------------------------------------------------------------------
+# Fused encode side (``kernels.encode_fused``): one-pass EF-correct→stats,
+# and quantize→pack[→residual] without staging codes or owns in HBM.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ef_correct_stats(
+    g: jax.Array, e: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, BucketStats]:
+    """One pass: ``c = g + e`` plus the full plan/telemetry statistics of c.
+
+    Returns ``(corrected (n,) fp32, BucketStats)``.  Everything the plan
+    consumes (counts, log-sums, max) is bit-identical to
+    ``bucket_stats(g + e)`` — same block statistics and merge as
+    ``kernels.stats`` — without the extra HBM sweep; the EMA moment rows
+    are plain reductions with ulp-level fusion discretion.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    g2, n = _to_2d(g.astype(jnp.float32))
+    e2, _ = _to_2d(e.astype(jnp.float32))
+    c2, out = _e.ef_correct_stats_2d(g2, e2, n, interpret=interpret)
+    return c2.reshape(-1)[:n], BucketStats(
+        counts=out[0], log_sums=out[1], g_max=out[2, 0],
+        g_sum=out[3, 0], g_sumsq=out[4, 0])
+
+
+def _packed_words(words2: jax.Array, n: int, bits: int) -> jax.Array:
+    from repro.core.quantizers import packed_size
+
+    return jax.lax.bitcast_convert_type(words2.reshape(-1), jnp.uint32)[: packed_size(n, bits)]
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def uniform_encode_pack(
+    g: jax.Array, alpha: jax.Array, bits: int, key: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """Fused truncate + uniform stochastic encode + bit-pack, words only.
+
+    Returns the uint32 wire words (``packed_size(n, bits)``, bit-identical
+    to ``pack_codes`` of the same codes); unlike ``uniform_encode_packed``
+    the codes never reach HBM.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    g2, n = _to_2d(g.astype(jnp.float32))
+    rand = jax.random.uniform(key, g2.shape, jnp.float32)
+    words = _e.uniform_encode_pack_2d(g2, rand, alpha.astype(jnp.float32), n,
+                                      bits=bits, interpret=interpret)
+    return _packed_words(words, n, bits)
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def codebook_encode_pack(
+    g: jax.Array, levels: jax.Array, bits: int, key: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """Codebook variant of :func:`uniform_encode_pack` (words only)."""
+    interpret = _use_interpret() if interpret is None else interpret
+    g2, n = _to_2d(g.astype(jnp.float32))
+    rand = jax.random.uniform(key, g2.shape, jnp.float32)
+    words = _e.codebook_encode_pack_2d(g2, rand, levels.astype(jnp.float32), n,
+                                       bits=bits, interpret=interpret)
+    return _packed_words(words, n, bits)
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def uniform_encode_pack_residual(
+    g: jax.Array, alpha: jax.Array, bits: int, key: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Fused truncate + uniform encode + bit-pack + EF residual.
+
+    Returns ``(words, residual)``: the uint32 wire words plus
+    ``g − dequant(code)`` — the next error-feedback residual — computed in
+    the same tile, so neither the codes nor the dequantized ``own`` tensor
+    ever reach HBM.
+    """
+    interpret = _use_interpret() if interpret is None else interpret
+    g2, n = _to_2d(g.astype(jnp.float32))
+    rand = jax.random.uniform(key, g2.shape, jnp.float32)
+    words, resid = _e.uniform_encode_pack_resid_2d(
+        g2, rand, alpha.astype(jnp.float32), n, bits=bits, interpret=interpret)
+    return _packed_words(words, n, bits), resid.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def codebook_encode_pack_residual(
+    g: jax.Array, levels: jax.Array, bits: int, key: jax.Array, *, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Codebook variant of :func:`uniform_encode_pack_residual`; the
+    residual is an exact ``g − levels[code]`` (the dequant reuses the
+    interval endpoint the stochastic rounding selected)."""
+    interpret = _use_interpret() if interpret is None else interpret
+    g2, n = _to_2d(g.astype(jnp.float32))
+    rand = jax.random.uniform(key, g2.shape, jnp.float32)
+    words, resid = _e.codebook_encode_pack_resid_2d(
+        g2, rand, levels.astype(jnp.float32), n, bits=bits, interpret=interpret)
+    return _packed_words(words, n, bits), resid.reshape(-1)[:n]

@@ -26,15 +26,51 @@ LANES = 128
 BLOCK_ROWS = 256
 
 
-def _uniform_encode_kernel(alpha_ref, g_ref, rand_ref, out_ref, *, s: int):
-    alpha = alpha_ref[0]
+def uniform_select(alpha, g: jax.Array, rand: jax.Array, *, s: int) -> jax.Array:
+    """Shared uniform stochastic-encode body -> float codes in [0, s].
+
+    The single source of the truncate → scale → floor → stochastic-round
+    math for every uniform encode kernel (the plain, the packed, and the
+    fused residual variants in ``encode_fused``) — keeping the bit-identical
+    wire contract between kernel families in one place.
+    """
     scale = s / (2.0 * alpha)
-    g = g_ref[...]
     u = (jnp.clip(g, -alpha, alpha) + alpha) * scale
     k = jnp.clip(jnp.floor(u), 0.0, float(s - 1))
-    frac = u - k
-    up = (rand_ref[...] < frac).astype(jnp.float32)
-    out_ref[...] = jnp.clip(k + up, 0.0, float(s)).astype(jnp.int32)
+    up = (rand < (u - k)).astype(jnp.float32)
+    return jnp.clip(k + up, 0.0, float(s))
+
+
+def codebook_select(levels: jax.Array, g: jax.Array, rand: jax.Array,
+                    *, s: int) -> tuple[jax.Array, jax.Array]:
+    """Shared codebook stochastic-encode body.
+
+    Returns ``(codes float (BM·128,), dequant value (BM·128,))``: the
+    dequant is the interval endpoint the rounding chose (``hi`` on
+    round-up, ``lo`` otherwise), which equals ``levels[code]`` exactly —
+    callers that don't need it (the non-residual kernels) leave it dead for
+    DCE.  Single source of the compare-count + one-hot lo/hi + pr math for
+    every codebook encode kernel.
+    """
+    alpha = levels[s]
+    bm = g.shape[0]
+    gt = jnp.clip(g, -alpha, alpha)
+    flat = gt.reshape(bm * LANES)
+    ge = (flat[:, None] >= levels[None, 1:]).astype(jnp.float32)
+    k = jnp.clip(jnp.sum(ge, axis=1), 0.0, float(s - 1))
+    iota = jax.lax.broadcasted_iota(jnp.float32, (flat.shape[0], s + 1), 1)
+    onehot_lo = (iota == k[:, None]).astype(jnp.float32)
+    onehot_hi = (iota == (k[:, None] + 1.0)).astype(jnp.float32)
+    lo = onehot_lo @ levels
+    hi = onehot_hi @ levels
+    pr = (flat - lo) / jnp.maximum(hi - lo, 1e-12)
+    up = (rand.reshape(bm * LANES) < pr).astype(jnp.float32)
+    return k + up, jnp.where(up > 0.0, hi, lo)
+
+
+def _uniform_encode_kernel(alpha_ref, g_ref, rand_ref, out_ref, *, s: int):
+    out_ref[...] = uniform_select(alpha_ref[0], g_ref[...], rand_ref[...],
+                                  s=s).astype(jnp.int32)
 
 
 def uniform_encode_2d(
@@ -84,23 +120,11 @@ def uniform_decode_2d(
 
 
 def _codebook_encode_kernel(g_ref, rand_ref, levels_ref, out_ref, *, s: int):
-    levels = levels_ref[...]                       # (s+1,) broadcast to every block
-    alpha = levels[s]
-    g = jnp.clip(g_ref[...], -alpha, alpha)        # (BM, 128)
-    bm = g.shape[0]
-    flat = g.reshape(bm * LANES)
-    # Interval index: count of interior+top boundaries below g, clipped.
-    ge = (flat[:, None] >= levels[None, 1:]).astype(jnp.float32)    # (n, s)
-    k = jnp.clip(jnp.sum(ge, axis=1), 0.0, float(s - 1))            # (n,)
-    # lo/hi via one-hot matmuls on the MXU (no gathers on TPU).
-    iota = jax.lax.broadcasted_iota(jnp.float32, (flat.shape[0], s + 1), 1)
-    onehot_lo = (iota == k[:, None]).astype(jnp.float32)
-    onehot_hi = (iota == (k[:, None] + 1.0)).astype(jnp.float32)
-    lo = onehot_lo @ levels
-    hi = onehot_hi @ levels
-    pr = (flat - lo) / jnp.maximum(hi - lo, 1e-12)
-    up = (rand_ref[...].reshape(bm * LANES) < pr).astype(jnp.float32)
-    out_ref[...] = (k + up).reshape(bm, LANES).astype(jnp.int32)
+    # compare-count interval index + one-hot lo/hi matmuls on the MXU (no
+    # gathers on TPU) — shared body in codebook_select
+    g = g_ref[...]
+    code_f, _ = codebook_select(levels_ref[...], g, rand_ref[...], s=s)
+    out_ref[...] = code_f.reshape(g.shape).astype(jnp.int32)
 
 
 def codebook_encode_2d(
@@ -159,14 +183,9 @@ def _mask_tail(codes: jax.Array, n_ref, bm: int) -> jax.Array:
 
 def _uniform_encode_pack_kernel(n_ref, alpha_ref, g_ref, rand_ref, codes_ref, words_ref,
                                 *, s: int, bits: int):
-    alpha = alpha_ref[0]
-    scale = s / (2.0 * alpha)
     g = g_ref[...]
-    u = (jnp.clip(g, -alpha, alpha) + alpha) * scale
-    k = jnp.clip(jnp.floor(u), 0.0, float(s - 1))
-    frac = u - k
-    up = (rand_ref[...] < frac).astype(jnp.float32)
-    codes = _mask_tail(jnp.clip(k + up, 0.0, float(s)).astype(jnp.int32), n_ref, g.shape[0])
+    code_f = uniform_select(alpha_ref[0], g, rand_ref[...], s=s)
+    codes = _mask_tail(code_f.astype(jnp.int32), n_ref, g.shape[0])
     codes_ref[...] = codes
     words_ref[...] = _pack_block(codes, bits)
 
@@ -203,21 +222,9 @@ def uniform_encode_pack_2d(
 
 def _codebook_encode_pack_kernel(n_ref, g_ref, rand_ref, levels_ref, codes_ref, words_ref,
                                  *, s: int, bits: int):
-    levels = levels_ref[...]
-    alpha = levels[s]
-    g = jnp.clip(g_ref[...], -alpha, alpha)
-    bm = g.shape[0]
-    flat = g.reshape(bm * LANES)
-    ge = (flat[:, None] >= levels[None, 1:]).astype(jnp.float32)
-    k = jnp.clip(jnp.sum(ge, axis=1), 0.0, float(s - 1))
-    iota = jax.lax.broadcasted_iota(jnp.float32, (flat.shape[0], s + 1), 1)
-    onehot_lo = (iota == k[:, None]).astype(jnp.float32)
-    onehot_hi = (iota == (k[:, None] + 1.0)).astype(jnp.float32)
-    lo = onehot_lo @ levels
-    hi = onehot_hi @ levels
-    pr = (flat - lo) / jnp.maximum(hi - lo, 1e-12)
-    up = (rand_ref[...].reshape(bm * LANES) < pr).astype(jnp.float32)
-    codes = _mask_tail((k + up).reshape(bm, LANES).astype(jnp.int32), n_ref, bm)
+    g = g_ref[...]
+    code_f, _ = codebook_select(levels_ref[...], g, rand_ref[...], s=s)
+    codes = _mask_tail(code_f.reshape(g.shape).astype(jnp.int32), n_ref, g.shape[0])
     codes_ref[...] = codes
     words_ref[...] = _pack_block(codes, bits)
 

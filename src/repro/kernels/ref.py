@@ -57,6 +57,124 @@ def codebook_decode(codes: jax.Array, levels: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Fused encode-side oracles / fallbacks (``kernels.encode_fused``).
+#
+# The key-based functions mirror the ``ops`` wrappers' signatures exactly —
+# same (rows, 128) padding, same uniform draw — so ``dist.sharded_codec``
+# dispatches between the Pallas module and this one by name, and kernel vs
+# fallback produce bit-identical wire words for the codebook methods (the
+# uniform dequant inside the residual keeps the usual ulp-level FMA slack).
+# All ops here are plain jnp and safe under shard_map tracing on the pinned
+# toolchain.
+# ---------------------------------------------------------------------------
+
+
+def _flat_rand(g: jax.Array, key: jax.Array) -> tuple[jax.Array, jax.Array, int]:
+    """Match the ops wrappers' RNG layout: pad to (rows, 128), draw there."""
+    from .ops import _to_2d
+
+    g2, n = _to_2d(g.astype(jnp.float32))
+    rand = jax.random.uniform(key, g2.shape, jnp.float32)
+    return g2, rand, n
+
+
+def uniform_encode_pack(g: jax.Array, alpha: jax.Array, bits: int, key: jax.Array) -> jax.Array:
+    """Sequential oracle of ``ops.uniform_encode_pack``: encode then pack."""
+    from repro.core.quantizers import pack_codes
+
+    g2, rand, n = _flat_rand(g, key)
+    codes = uniform_encode(g2, alpha, bits, rand).reshape(-1)[:n]
+    return pack_codes(codes, bits)
+
+
+def _codebook_codes(flat: jax.Array, levels: jax.Array, rand: jax.Array) -> jax.Array:
+    """Codebook stochastic codes via searchsorted + take.
+
+    Bit-identical to the kernel's compare-count + one-hot formulation
+    (:func:`codebook_encode`): the interval index is the same exact integer
+    either way, and ``take`` is the same exact lookup as the one-hot
+    matmul — but a binary search beats the (n, s) compare matrix on CPU,
+    which is what this fallback actually runs on.
+    """
+    levels = levels.astype(jnp.float32)
+    s = levels.shape[0] - 1
+    gt = jnp.clip(flat, -levels[s], levels[s])
+    k = jnp.clip(jnp.searchsorted(levels, gt, side="right") - 1, 0, s - 1)
+    lo = jnp.take(levels, k)
+    hi = jnp.take(levels, k + 1)
+    pr = (gt - lo) / jnp.maximum(hi - lo, 1e-12)
+    return (k + (rand.reshape(-1)[: flat.size] < pr).astype(k.dtype)).astype(jnp.uint8)
+
+
+def codebook_encode_pack(g: jax.Array, levels: jax.Array, bits: int, key: jax.Array) -> jax.Array:
+    """Sequential oracle of ``ops.codebook_encode_pack``."""
+    from repro.core.quantizers import pack_codes
+
+    g2, rand, n = _flat_rand(g, key)
+    codes = _codebook_codes(g2.reshape(-1)[:n], levels, rand)
+    return pack_codes(codes, bits)
+
+
+def uniform_encode_pack_residual(
+    g: jax.Array, alpha: jax.Array, bits: int, key: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential oracle of ``ops.uniform_encode_pack_residual``."""
+    from repro.core.quantizers import pack_codes
+
+    s = num_levels(bits)
+    g2, rand, n = _flat_rand(g, key)
+    codes = uniform_encode(g2, alpha, bits, rand).reshape(-1)[:n]
+    flat = g2.reshape(-1)[:n]
+    alpha = alpha.astype(jnp.float32)
+    resid = flat - (codes.astype(jnp.float32) * (2.0 * alpha / s) - alpha)
+    return pack_codes(codes, bits), resid
+
+
+def codebook_encode_pack_residual(
+    g: jax.Array, levels: jax.Array, bits: int, key: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential oracle of ``ops.codebook_encode_pack_residual``; the
+    residual is the exact ``g − levels[code]``."""
+    from repro.core.quantizers import pack_codes
+
+    g2, rand, n = _flat_rand(g, key)
+    flat = g2.reshape(-1)[:n]
+    codes = _codebook_codes(flat, levels, rand)
+    resid = flat - jnp.take(levels.astype(jnp.float32), codes.astype(jnp.int32))
+    return pack_codes(codes, bits), resid
+
+
+def bucket_stats_scatter(g: jax.Array):
+    """O(n) scatter-add bucket statistics — the shard_map-safe jnp fallback.
+
+    Counts and max are identical to the fused kernel (integer adds / exact
+    max); the float ln/moment sums may differ in the last bits (reduction
+    order), which neither the EMA telemetry nor the histogram plan cares
+    about — the bit-exact contract is pinned kernel ↔ :func:`bucket_stats`.
+    Returns ``(counts, log_sums, g_max, g_sum, g_sumsq)``.
+    """
+    from . import stats as S
+
+    flat = g.reshape(-1).astype(jnp.float32)
+    gabs = jnp.abs(flat)
+    lnab = jnp.log(jnp.maximum(gabs, 1e-30))
+    w = (S.LOG2_HI - S.LOG2_LO) / S.NUM_BINS
+    b = jnp.clip(jnp.floor((lnab / jnp.log(2.0) - S.LOG2_LO) / w),
+                 0.0, S.NUM_BINS - 1.0).astype(jnp.int32)
+    counts = jnp.zeros((S.NUM_BINS,), jnp.float32).at[b].add(1.0)
+    log_sums = jnp.zeros((S.NUM_BINS,), jnp.float32).at[b].add(lnab)
+    return counts, log_sums, jnp.max(gabs), jnp.sum(flat), jnp.sum(flat * flat)
+
+
+def ef_correct_stats(g: jax.Array, e: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Blockwise oracle of ``ops.ef_correct_stats``: ``c = g + e`` plus the
+    (STATS_ROWS, NUM_BINS) stats tile of c, walking the same block/merge
+    order as the fused kernel (bit-exact in interpret mode)."""
+    c = g.reshape(-1).astype(jnp.float32) + e.reshape(-1).astype(jnp.float32)
+    return c, bucket_stats(c)
+
+
+# ---------------------------------------------------------------------------
 # Fused decode oracles (``kernels.decode``).
 #
 # The decode-reduce kernels fold peers into the output tile *sequentially*

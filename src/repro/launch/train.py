@@ -113,7 +113,7 @@ def main(argv=None) -> int:
     o_specs = _opt_specs(jax.eval_shape(lambda: opt_state), params, pspecs)
     opt_state = jax.device_put(opt_state, jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
                                                        is_leaf=lambda x: isinstance(x, _P)))
-    ef_state = init_ef_state(params, mesh) if args.ef else None
+    ef_state = init_ef_state(params, mesh, pspecs, ts) if args.ef else None
     tstate = stepper.init_telemetry() if stepper is not None else None
 
     for i in range(start, start + args.steps):
@@ -135,7 +135,8 @@ def main(argv=None) -> int:
         else:
             params, opt_state, m = step_fn(params, opt_state, b, jnp.uint32(i))
         if args.log_every and i % args.log_every == 0:
-            print(f"step {i:5d} loss {float(m['loss'][0]):.4f} gnorm {float(m['gnorm'][0]):.3f}", flush=True)
+            gn = f" gnorm {float(m['gnorm'][0]):.3f}" if "gnorm" in m else ""
+            print(f"step {i:5d} loss {float(m['loss'][0]):.4f}{gn}", flush=True)
         if args.ckpt_every and args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
             host_p = jax.tree.map(lambda x: jax.device_get(x), (params, opt_state))
             save_checkpoint(args.ckpt_dir, i + 1, host_p)

@@ -143,6 +143,42 @@ def test_decode_hbm_bytes_model():
         decode_hbm_bytes(cfg, sizes, peers, fused=True, bits=[2])
 
 
+def test_encode_hbm_bytes_model():
+    """Encode-side HBM accounting: the fused EF-correct→stats +
+    quantize→pack→residual path sweeps the bucket ~5× per step vs ~16×
+    for the seed multi-pass pipeline at the headline config."""
+    from repro.dist.collectives import encode_hbm_bytes
+
+    cfg = CompressorConfig(method="tnqsgd", bits=3)
+    nb = 1 << 20  # one 4 MB fp32 bucket
+    fused = encode_hbm_bytes(cfg, nb, fused=True)
+    seed = encode_hbm_bytes(cfg, nb, fused=False)
+    # exact fused terms: stats read (4n) + EF read/write (8n) + encode read
+    # (4n) + wire words + residual write (4n)
+    words = 4.0 * packed_size(nb, 3)
+    assert fused == pytest.approx(20.0 * nb + words)
+    # the acceptance bar: >= 3x lower modeled encode HBM at 4 MB / 3 bits
+    # with EF + adaptive on
+    assert seed / fused >= 3.0, (seed, fused)
+    # fused never exceeds unfused in any configuration
+    for ef in (False, True):
+        for adaptive in (False, True):
+            f = encode_hbm_bytes(cfg, nb, fused=True, ef=ef, adaptive=adaptive)
+            u = encode_hbm_bytes(cfg, nb, fused=False, ef=ef, adaptive=adaptive)
+            assert f < u, (ef, adaptive, f, u)
+    # the approx-gmin seed variant drops the sort term but still loses
+    u_approx = encode_hbm_bytes(
+        CompressorConfig(method="tnqsgd", bits=3, approx_gmin=True), nb, fused=False)
+    assert fused < u_approx < seed
+    # heterogeneous buckets sum per bucket
+    sizes, bits = [400_000, 600_000], [2, 4]
+    assert encode_hbm_bytes(cfg, sizes, fused=True, bits=bits) == pytest.approx(
+        sum(encode_hbm_bytes(cfg, n, fused=True, bits=b)
+            for n, b in zip(sizes, bits)))
+    with pytest.raises(ValueError):
+        encode_hbm_bytes(cfg, sizes, fused=True, bits=[2])
+
+
 def test_wire_bytes_per_device_heterogeneous():
     """Mode chunking applies per bucket for sequence inputs."""
     cfg = CompressorConfig(method="tnqsgd", bits=3)

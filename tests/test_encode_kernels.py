@@ -1,0 +1,174 @@
+"""Fused encode-kernel validation against the ``kernels/ref.py`` oracles
+(interpret mode executes the kernel body on CPU) across bit widths, ragged
+tails, and heterogeneous per-bucket bit plans.
+
+Comparison contract (mirror of ``test_decode_kernels``): kernel and oracle
+derive their uniforms from the same key over the same padded (rows, 128)
+layout, so the **wire words are bit-exact for every method** (the stochastic
+rounding itself is integer compares + exact one-hot lookups) and the
+**codebook residual is bit-exact** (``levels[code]`` is the interval
+endpoint the rounding chose, and the subtraction is a single rounding in
+both paths).  The **uniform residual** contains the real multiply-add
+dequant (``code · 2α/s − α``) whose FMA contraction is
+compiler-discretionary — pinned at a ≤4-ulp tolerance, as on the decode
+side.  ``ef_correct_stats`` shares its block statistics and merge with the
+``kernels.stats`` kernel, so corrected bucket and stats tile are bit-exact
+vs the blockwise oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sample_power_law
+from repro.core.compressors import CompressorConfig, plan
+from repro.core.quantizers import pack_codes, packed_size
+from repro.kernels import ops, ref
+
+# Ragged tails: multiples of the 32-code packing group, the 128-lane row, the
+# (BLOCK_ROWS, 128) tile — and none of the above.
+SIZES = [64, 999, 128 * 128, 64 * 128 * 2 + 17, 4096 + 31]
+BITS = list(range(1, 9))
+
+
+def _grad(key, n, scale=1.0):
+    return scale * sample_power_law(key, (n,), gamma=3.8, g_min=0.01, rho=0.12)
+
+
+def _levels(key, bits):
+    lv = jnp.sort(jax.random.uniform(key, (2**bits,), minval=-0.2, maxval=0.2))
+    return lv.at[0].set(-0.2).at[-1].set(0.2)
+
+
+def _assert_ulp_close(got, want, scale, ulps=4):
+    got, want = np.asarray(got), np.asarray(want)
+    tol = ulps * np.spacing(np.float32(abs(scale)))
+    bad = np.abs(got - want) > tol
+    assert not bad.any(), (
+        f"{bad.sum()} elements beyond {ulps} ulp of scale {scale}; max diff "
+        f"{np.abs(got - want).max()}")
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("n", SIZES)
+def test_codebook_encode_pack_residual_bit_exact(bits, n):
+    g = _grad(jax.random.key(bits * 1000 + n), n)
+    levels = _levels(jax.random.key(7), bits)
+    key = jax.random.key(bits * 31 + n)
+    w_k, r_k = ops.codebook_encode_pack_residual(g, levels, bits, key)
+    w_r, r_r = jax.jit(lambda g, lv, k: ref.codebook_encode_pack_residual(
+        g, lv, bits, k))(g, levels, key)
+    assert w_k.shape == (packed_size(n, bits),)
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+    np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("n", SIZES)
+def test_uniform_encode_pack_residual_matches_oracle(bits, n):
+    g = _grad(jax.random.key(bits * 2000 + n), n)
+    alpha = jnp.float32(0.05)
+    key = jax.random.key(bits * 37 + n)
+    w_k, r_k = ops.uniform_encode_pack_residual(g, alpha, bits, key)
+    w_r, r_r = jax.jit(lambda g, a, k: ref.uniform_encode_pack_residual(
+        g, a, bits, k))(g, alpha, key)
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+    _assert_ulp_close(r_k, r_r, scale=float(jnp.max(jnp.abs(g))) + float(alpha))
+
+
+@pytest.mark.parametrize("bits", [1, 3, 5, 8])
+@pytest.mark.parametrize("n", SIZES)
+def test_encode_pack_words_only_matches_residual_variant(bits, n):
+    """The words-only kernels emit the exact same wire as the residual
+    variants (same codes, same pack) — and both equal a separate
+    encode → ``pack_codes`` pipeline under the same key."""
+    g = _grad(jax.random.key(bits * 3000 + n), n)
+    levels = _levels(jax.random.key(9), bits)
+    key = jax.random.key(bits * 41 + n)
+    w_only = ops.codebook_encode_pack(g, levels, bits, key)
+    w_resid, _ = ops.codebook_encode_pack_residual(g, levels, bits, key)
+    np.testing.assert_array_equal(np.asarray(w_only), np.asarray(w_resid))
+    codes = ops.codebook_encode(g, levels, key)
+    np.testing.assert_array_equal(np.asarray(w_only),
+                                  np.asarray(pack_codes(codes, bits)))
+    alpha = jnp.float32(0.04)
+    w_uni = ops.uniform_encode_pack(g, alpha, bits, key)
+    w_uni_r, _ = ops.uniform_encode_pack_residual(g, alpha, bits, key)
+    np.testing.assert_array_equal(np.asarray(w_uni), np.asarray(w_uni_r))
+
+
+def test_residual_semantics():
+    """resid == corrected − dequant(code): decode the wire and check."""
+    bits, n = 3, 5000
+    cfg = CompressorConfig(method="tnqsgd", bits=bits)
+    g = _grad(jax.random.key(3), n)
+    meta = plan(cfg, g)
+    key = jax.random.key(4)
+    words, resid = ops.codebook_encode_pack_residual(g, meta.levels, bits, key)
+    own = ops.codebook_decode_reduce(words[None], meta.levels[None], n, bits)
+    np.testing.assert_array_equal(np.asarray(resid), np.asarray(g - own))
+    # the EF magnitude is bounded by the codebook's coarsest step plus the
+    # truncated tail mass — sanity: no element exceeds max|g|
+    assert float(jnp.max(jnp.abs(resid))) <= float(jnp.max(jnp.abs(g))) * 2 + 1e-6
+
+
+@pytest.mark.parametrize("shape", [(64,), (1000,), (128, 128), (3, 777), (10_000,)])
+def test_ef_correct_stats_bit_exact(shape):
+    g = sample_power_law(jax.random.key(1), shape, gamma=3.6, g_min=0.01, rho=0.15)
+    e = 0.3 * sample_power_law(jax.random.key(2), shape, gamma=4.2, g_min=0.005, rho=0.1)
+    c_k, s_k = ops.ef_correct_stats(g, e)
+    c_r, tile = jax.jit(ref.ef_correct_stats)(g, e)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    np.testing.assert_array_equal(np.asarray(s_k.counts), np.asarray(tile[0]))
+    np.testing.assert_array_equal(np.asarray(s_k.log_sums), np.asarray(tile[1]))
+    np.testing.assert_array_equal(np.asarray(s_k.g_max), np.asarray(tile[2, 0]))
+    # the moment rows are plain jnp.sum reductions whose in-block
+    # vectorization is fusion-context-dependent (the fused add changes the
+    # emitted reduce) — everything the plan consumes (counts, log-sums, max)
+    # is exact; the EMA moments get the ulp-level contract
+    np.testing.assert_allclose(np.asarray(s_k.g_sum), np.asarray(tile[3, 0]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_k.g_sumsq), np.asarray(tile[4, 0]), rtol=1e-6)
+
+
+def test_ef_correct_stats_is_stats_of_sum():
+    """The fused pass equals the two-pass formulation: add, then
+    ``bucket_stats`` — bit-for-bit (shared block statistics + merge)."""
+    g = _grad(jax.random.key(11), 20_000)
+    e = 0.1 * _grad(jax.random.key(12), 20_000)
+    c, s = ops.ef_correct_stats(g, e)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(g + e))
+    s2 = ops.bucket_stats(g + e)
+    np.testing.assert_array_equal(np.asarray(s.counts), np.asarray(s2.counts))
+    np.testing.assert_array_equal(np.asarray(s.log_sums), np.asarray(s2.log_sums))
+    np.testing.assert_array_equal(np.asarray(s.g_max), np.asarray(s2.g_max))
+    np.testing.assert_allclose(np.asarray(s.g_sum), np.asarray(s2.g_sum), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s.g_sumsq), np.asarray(s2.g_sumsq), rtol=1e-6)
+
+
+@pytest.mark.parametrize("plan_bits", [(1, 4, 3), (2, 2, 8), (5, 1, 2)])
+def test_heterogeneous_bucket_bits_encode(plan_bits):
+    """An adaptive fused wire assembled from per-bucket fused encodes at
+    heterogeneous widths: every slice is bit-exact vs its oracle and
+    round-trips through the fused decode."""
+    sizes = (1500, 4096, 777)
+    key = jax.random.key(9)
+    wire_parts, per_bucket = [], []
+    for b, (n, bits) in enumerate(zip(sizes, plan_bits)):
+        g = _grad(jax.random.fold_in(key, b), n)
+        levels = _levels(jax.random.fold_in(key, 50 + b), bits)
+        kk = jax.random.fold_in(key, 100 + b)
+        w, r = ops.codebook_encode_pack_residual(g, levels, bits, kk)
+        w_ref, r_ref = jax.jit(lambda g, lv, k, b=bits: ref.codebook_encode_pack_residual(
+            g, lv, b, k))(g, levels, kk)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(w_ref))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(r_ref))
+        wire_parts.append(w)
+        per_bucket.append((n, bits, levels, g, r))
+    wire = jnp.concatenate(wire_parts)
+    off = 0
+    for n, bits, levels, g, r in per_bucket:
+        w = packed_size(n, bits)
+        own = ops.codebook_decode_reduce(wire[off:off + w][None], levels[None], n, bits)
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(g - own))
+        off += w
+    assert off == wire.shape[0]

@@ -89,13 +89,14 @@ def test_ef_training_low_bits():
 
 
 def test_ef_distributed_runtime():
-    """EF threaded through ``make_train_step``: the residual pytree rides the
-    step signature, training converges at aggressive truncation (b=2 tqsgd),
-    and the residual is live (non-zero) after the first step."""
+    """EF threaded through ``make_train_step``: the bucket-resident residual
+    rides the step signature (one stacked (clients, bucket) array per codec
+    bucket), training converges at aggressive truncation (b=2 tqsgd), and
+    the residual is live (non-zero) after the first step."""
     from test_dist import PRELUDE, run_with_devices
 
     out = run_with_devices(PRELUDE + """
-from repro.dist.train_step import init_ef_state
+from repro.dist.train_step import init_ef_state, local_bucket_sizes
 mesh = jax.make_mesh((4,2), ("data","model"), axis_types=(AxisType.Auto,)*2)
 cfg = reduced(get_config("llama3.2-1b")).replace(fsdp=True)
 params0, logical = init_lm(jax.random.key(0), cfg)
@@ -109,7 +110,13 @@ def run(ef):
     sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P))
     p = jax.device_put(jax.tree.map(jnp.copy, params0), sh)
     o = jax.tree.map(jnp.zeros_like, p)
-    e = init_ef_state(params0, mesh)
+    e = init_ef_state(params0, mesh, pspecs, ts)
+    # bucket-resident layout: one (clients, model_shards * local_bucket) row
+    # stack per bucket of the trace-time plan
+    sizes = local_bucket_sizes(params0, mesh, pspecs, ts)
+    assert isinstance(e, tuple) and len(e) == len(sizes), (len(e), sizes)
+    assert all(x.shape == (4, 2 * s) for x, s in zip(e, sizes)), \\
+        [(x.shape, s) for x, s in zip(e, sizes)]
     losses = []
     for i in range(8):
         b = lm_batch(cfg, jnp.uint32(i), 8, 128)

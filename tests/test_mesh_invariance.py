@@ -43,7 +43,9 @@ _SCRIPT = """
 import os
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, AxisType
-from repro.core.compressors import CompressorConfig
+from repro.core.compressors import CompressorConfig, plan_buckets
+from repro.adaptive.controller import AdaptiveConfig
+from repro.adaptive.telemetry import init_telemetry
 from repro.dist import reference, sharding
 from repro.dist.train_step import TrainStepConfig, _sync_buckets, _sync_leaf
 
@@ -68,13 +70,20 @@ leaves = [
     for i, s in enumerate(leaf_shapes)
 ]
 skey = jax.random.key(123)
+BP = plan_buckets([int(np.prod(s)) for s in leaf_shapes], 4096)
+# bucket-resident EF state: one stacked (n, m_b) array per codec bucket
+ef0 = [
+    (jax.random.normal(jax.random.fold_in(key0, 100 + b), (n, m)) * 0.01
+     ).astype(jnp.float32)
+    for b, m in enumerate(BP.sizes)
+]
 
 
 def run_mesh(ts):
     def body(key, *stacked):
         vals = [x[0] for x in stacked]
         if ts.bucket_mb > 0:
-            out, _, _ = _sync_buckets(ts, vals, key, dp)
+            out, _, _, _ = _sync_buckets(ts, vals, key, dp)
         else:
             out = [_sync_leaf(ts, g, jax.random.fold_in(key, i), dp)
                    for i, g in enumerate(vals)]
@@ -87,31 +96,82 @@ def run_mesh(ts):
     return jax.jit(smap)(skey, *leaves)
 
 
+def assert_peer_rows(name, what, leaf_i, g, w, exact):
+    # (a) every peer decoded identical bytes to identical values
+    for peer in range(1, n):
+        np.testing.assert_array_equal(
+            g[0], g[peer], err_msg=f"{name}: peer {peer} diverges on {what} {leaf_i}")
+    # (b) the mesh result is the single-device reference
+    if exact:
+        np.testing.assert_array_equal(
+            g[0], np.asarray(w), err_msg=f"{name}: reference mismatch on {what} {leaf_i}")
+    else:
+        np.testing.assert_allclose(
+            g[0], np.asarray(w), atol=1e-6, rtol=1e-6,
+            err_msg=f"{name}: reference mismatch on {what} {leaf_i}")
+
+
 def check(name, ts, exact):
     got = run_mesh(ts)
     want = jax.jit(lambda key, *ls: tuple(
         reference.reference_sync(ts, list(ls), dp_sizes, key)))(skey, *leaves)
     for leaf_i, (g, w) in enumerate(zip(got, want)):
-        g = np.asarray(g)
-        # (a) every peer decoded identical bytes to identical values
-        for peer in range(1, n):
-            np.testing.assert_array_equal(
-                g[0], g[peer], err_msg=f"{name}: peer {peer} diverges on leaf {leaf_i}")
-        # (b) the mesh result is the single-device reference
-        if exact:
-            np.testing.assert_array_equal(
-                g[0], np.asarray(w), err_msg=f"{name}: reference mismatch on leaf {leaf_i}")
-        else:
-            np.testing.assert_allclose(
-                g[0], np.asarray(w), atol=1e-6, rtol=1e-6,
-                err_msg=f"{name}: reference mismatch on leaf {leaf_i}")
+        assert_peer_rows(name, "leaf", leaf_i, np.asarray(g), w, exact)
     print("OK", name)
 
 
-def ts_for(sync, method="tnqsgd", bits=3, bucket_mb=1.0 / 64.0, bits_plan=None):
+def check_state(name, ts, exact):
+    # EF + adaptive over the bucket-resident state layout: the mesh body
+    # threads the stacked EF bucket arrays and the telemetry rows exactly as
+    # _make_sync_fn does; means must agree bitwise across peers, and the
+    # per-peer residual/telemetry rows must equal the reference's.
+    t0 = jax.tree.map(lambda x: jnp.tile(x[None], (n,) + (1,) * x.ndim),
+                      init_telemetry(BP.n_buckets))
+
+    def body(key, tstate, *stacked_and_ef):
+        stacked, ef = stacked_and_ef[:len(leaves)], stacked_and_ef[len(leaves):]
+        vals = [x[0] for x in stacked]
+        t_in = jax.tree.map(lambda x: x[0], tstate)
+        out, resid, new_t, _ = _sync_buckets(ts, vals, key, dp,
+                                             [e[0] for e in ef], t_in)
+        return (tuple(o[None] for o in out), tuple(r[None] for r in resid),
+                jax.tree.map(lambda x: x[None], new_t))
+
+    t_spec = jax.tree.map(lambda _: P(dp), t0)
+    smap = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), t_spec) + (P(dp),) * (len(leaves) + len(ef0)),
+        out_specs=(tuple(P(dp) for _ in leaves), tuple(P(dp) for _ in ef0), t_spec),
+        axis_names=set(mesh.axis_names), check_vma=False)
+    means, resids, new_t = jax.jit(smap)(skey, t0, *leaves, *ef0)
+
+    w_means, w_resids, w_t = jax.jit(
+        lambda key, t, ls, ef: reference.reference_sync_state(
+            ts, list(ls), dp_sizes, key, ef=list(ef), tstate=t)
+    )(skey, t0, tuple(leaves), tuple(ef0))
+
+    for leaf_i, (g, w) in enumerate(zip(means, w_means)):
+        assert_peer_rows(name, "leaf", leaf_i, np.asarray(g), w, exact)
+    for b, (r, w) in enumerate(zip(resids, w_resids)):
+        r, w = np.asarray(r), np.asarray(w)
+        if exact:
+            np.testing.assert_array_equal(r, w, err_msg=f"{name}: resid bucket {b}")
+        else:
+            np.testing.assert_allclose(r, w, atol=1e-6, rtol=1e-6,
+                                       err_msg=f"{name}: resid bucket {b}")
+    for got_leaf, want_leaf in zip(jax.tree.leaves(new_t), jax.tree.leaves(w_t)):
+        np.testing.assert_allclose(np.asarray(got_leaf), np.asarray(want_leaf),
+                                   atol=1e-5, rtol=1e-5,
+                                   err_msg=f"{name}: telemetry rows diverge")
+    print("OK", name)
+
+
+def ts_for(sync, method="tnqsgd", bits=3, bucket_mb=1.0 / 64.0, bits_plan=None,
+           **kw):
     return TrainStepConfig(
         sync=sync, bucket_mb=bucket_mb, bits_plan=bits_plan,
-        compressor=CompressorConfig(method=method, bits=bits, use_pallas=USE_PALLAS))
+        compressor=CompressorConfig(method=method, bits=bits, use_pallas=USE_PALLAS),
+        **kw)
 
 
 # Every mesh runs the four sync modes; the auxiliary surfaces (uniform-
@@ -141,6 +201,20 @@ per_leaf = ("two_phase", "hierarchical", "faithful") if FULL else (
     ("faithful",) if n == 1 else ())
 for sync in per_leaf:
     check(f"per_leaf/{sync}/tnqsgd", ts_for(sync, bucket_mb=0.0), exact=True)
+
+# EF + adaptive over the bucket-resident state layout (residual + telemetry
+# ride the sync exactly as in _make_sync_fn); full sweep on the cheap 2-peer
+# mesh, one hierarchical case on the pod meshes.
+ef_sweep = ("faithful", "two_phase") if FULL else (
+    ("hierarchical",) if len(dp_sizes) > 1 else ())
+for sync in ef_sweep:
+    acfg = AdaptiveConfig(ema=0.9)
+    check_state(f"bucketed_state/{sync}/tnqsgd",
+                ts_for(sync, error_feedback=True, adaptive=acfg), exact=True)
+if FULL:
+    check_state("bucketed_state/faithful/bits_plan",
+                ts_for("faithful", bits_plan=(2, 4, 3), error_feedback=True,
+                       adaptive=AdaptiveConfig(ema=0.9)), exact=True)
 
 print("ALL_OK")
 """

@@ -135,6 +135,73 @@ def test_approx_quantile_agrees_with_exact(g):
     assert abs(a_exact - a_approx) / a_exact < 0.05
 
 
+def test_plan_sample_contiguous_chunks_agree(g):
+    """The contiguous-chunk statistics subsample (the TPU-friendly
+    replacement for the strided ``g32[::stride]`` gather) yields the same
+    estimators as the full-tensor fit within tight tolerance on iid data,
+    and actually takes contiguous runs."""
+    import dataclasses
+
+    from repro.core.compressors import _plan_sample
+
+    cfg_full = CompressorConfig(method="tqsgd", bits=3, plan_sample=0)
+    cfg_sub = CompressorConfig(method="tqsgd", bits=3, plan_sample=65536)
+    m_full = plan(cfg_full, g)
+    m_sub = plan(cfg_sub, g)
+    assert abs(float(m_full.alpha) - float(m_sub.alpha)) / float(m_full.alpha) < 0.1
+    # tail estimators agree too (the fit sees a representative sample)
+    t_full = fit_power_law_tail(g)
+    t_sub = fit_power_law_tail(_plan_sample(g.reshape(-1), 65536))
+    assert abs(float(t_full.gamma) - float(t_sub.gamma)) < 0.2
+    assert abs(float(t_full.g_min) - float(t_sub.g_min)) / float(t_full.g_min) < 0.1
+    # the sample is literally made of contiguous runs of the input
+    x = jnp.arange(400_000, dtype=jnp.float32)
+    s = np.asarray(_plan_sample(x, 65536))
+    assert s.size <= 65536
+    runs = np.split(s, np.where(np.diff(s) != 1.0)[0] + 1)
+    assert len(runs) <= 64 and all(r.size >= 512 for r in runs)
+    # ... and the runs always spread across the WHOLE tensor, including the
+    # sample < n <= 2*sample window where a naive chunking would degenerate
+    # to one leading block and never see the trailing leaves of a bucket
+    for n in (100_000, 131_000, 65_537):
+        s = np.asarray(_plan_sample(jnp.arange(n, dtype=jnp.float32), 65536))
+        assert s.max() >= 0.9 * n, (n, s.max())
+        assert s.min() <= 0.1 * n, (n, s.min())
+    # non-uniform methods run the same sampled statistics
+    m_nu = plan(dataclasses.replace(cfg_sub, method="tnqsgd"), g)
+    m_nu_full = plan(dataclasses.replace(cfg_full, method="tnqsgd"), g)
+    assert abs(float(m_nu.alpha) - float(m_nu_full.alpha)) / float(m_nu_full.alpha) < 0.15
+
+
+def test_plan_from_stats_agrees_with_sort_plan(g):
+    """The histogram-driven ``plan_from_stats`` (what the bucketed codec
+    runs off the fused one-pass statistics) solves essentially the same α
+    as the sort-based ``plan`` fallback, for both uniform and non-uniform
+    methods, and builds a usable strictly-increasing codebook."""
+    from repro.adaptive.telemetry import bucket_statistics
+    from repro.core.compressors import plan_from_stats
+
+    counts, log_sums, g_max, _, _ = bucket_statistics(g)
+    for method in ("tqsgd", "tnqsgd", "qsgd", "nqsgd", "tbqsgd"):
+        cfg = CompressorConfig(method=method, bits=3, plan_sample=0)
+        m_sort = plan(cfg, g)
+        m_hist = plan_from_stats(cfg, counts, log_sums, g_max)
+        assert abs(float(m_sort.alpha) - float(m_hist.alpha)) / float(m_sort.alpha) < 0.15, method
+        lv = np.asarray(m_hist.levels)
+        assert (np.diff(lv) > 0).all(), method
+        assert lv[-1] == pytest.approx(float(m_hist.alpha), rel=1e-6)
+    # quantizing with the histogram plan costs no material MSE vs the sort plan
+    from repro.core.quantizers import quantize
+
+    cfg = CompressorConfig(method="tnqsgd", bits=3, plan_sample=0)
+    q_sort = quantize(g[:100_000], plan(cfg, g), jax.random.key(3))
+    q_hist = quantize(g[:100_000], plan_from_stats(cfg, counts, log_sums, g_max),
+                      jax.random.key(3))
+    mse_sort = float(jnp.mean((q_sort - g[:100_000]) ** 2))
+    mse_hist = float(jnp.mean((q_hist - g[:100_000]) ** 2))
+    assert mse_hist < mse_sort * 1.2, (mse_hist, mse_sort)
+
+
 def test_approx_gmin_compressor_path(g):
     """CompressorConfig(approx_gmin=True) routes the plan through the
     histogram quantile and changes the MSE only marginally."""
