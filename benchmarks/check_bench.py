@@ -1,0 +1,161 @@
+"""Validate BENCH_*.json artifacts: schema + fused-beats-unfused guards.
+
+CI runs this right after each benchmark upload so a malformed artifact or a
+perf regression that slips past the in-suite asserts (e.g. a suite edited to
+stop asserting, or an artifact truncated mid-write) fails the job instead of
+silently archiving garbage.
+
+Schema: ``{"mode": "quick"|"full", "suites": {name: {"us_total": number,
+"cases": {case: {"us_per_call": number|null, "derived"?: number|str}}}}}``.
+
+Guards (keyed on the repo's case-naming conventions):
+
+- ratio cases (``*fused_vs_unfused*``, ``*fused_vs_seed*``,
+  ``mse_ratio_quant_over_powersgd``): derived ratio >= 1.0 — the fused
+  kernel / low-rank codec is no worse than its baseline on the modeled
+  metric.
+- modeled-bytes pairs (``..fused..`` with a ``..seed..`` / ``..unfused..``
+  counterpart): fused derived <= counterpart derived.
+- equal-results contracts (``*fused*maxdiff`` / ``*oracle*maxdiff``):
+  derived <= 1e-5 (float32-ulp scale; quantization-error maxdiffs such as
+  ``bucket_vs_leaf_maxdiff`` are intentionally not held to this).
+- wall-time pair ``fused_encode_pipeline_N`` vs ``seed_encode_pipeline_N``:
+  us_per_call(fused) <= 1.5x us_per_call(seed) (slack for CI timer noise;
+  the in-suite assert is the tight 1.1x check).
+- lowrank wire parity: ``wire_bytes_mixed_plan`` <=
+  ``wire_bytes_tnqsgd_3bit`` — the rank search honored the byte budget.
+
+Usage: ``python -m benchmarks.check_bench BENCH_core.json [more.json ...]``
+(also runs as a script).  Exits non-zero listing every violation.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+_RATIO_RE = re.compile(r"fused_vs_(unfused|seed)|mse_ratio_quant_over_powersgd")
+_MAXDIFF_RE = re.compile(r"(fused|oracle).*maxdiff|maxdiff.*(fused|oracle)")
+_MAXDIFF_TOL = 1e-5
+_PIPELINE_SLACK = 1.5
+
+
+def _is_num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def check_schema(report, errors: list[str]) -> int:
+    """Structural checks; returns the number of checks performed."""
+    n = 0
+
+    def req(cond: bool, msg: str) -> None:
+        nonlocal n
+        n += 1
+        if not cond:
+            errors.append(msg)
+
+    req(isinstance(report, dict), "top level is not an object")
+    if not isinstance(report, dict):
+        return n
+    req(report.get("mode") in ("quick", "full"),
+        f"mode must be 'quick' or 'full', got {report.get('mode')!r}")
+    suites = report.get("suites")
+    req(isinstance(suites, dict) and suites, "suites must be a non-empty object")
+    for sname, suite in (suites or {}).items() if isinstance(suites, dict) else ():
+        req(isinstance(suite, dict), f"suite {sname!r} is not an object")
+        if not isinstance(suite, dict):
+            continue
+        req(_is_num(suite.get("us_total")) and suite["us_total"] >= 0,
+            f"suite {sname!r}: us_total must be a non-negative number")
+        cases = suite.get("cases")
+        req(isinstance(cases, dict) and cases,
+            f"suite {sname!r}: cases must be a non-empty object")
+        for cname, case in (cases or {}).items() if isinstance(cases, dict) else ():
+            req(isinstance(case, dict) and ("us_per_call" in case),
+                f"case {sname}/{cname}: missing us_per_call")
+            if isinstance(case, dict):
+                us = case.get("us_per_call")
+                req(us is None or (_is_num(us) and us >= 0),
+                    f"case {sname}/{cname}: us_per_call must be null or >= 0")
+    return n
+
+
+def check_guards(report, errors: list[str]) -> int:
+    """Perf/contract guards over case derived values; returns #guards run."""
+    n = 0
+    for sname, suite in report.get("suites", {}).items():
+        cases = suite.get("cases", {}) if isinstance(suite, dict) else {}
+        derived = {c: v.get("derived") for c, v in cases.items()
+                   if isinstance(v, dict)}
+        us = {c: v.get("us_per_call") for c, v in cases.items()
+              if isinstance(v, dict)}
+        for cname, d in derived.items():
+            if _RATIO_RE.search(cname):
+                n += 1
+                if not (_is_num(d) and d >= 1.0):
+                    errors.append(f"{sname}/{cname}: fused/low-rank ratio "
+                                  f"{d!r} < 1.0 — baseline beat the optimized path")
+            if _MAXDIFF_RE.search(cname):
+                n += 1
+                if not (_is_num(d) and d <= _MAXDIFF_TOL):
+                    errors.append(f"{sname}/{cname}: equal-results maxdiff "
+                                  f"{d!r} exceeds {_MAXDIFF_TOL}")
+            # modeled-bytes pair: a "fused" case whose seed/unfused twin exists
+            if "fused" in cname and "unfused" not in cname and "_vs_" not in cname:
+                for alt in ("unfused", "seed"):
+                    twin = derived.get(cname.replace("fused", alt))
+                    if _is_num(d) and _is_num(twin):
+                        n += 1
+                        if d > twin:
+                            errors.append(
+                                f"{sname}/{cname}: fused modeled metric {d} > "
+                                f"{alt} counterpart {twin}")
+        for cname, t in us.items():
+            m = re.fullmatch(r"fused_encode_pipeline_(\d+)", cname)
+            if m:
+                seed_t = us.get(f"seed_encode_pipeline_{m.group(1)}")
+                if _is_num(t) and _is_num(seed_t) and seed_t > 0:
+                    n += 1
+                    if t > _PIPELINE_SLACK * seed_t:
+                        errors.append(
+                            f"{sname}/{cname}: fused pipeline {t}us > "
+                            f"{_PIPELINE_SLACK}x seed pipeline {seed_t}us")
+        if _is_num(derived.get("wire_bytes_mixed_plan")) and \
+                _is_num(derived.get("wire_bytes_tnqsgd_3bit")):
+            n += 1
+            if derived["wire_bytes_mixed_plan"] > derived["wire_bytes_tnqsgd_3bit"]:
+                errors.append(f"{sname}: mixed-plan wire "
+                              f"{derived['wire_bytes_mixed_plan']} exceeds the "
+                              f"quantizer budget {derived['wire_bytes_tnqsgd_3bit']}")
+    return n
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        report = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable: {e}"]
+    n_schema = check_schema(report, errors)
+    n_guards = check_guards(report, errors) if not errors else 0
+    if not errors:
+        print(f"{path}: OK ({n_schema} schema checks, {n_guards} guards)")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("usage: check_bench.py BENCH_*.json [...]", file=sys.stderr)
+        return 2
+    failed = False
+    for arg in argv:
+        for msg in check_file(pathlib.Path(arg)):
+            failed = True
+            print(f"{arg}: FAIL: {msg}", file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

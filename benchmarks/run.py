@@ -38,12 +38,10 @@ def main(argv=None) -> int:
                     help="machine-readable output path (empty string disables)")
     args = ap.parse_args(argv)
     quick = not args.full
-    if args.json_path is None:
-        args.json_path = "BENCH_adaptive.json" if args.adaptive else "BENCH_core.json"
 
     from benchmarks import (
         adaptive_bench, collectives_bench, fig1_grad_density, fig3_accuracy, fig4_tradeoff,
-        kernel_bench, quant_error,
+        kernel_bench, lowrank_bench, quant_error,
     )
 
     if args.adaptive:
@@ -53,13 +51,27 @@ def main(argv=None) -> int:
             "quant_error": quant_error.main,
             "kernels": kernel_bench.main,
             "collectives": collectives_bench.main,
+            "lowrank": lowrank_bench.main,
             "fig1_grad_density": fig1_grad_density.main,
             "fig3_accuracy": fig3_accuracy.main,
             "fig4_tradeoff": fig4_tradeoff.main,
         }
     if args.only:
         keep = set(args.only.split(","))
+        unknown = sorted(keep - set(suites))
+        if unknown:
+            ap.error(f"unknown --only suite(s): {', '.join(unknown)}; "
+                     f"valid names: {', '.join(sorted(suites))}")
         suites = {k: v for k, v in suites.items() if k in keep}
+    if args.json_path is None:
+        # default artifact name: BENCH_adaptive for the adaptive suite,
+        # BENCH_<suite> for a single --only selection, BENCH_core otherwise
+        if args.adaptive:
+            args.json_path = "BENCH_adaptive.json"
+        elif args.only and len(suites) == 1:
+            args.json_path = f"BENCH_{next(iter(suites))}.json"
+        else:
+            args.json_path = "BENCH_core.json"
 
     print("name,us_per_call,derived")
     report: dict = {"mode": "full" if args.full else "quick", "suites": {}}

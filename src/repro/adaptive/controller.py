@@ -211,3 +211,140 @@ def allocate_bits(
         budget_bytes=int(budget),
         err=sum(err[b][bits[b]] for b in range(nb)),
     )
+
+
+class MethodPlan(NamedTuple):
+    """A heterogeneous codec plan: per-bucket ``bits_plan`` entries (an int
+    quantizer width or a ``("powersgd", rank)`` tuple), plus accounting."""
+
+    entries: tuple          # per-bucket int bits or ("method", rank)
+    alphas: tuple[float, ...]  # solver α for quantized buckets (0 otherwise)
+    spend_bytes: int
+    budget_bytes: int
+    err: float = 0.0
+
+
+def _density_msq(dens: EmpiricalDensity) -> float:
+    """Per-element mean-square gradient magnitude from the telemetry
+    histogram: ``Σ p_k · Δ_k · mid_k²`` over the density's bins."""
+    edges = jnp.asarray(dens.edges, jnp.float32)
+    mids = 0.5 * (edges[:-1] + edges[1:])
+    widths = edges[1:] - edges[:-1]
+    return float(jnp.sum(jnp.asarray(dens.density, jnp.float32) * widths * mids**2))
+
+
+def _lowrank_error(msq: float, m: int, rank: int, beta: float) -> float:
+    """Per-element predicted powersgd error for an m-element bucket at the
+    given rank, under a power-law singular-value decay ``σ_i² ∝ i^-beta``:
+    the captured energy fraction is ``E_r = Σ_{i<=r} i^-beta / Σ_{i<=R}
+    i^-beta`` over the bucket matrix's full spectrum R = min(rows, cols),
+    and the model error is the uncaptured share of the mean square."""
+    from repro.core import lowrank
+
+    rows, cols = lowrank.matrix_shape(m)
+    full = min(rows, cols)
+    r = max(1, min(rank, full))
+    weights = [i ** -beta for i in range(1, full + 1)]
+    captured = sum(weights[:r]) / sum(weights)
+    return msq * (1.0 - captured)
+
+
+def allocate_plan(
+    tails: PowerLawTail | Sequence[PowerLawTail],
+    sizes: Sequence[int],
+    budget: int,
+    ccfg: CompressorConfig,
+    *,
+    dens: Optional[Sequence[EmpiricalDensity]] = None,
+    min_bits: int = 2,
+    max_bits: int = 8,
+    alpha_iters: int = 10,
+    ranks: Sequence[int] = (1, 2, 4, 8),
+    sv_decay: float = 2.0,
+) -> MethodPlan:
+    """Method×rank×bits allocation: :func:`allocate_bits` extended with
+    per-bucket ``("powersgd", rank)`` candidates.
+
+    The quantizer water-filling runs first; each bucket is then offered a
+    swap to its best low-rank candidate, scored by (predicted error
+    reduction) / (wire-byte delta, clamped at 1) under the powersgd model
+    of :func:`_lowrank_error` — swaps apply best-first while they fit the
+    budget.  Rank candidates need the telemetry densities (``dens``) for
+    the mean-square term; without them the result degrades to the pure
+    quantizer plan.  Freed bytes from a cheaper low-rank wire are re-spent
+    on +1-bit upgrades of the remaining quantized buckets.
+    """
+    base = allocate_bits(tails, sizes, budget, ccfg, dens=dens,
+                         min_bits=min_bits, max_bits=max_bits,
+                         alpha_iters=alpha_iters)
+    entries: list = list(base.bits)
+    alphas = list(base.alphas)
+    if dens is None:
+        return MethodPlan(tuple(entries), tuple(alphas),
+                          base.spend_bytes, base.budget_bytes, base.err)
+    from repro.core.codecs import bucket_cfg_entry
+
+    rows = _tail_rows(tails)
+    nb = len(sizes)
+
+    def q_err(b: int, k: int) -> float:
+        return _solve_bucket(rows[b], dens[b], k, ccfg, alpha_iters)[1] * sizes[b]
+
+    def cost(b: int, entry) -> int:
+        return int(wire_bytes(ccfg, sizes[b], entry))
+
+    errs = [q_err(b, entries[b]) for b in range(nb)]
+    spend = sum(cost(b, entries[b]) for b in range(nb))
+    # Best powersgd candidate per bucket under the budget's spare room.
+    changed = True
+    while changed:
+        changed = False
+        best = None
+        for b in range(nb):
+            if not isinstance(entries[b], int):
+                continue
+            msq = _density_msq(dens[b])
+            for r in ranks:
+                entry = ("powersgd", int(r))
+                pcfg = bucket_cfg_entry(ccfg, entry)
+                if pcfg.rank != r:
+                    continue  # out-of-range rank for this config
+                e = _lowrank_error(msq, sizes[b], r, sv_decay) * sizes[b]
+                dcost = cost(b, entry) - cost(b, entries[b])
+                if spend + dcost > budget or e >= errs[b]:
+                    continue
+                score = (errs[b] - e) / max(dcost, 1)
+                if best is None or score > best[0]:
+                    best = (score, b, entry, e, dcost)
+        if best is not None:
+            _, b, entry, e, dcost = best
+            entries[b], errs[b], alphas[b] = entry, e, 0.0
+            spend += dcost
+            changed = True
+    # Re-spend any freed bytes on the still-quantized buckets.
+    while True:
+        best = None
+        for b in range(nb):
+            if not isinstance(entries[b], int) or entries[b] + 1 > max_bits:
+                continue
+            k = entries[b] + 1
+            dcost = cost(b, k) - cost(b, entries[b])
+            if spend + dcost > budget:
+                continue
+            gain = errs[b] - q_err(b, k)
+            score = gain / max(dcost, 1)
+            if best is None or score > best[0]:
+                best = (score, b, k, dcost)
+        if best is None or best[0] <= 0.0:
+            break
+        _, b, k, dcost = best
+        a, e = _solve_bucket(rows[b], dens[b], k, ccfg, alpha_iters)
+        entries[b], errs[b], alphas[b] = k, e * sizes[b], a
+        spend += dcost
+    return MethodPlan(
+        entries=tuple(entries),
+        alphas=tuple(alphas),
+        spend_bytes=spend,
+        budget_bytes=int(budget),
+        err=sum(errs),
+    )

@@ -50,12 +50,20 @@ class CompressorConfig:
     pack: bool = True              # bit-pack codes into uint32 words on the wire
     plan_sample: int = 65536       # max elements used for the statistics pass
     approx_gmin: bool = False      # histogram quantile for g_min (no full sort)
+    rank: int = 4                  # factor rank for rank-based codecs (powersgd)
 
     def __post_init__(self):
         if self.method not in METHODS:
-            raise ValueError(f"unknown method {self.method!r}; expected one of {METHODS}")
+            # registered codec families beyond the built-in quantizers
+            from .codecs import known_methods
+
+            if self.method not in known_methods():
+                raise ValueError(
+                    f"unknown method {self.method!r}; expected one of {known_methods()}")
         if not (1 <= self.bits <= 8):
             raise ValueError("bits must be in [1, 8]")
+        if not (1 <= self.rank <= 64):
+            raise ValueError("rank must be in [1, 64]")
 
     @property
     def s(self) -> int:
@@ -219,6 +227,12 @@ def compress_decompress(cfg: CompressorConfig, g: jax.Array, key: jax.Array) -> 
     return decode(cfg, wire, meta, g.shape).astype(g.dtype)
 
 
+def _is_plan_entry(entry) -> bool:
+    """A per-bucket ``("method", value)`` plan pair (vs a bits list)."""
+    return (isinstance(entry, (list, tuple)) and len(entry) == 2
+            and isinstance(entry[0], str))
+
+
 def wire_bytes(cfg: CompressorConfig, n_elements, bits=None) -> int:
     """Bytes on the wire for one tensor (payload + meta).
 
@@ -231,19 +245,31 @@ def wire_bytes(cfg: CompressorConfig, n_elements, bits=None) -> int:
     Heterogeneous adaptive formats are first-class: ``n_elements`` may be a
     sequence of per-bucket sizes, optionally with a matching sequence of
     per-bucket ``bits`` (scalar ``bits`` overrides ``cfg.bits`` uniformly).
-    The result is the total over buckets — the fused wire tensor pays one
-    codebook per bucket, which is exactly this sum.
+    A per-bucket entry may also be a ``("method", value)`` pair or a full
+    :class:`CompressorConfig` (the method-aware adaptive plans), resolved
+    through ``core.codecs.bucket_cfg_entry`` — rank-based codecs account
+    their own factor wire.  The result is the total over buckets — the
+    fused wire tensor pays one codebook per bucket, which is exactly this
+    sum.
     """
     if isinstance(n_elements, (list, tuple)):
-        if isinstance(bits, (list, tuple)):
+        if isinstance(bits, (list, tuple)) and not _is_plan_entry(bits):
             if len(bits) != len(n_elements):
                 raise ValueError(f"{len(bits)} bit-widths vs {len(n_elements)} buckets")
             return sum(wire_bytes(cfg, n, b) for n, b in zip(n_elements, bits))
         return sum(wire_bytes(cfg, n, bits) for n in n_elements)
+    if _is_plan_entry(bits) or isinstance(bits, CompressorConfig):
+        from .codecs import bucket_cfg_entry
+
+        return wire_bytes(bucket_cfg_entry(cfg, bits), n_elements)
     if isinstance(bits, (list, tuple)):
         raise ValueError("per-bucket bits need a matching list of bucket sizes")
     if cfg.method == "dsgd":
         return 4 * n_elements
+    if cfg.method not in METHODS:
+        from .codecs import get_codec
+
+        return get_codec(cfg.method).wire_bytes(cfg, n_elements)
     from .quantizers import num_levels, packed_size
 
     b = cfg.bits if bits is None else int(bits)

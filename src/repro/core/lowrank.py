@@ -1,0 +1,154 @@
+"""PowerSGD low-rank gradient compression (Vogels et al.), as a codec plugin.
+
+The second codec family behind :mod:`core.codecs`: a bucket's flat ``m``
+elements are viewed as a (rows, cols) matrix ``M`` (zero-padded,
+``cols`` = largest power of two ≤ √m) and compressed to rank-``r`` factors
+by one warm-started power-iteration step:
+
+    P  = M @ Q_prev          (Q_prev from the bucket's EF-state aux tail,
+    P̂  = orth(P)              deterministic init on the first step)
+    Qn = Mᵀ @ P̂
+
+The transmission is the bitcast fp32 pair ``(P̂, Qn)`` —
+``(rows + cols) · r`` words, independent of the bit width — and the decode
+is the rank-``r`` reconstruction ``P̂ @ Qnᵀ`` averaged over peers.  The
+compressor is *biased*; the EF residual ``c − P̂ @ Qnᵀ`` (computed against
+this peer's own factors) feeds the next step's error feedback, which is
+what makes biased low-rank compression converge (Wu et al., 1806.08054;
+Vogels et al.).  ``Qn`` is carried to the next step in the same EF row
+(``state_extra`` = cols·r), warm-starting the power iteration — one
+iteration per step then tracks the gradient's dominant subspace.
+
+Peer symmetry: the cold-start ``Q₀`` is a fixed-key normal draw — a *trace
+constant*, identical on every peer — and the orthogonalization runs through
+``kernels.orthogonalize`` (Pallas kernel under ``use_pallas``, the shared-
+body ``kernels.ref`` oracle otherwise), so the mesh and the single-device
+reference execute the identical op sequence (pinned by
+``tests/test_mesh_invariance.py``).
+
+Not chunkable: factor matrices do not slice element-wise, so the two-phase
+collective tiles the full wire into every all-to-all row (an embedded
+all-gather) and decodes entirely in phase 1 (see ``core.codecs``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .codecs import Codec, register_codec
+from .compressors import CompressorConfig
+
+# Fixed cold-start key: a trace-time constant, so every peer (and the
+# single-device reference) draws the same Q₀ without any communication.
+_Q0_SEED = 0x51D
+
+
+def matrix_shape(m: int) -> tuple[int, int]:
+    """Static (rows, cols) factorization target for a flat m-element bucket.
+
+    cols is the largest power of two ≤ √m (clamped to [1, m]) — near-square
+    keeps the factor wire ``(rows + cols)·r`` minimal, and the power-of-two
+    width keeps the padded tail small and lane-friendly.
+    """
+    if m <= 1:
+        return max(m, 1), 1
+    cols = 1 << (int(math.isqrt(m)).bit_length() - 1)
+    cols = max(min(cols, m), 1)
+    return -(-m // cols), cols
+
+
+def effective_rank(cfg: CompressorConfig, m: int) -> int:
+    """``cfg.rank`` clamped to the bucket's matrix: r ≤ min(rows, cols)."""
+    rows, cols = matrix_shape(m)
+    return max(1, min(cfg.rank, rows, cols))
+
+
+def orthogonalize(p: jax.Array, use_pallas: bool) -> jax.Array:
+    """Gram–Schmidt dispatch: Pallas kernel vs the shared-body jnp oracle."""
+    if use_pallas:
+        from repro.kernels import ops
+
+        return ops.orthogonalize(p)
+    from repro.kernels import ref
+
+    return ref.orthogonalize(p)
+
+
+def _q_init(cols: int, r: int) -> jax.Array:
+    return jax.random.normal(jax.random.key(_Q0_SEED), (cols, r), jnp.float32)
+
+
+def _factorize(cfg: CompressorConfig, flat: jax.Array, use_pallas: bool,
+               q_prev=None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One warm-started power-iteration step -> (P̂, Qn, own reconstruction)."""
+    m = flat.size
+    rows, cols = matrix_shape(m)
+    r = effective_rank(cfg, m)
+    mat = jnp.pad(flat, (0, rows * cols - m)).reshape(rows, cols)
+    q0 = _q_init(cols, r)
+    if q_prev is None:
+        q = q0
+    else:
+        qm = q_prev.reshape(cols, r)
+        # zero aux (a freshly initialized EF row) means "no warm start yet"
+        q = jnp.where(jnp.sum(qm * qm) > 0.0, qm, q0)
+    p_hat = orthogonalize(mat @ q, use_pallas)
+    q_new = mat.T @ p_hat
+    own = (p_hat @ q_new.T).reshape(-1)[:m]
+    return p_hat, q_new, own
+
+
+def _wire(p_hat: jax.Array, q_new: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(
+        jnp.concatenate([p_hat.reshape(-1), q_new.reshape(-1)]), jnp.uint32)
+
+
+class PowerSGDCodec(Codec):
+    """Rank-based low-rank codec; fidelity knob is ``cfg.rank``."""
+
+    name = "powersgd"
+    chunkable = False
+    rank_based = True
+
+    def wire_words(self, cfg, n):
+        rows, cols = matrix_shape(n)
+        return (rows + cols) * effective_rank(cfg, n)
+
+    def state_extra(self, cfg, n):
+        _, cols = matrix_shape(n)
+        return cols * effective_rank(cfg, n)
+
+    def encode(self, cfg, flat, pln, key, use_pallas):
+        p_hat, q_new, _ = _factorize(cfg, flat, use_pallas)
+        return _wire(p_hat, q_new)
+
+    def encode_residual(self, cfg, flat, pln, key, use_pallas, aux=None):
+        p_hat, q_new, own = _factorize(cfg, flat, use_pallas, q_prev=aux)
+        return _wire(p_hat, q_new), flat - own, q_new.reshape(-1)
+
+    def _peer_recons(self, cfg, rows, n):
+        rws, cols = matrix_shape(n)
+        r = effective_rank(cfg, n)
+        pw = rws * r
+        vals = jax.lax.bitcast_convert_type(rows, jnp.float32)
+        out = []
+        for j in range(rows.shape[0]):
+            p_hat = vals[j, :pw].reshape(rws, r)
+            q_new = vals[j, pw:pw + cols * r].reshape(cols, r)
+            out.append((p_hat @ q_new.T).reshape(-1)[:n])
+        return out
+
+    def decode_reduce(self, cfg, rows, n, use_pallas):
+        recons = self._peer_recons(cfg, rows, n)
+        acc = recons[0]
+        for v in recons[1:]:
+            acc = acc + v
+        return acc / float(len(recons))
+
+    def decode_rows(self, cfg, rows, n, use_pallas):
+        return jnp.stack(self._peer_recons(cfg, rows, n))
+
+
+register_codec(PowerSGDCodec())

@@ -24,20 +24,40 @@ faithful — independent of ``shards`` — matching the paper's wire model.
 """
 from __future__ import annotations
 
-from repro.core.compressors import CompressorConfig, wire_bytes
+from repro.core.compressors import METHODS, CompressorConfig, wire_bytes
 
 MODES = ("dsgd", "two_phase", "hierarchical", "faithful")
+
+
+def _plan_entry(bits):
+    """True for a ``("method", value)`` plan entry or a full config."""
+    if isinstance(bits, CompressorConfig):
+        return True
+    return (isinstance(bits, (tuple, list)) and len(bits) == 2
+            and isinstance(bits[0], str))
+
+
+def _bucket_cfg(cfg: CompressorConfig, bits) -> CompressorConfig:
+    """Resolve a per-bucket plan entry (int bits / method tuple / config)
+    against the base config; plain ``None``/int keep the quantizer path."""
+    from repro.core.codecs import bucket_cfg_entry
+
+    return cfg if bits is None else bucket_cfg_entry(cfg, bits)
 
 
 def wire_bytes_per_device(cfg: CompressorConfig, n, shards: int, mode: str, bits=None) -> float:
     """Per-device, per-hop wire bytes for one n-element gradient sync.
 
     ``n`` may be a sequence of per-bucket sizes with a matching sequence of
-    per-bucket ``bits`` (the adaptive fused wire format); the cost is then
-    the sum over buckets, each chunked per the mode.
+    per-bucket ``bits`` entries — plain bit widths or ``("method", value)``
+    codec-plan entries (the adaptive fused wire format); the cost is then
+    the sum over buckets, each chunked per the mode.  Rank-based codecs put
+    an indivisible factor pair on the wire, so their two-phase cost is the
+    full wire (tiled all-to-all rows, no phase-2 refinement).
     """
     if isinstance(n, (list, tuple)):
-        bl = bits if isinstance(bits, (list, tuple)) else [bits] * len(n)
+        bl = bits if isinstance(bits, (list, tuple)) and not _plan_entry(bits) \
+            else [bits] * len(n)
         if len(bl) != len(n):
             raise ValueError(f"{len(bl)} bit-widths vs {len(n)} buckets")
         return sum(wire_bytes_per_device(cfg, nb, shards, mode, b) for nb, b in zip(n, bl))
@@ -47,14 +67,24 @@ def wire_bytes_per_device(cfg: CompressorConfig, n, shards: int, mode: str, bits
         raise ValueError("shards must be >= 1")
     if mode == "dsgd" or cfg.method == "dsgd":
         return 4.0 * n / shards
+    bcfg = _bucket_cfg(cfg, bits)
+    if bcfg.method not in METHODS:
+        from repro.core.codecs import get_codec
+
+        full = float(get_codec(bcfg.method).wire_bytes(bcfg, n))
+        if mode == "two_phase":
+            return full          # full wire tiled into every all-to-all row
+        if mode == "faithful":
+            return full / shards
+        return full + full / shards
     chunk = -(-n // shards)
     if mode == "two_phase":
-        return float(wire_bytes(cfg, chunk, bits))
+        return float(wire_bytes(bcfg, chunk))
     if mode == "faithful":
-        return wire_bytes(cfg, n, bits) / shards
+        return wire_bytes(bcfg, n) / shards
     # hierarchical: intra-pod two-phase chunk + the pod-mean faithful
     # exchange across pods, spread over the pod's members.
-    return float(wire_bytes(cfg, chunk, bits)) + wire_bytes(cfg, n, bits) / shards
+    return float(wire_bytes(bcfg, chunk)) + wire_bytes(bcfg, n) / shards
 
 
 def decode_hbm_bytes(cfg: CompressorConfig, n, peers: int, fused: bool, bits=None) -> float:
@@ -73,13 +103,25 @@ def decode_hbm_bytes(cfg: CompressorConfig, n, peers: int, fused: bool, bits=Non
     per-bucket sequences (the adaptive fused wire format); the cost sums.
     """
     if isinstance(n, (list, tuple)):
-        bl = bits if isinstance(bits, (list, tuple)) else [bits] * len(n)
+        bl = bits if isinstance(bits, (list, tuple)) and not _plan_entry(bits) \
+            else [bits] * len(n)
         if len(bl) != len(n):
             raise ValueError(f"{len(bl)} bit-widths vs {len(n)} buckets")
         return sum(decode_hbm_bytes(cfg, nb, peers, fused, b) for nb, b in zip(n, bl))
     from repro.core.quantizers import num_levels, packed_size
 
-    b = cfg.bits if bits is None else int(bits)
+    bcfg = _bucket_cfg(cfg, bits)
+    if bcfg.method not in METHODS:
+        # Rank-based decode: read every peer's factor pair, reconstruct
+        # (fused keeps the per-peer (n,) reconstructions in VMEM; unfused
+        # writes + re-reads them before the mean).
+        from repro.core.codecs import get_codec
+
+        words = 4.0 * peers * get_codec(bcfg.method).wire_words(bcfg, n)
+        if fused:
+            return words + 4.0 * n
+        return words + 2 * 4.0 * peers * n + 4.0 * n
+    b = bcfg.bits
     words = 4.0 * peers * packed_size(n, b) + 4.0 * peers * (num_levels(b) + 1)
     if fused:
         return words + 4.0 * n
@@ -119,7 +161,8 @@ def encode_hbm_bytes(cfg: CompressorConfig, n, fused: bool, *, ef: bool = True,
     sequences (the heterogeneous adaptive wire); the cost sums.
     """
     if isinstance(n, (list, tuple)):
-        bl = bits if isinstance(bits, (list, tuple)) else [bits] * len(n)
+        bl = bits if isinstance(bits, (list, tuple)) and not _plan_entry(bits) \
+            else [bits] * len(n)
         if len(bl) != len(n):
             raise ValueError(f"{len(bl)} bit-widths vs {len(n)} buckets")
         return sum(encode_hbm_bytes(cfg, nb, fused, ef=ef, adaptive=adaptive, bits=b)
@@ -128,7 +171,24 @@ def encode_hbm_bytes(cfg: CompressorConfig, n, fused: bool, *, ef: bool = True,
 
     from repro.core.quantizers import packed_size
 
-    b = cfg.bits if bits is None else int(bits)
+    bcfg = _bucket_cfg(cfg, bits)
+    if bcfg.method not in METHODS:
+        # Rank-based encode: EF-correct sweep, two power-iteration matmul
+        # reads of the bucket, the factor-pair wire write, the own
+        # reconstruction, and the residual write-back.  The factorization
+        # is one jitted graph either way, so fused == unfused here.
+        from repro.core.codecs import get_codec
+
+        words = 4.0 * get_codec(bcfg.method).wire_words(bcfg, n)
+        total = 4.0 * n                      # stats/correct: read g
+        if ef:
+            total += 8.0 * n                 # ... read e, write corrected
+        total += 2 * 4.0 * n + words         # M@Q and M.T@P reads + wire
+        total += 4.0 * n                     # own P@Q.T reconstruction
+        if ef:
+            total += 4.0 * n                 # residual write-back
+        return total
+    b = bcfg.bits
     words = 4.0 * packed_size(n, b)
     if fused:
         total = 4.0 * n                      # ef_correct_stats: read g

@@ -143,89 +143,106 @@ def _peer_stats(cfg: CompressorConfig, buckets: list, use_pallas: bool,
 
 def bucketed_faithful_ring_mean(
     cfg: CompressorConfig, buckets: list, key, use_pallas: bool = False,
-    bits: Optional[Sequence[int]] = None, stats: Optional[list] = None,
+    bits: Optional[Sequence] = None, stats: Optional[list] = None,
+    aux: Optional[list] = None,
 ) -> tuple[list, list]:
     """``sc.bucketed_faithful_ring_mean`` over stacked (n, m_b) buckets.
-    Returns ``(mean_buckets, resid_stacked)`` with ``resid_stacked[b]`` the
-    (n, m_b) per-peer EF residuals."""
+    ``aux[b]`` (optional) stacks the per-peer codec aux tails (n, extra_b).
+    Returns ``(mean_buckets, state_stacked)`` with ``state_stacked[b]`` the
+    (n, m_b + extra_b) per-peer EF residual (+ aux) rows."""
     n = buckets[0].shape[0]
     keys = _in_keys(key, n)
     keys = [_fold(k, i) for i, k in enumerate(keys)] if n > 1 else keys
     cfgs = sc._bucket_cfgs(cfg, len(buckets), bits)
+    codecs = [sc.get_codec(c.method) for c in cfgs]
     stats = _peer_stats(cfg, buckets, use_pallas, stats)
-    means, resids = [], []
+    means, states = [], []
     for b, sb in enumerate(buckets):
-        words, levels, rs = [], [], []
+        wires, rows = [], []
         for i in range(n):
             flat = sb[i].astype(jnp.float32)
-            meta = sc._plan_bucket(cfgs[b], flat, stats[i][b], use_pallas)
-            w, r = sc.encode_pack_residual(cfgs[b], flat, meta,
-                                           jax.random.fold_in(keys[i], b), use_pallas)
-            words.append(w)
-            levels.append(meta.levels)
-            rs.append(r)
-        resids.append(jnp.stack(rs))
-        if n == 1:
-            means.append(sc.decode_reduce(cfgs[b], words[0][None], levels[0][None],
-                                          sb.shape[1], use_pallas))
-        else:
-            means.append(sc.decode_reduce(cfgs[b], jnp.stack(words), jnp.stack(levels),
-                                          sb.shape[1], use_pallas))
-    return means, resids
+            pln = codecs[b].plan(cfgs[b], flat, stats[i][b], use_pallas)
+            w, r, a = codecs[b].encode_residual(
+                cfgs[b], flat, pln, jax.random.fold_in(keys[i], b), use_pallas,
+                aux=aux[b][i] if aux is not None and aux[b] is not None else None)
+            wires.append(w)
+            rows.append(sc._state_row(r, a))
+        states.append(jnp.stack(rows))
+        means.append(codecs[b].decode_reduce(cfgs[b], jnp.stack(wires), sb.shape[1],
+                                             use_pallas))
+    return means, states
 
 
 def bucketed_two_phase_mean(
     cfg: CompressorConfig, buckets: list, key, use_pallas: bool = False,
-    bits: Optional[Sequence[int]] = None, stats: Optional[list] = None,
+    bits: Optional[Sequence] = None, stats: Optional[list] = None,
+    aux: Optional[list] = None,
 ) -> tuple[list, list]:
     """``sc.bucketed_two_phase_mean`` over stacked (n, m_b) buckets.
-    Returns ``(mean_buckets, resid_stacked)``."""
+    Returns ``(mean_buckets, state_stacked)``."""
     n = buckets[0].shape[0]
+    cfgs = sc._bucket_cfgs(cfg, len(buckets), bits)
+    codecs = [sc.get_codec(c.method) for c in cfgs]
     if n == 1:
         flats = [sb[0].astype(jnp.float32) for sb in buckets]
-        return flats, [jnp.zeros_like(f)[None] for f in flats]
+        return flats, [
+            sc._state_row(jnp.zeros_like(f),
+                          aux[b][0] if aux is not None and aux[b] is not None else None)[None]
+            for b, f in enumerate(flats)]
     keys = [jax.random.split(_fold(k, j)) for j, k in enumerate(_in_keys(key, n))]
-    cfgs = sc._bucket_cfgs(cfg, len(buckets), bits)
     stats = _peer_stats(cfg, buckets, use_pallas, stats)
-    means, resids = [], []
+    means, states = [], []
     for b, sb in enumerate(buckets):
         size = sb.shape[1]
-        mc = (size + (-size) % (n * 32)) // n
-        words, levels, rs = [], [], []
+        chunk_rows, wires, rows = [], [], []
         for i in range(n):
             flat = sb[i].astype(jnp.float32)
-            padded = jnp.pad(flat, (0, (-size) % (n * 32)))
-            meta = sc._plan_bucket(cfgs[b], flat, stats[i][b], use_pallas)
-            w, r = sc.encode_pack_residual(cfgs[b], padded, meta,
-                                           jax.random.fold_in(keys[i][0], b), use_pallas)
-            words.append(w.reshape(n, -1))
-            levels.append(meta.levels)
-            rs.append(r[:size])
-        resids.append(jnp.stack(rs))
+            pln = codecs[b].plan(cfgs[b], flat, stats[i][b], use_pallas)
+            ki = jax.random.fold_in(keys[i][0], b)
+            if codecs[b].chunkable:
+                w, r = codecs[b].encode_chunks(cfgs[b], flat, pln, ki, n, use_pallas)
+                chunk_rows.append(w)
+                a = None
+            else:
+                w, r, a = codecs[b].encode_residual(
+                    cfgs[b], flat, pln, ki, use_pallas,
+                    aux=aux[b][i] if aux is not None and aux[b] is not None else None)
+                wires.append(w)
+            rows.append(sc._state_row(r, a))
+        states.append(jnp.stack(rows))
+        if not codecs[b].chunkable:
+            # tiled all-to-all == all-gather: every peer decodes the same
+            # stacked wires into the same full mean in phase 1
+            means.append(codecs[b].decode_reduce(cfgs[b], jnp.stack(wires), size,
+                                                 use_pallas))
+            continue
+        mc = codecs[b].chunk_elems(cfgs[b], size, n)
         chunks = [
-            sc.decode_reduce(cfgs[b], jnp.stack([words[i][j] for i in range(n)]),
-                             jnp.stack(levels), mc, use_pallas)
+            codecs[b].decode_reduce(
+                cfgs[b], jnp.stack([chunk_rows[i][j] for i in range(n)]), mc,
+                use_pallas)
             for j in range(n)
         ]
-        words2, levels2 = [], []
-        for j in range(n):
-            meta2 = sc._plan_bucket(cfgs[b], chunks[j], None, use_pallas)
-            words2.append(sc.encode_pack(cfgs[b], chunks[j], meta2,
-                                         jax.random.fold_in(keys[j][1], b), use_pallas))
-            levels2.append(meta2.levels)
-        vals = sc.decode_rows(cfgs[b], jnp.stack(words2), jnp.stack(levels2), mc,
-                              use_pallas)
+        wires2 = [
+            codecs[b].encode(cfgs[b], chunks[j],
+                             codecs[b].plan(cfgs[b], chunks[j], None, use_pallas),
+                             jax.random.fold_in(keys[j][1], b), use_pallas)
+            for j in range(n)
+        ]
+        vals = codecs[b].decode_rows(cfgs[b], jnp.stack(wires2), mc, use_pallas)
         means.append(vals.reshape(n * mc)[:size])
-    return means, resids
+    return means, states
 
 
 def bucketed_hierarchical_mean(
     cfg: CompressorConfig, buckets: list, n_pod: int, key, use_pallas: bool = False,
-    bits: Optional[Sequence[int]] = None, stats: Optional[list] = None,
+    bits: Optional[Sequence] = None, stats: Optional[list] = None,
+    aux: Optional[list] = None,
 ) -> tuple[list, list]:
     """``sc.bucketed_hierarchical_mean``: intra-pod two-phase (keys folded by
     the *full* dp index), faithful pod-mean exchange across pods.  The EF
-    residual is the intra-pod stage's (mirroring the mesh path)."""
+    state (residual + codec aux) is the intra-pod stage's; the cross-pod
+    stage runs aux-cold (mirroring the mesh path)."""
     n = buckets[0].shape[0]
     nd = n // n_pod
     k1, k2 = jax.random.split(key)
@@ -233,9 +250,12 @@ def bucketed_hierarchical_mean(
     pod_means, pod_resids = [], []
     for p in range(n_pod):
         in_keys = [_fold(k1, p * nd + d) for d in range(nd)]
+        aux_p = None
+        if aux is not None:
+            aux_p = [a[p * nd:(p + 1) * nd] if a is not None else None for a in aux]
         m, r = bucketed_two_phase_mean(
             cfg, [sb[p * nd:(p + 1) * nd] for sb in buckets], in_keys, use_pallas,
-            bits, stats[p * nd:(p + 1) * nd])
+            bits, stats[p * nd:(p + 1) * nd], aux_p)
         pod_means.append(m)
         pod_resids.append(r)
     stacked = [jnp.stack([pod_means[p][b] for p in range(n_pod)])
@@ -277,6 +297,15 @@ def reference_sync_state(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Arr
     per_peer = [compressors.bucket_concat([x[j] for x in stacked_leaves], bp)
                 for j in range(n)]
     compressed = not (ts.sync == "dsgd" or cfg.method == "dsgd")
+    # Split each EF row into the residual prefix and the codec-opaque aux
+    # tail (``state_extra``; empty for the quantizers — rows pass untouched).
+    cfgs = sc._bucket_cfgs(cfg, bp.n_buckets, ts.bits_plan)
+    extras = [sc.get_codec(c.method).state_extra(c, m)
+              for c, m in zip(cfgs, bp.sizes)]
+    aux = None
+    if ef is not None and any(extras):
+        aux = [ef[b][:, bp.sizes[b]:] if x else None for b, x in enumerate(extras)]
+        ef = [ef[b][:, :bp.sizes[b]] if x else ef[b] for b, x in enumerate(extras)]
     stats = None
     if compressed or tstate is not None:
         stats = []
@@ -303,13 +332,15 @@ def reference_sync_state(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Arr
         means, resids = [jnp.mean(sb, axis=0) for sb in buckets], None
     elif ts.sync == "faithful":
         means, resids = bucketed_faithful_ring_mean(cfg, buckets, key,
-                                                    cfg.use_pallas, ts.bits_plan, stats)
+                                                    cfg.use_pallas, ts.bits_plan, stats,
+                                                    aux)
     elif ts.sync == "two_phase" or len(dp_sizes) == 1:
         means, resids = bucketed_two_phase_mean(cfg, buckets, key,
-                                                cfg.use_pallas, ts.bits_plan, stats)
+                                                cfg.use_pallas, ts.bits_plan, stats, aux)
     else:
         means, resids = bucketed_hierarchical_mean(cfg, buckets, n_pod, key,
-                                                   cfg.use_pallas, ts.bits_plan, stats)
+                                                   cfg.use_pallas, ts.bits_plan, stats,
+                                                   aux)
     if not ts.error_feedback:
         resids = None
     return compressors.bucket_split(means, bp, shapes), resids, new_t

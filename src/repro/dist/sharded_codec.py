@@ -34,26 +34,30 @@ fused encode.
 Per-chunk codebooks ride along with the codes as (levels, alpha) pairs —
 ``wire_bytes`` in ``core.compressors`` accounts for them.
 
-Encode side: the bucketed paths plan from precomputed one-pass statistics
-(``compressors.plan_from_stats`` over the histogram/Hill-sum tuples the
-train step's fused EF-correct→stats pass hands in via ``stats=``; computed
-inline for secondary stages like the two-phase phase-2 re-quantization) —
-the sort-based ``plan`` stays only on the per-leaf legacy codec.  All
-encodes route through :func:`encode_pack` / :func:`encode_pack_residual`,
-a kernel/jnp dispatch mirroring the decode side: ``use_pallas`` selects the
-``kernels.encode_fused`` Pallas kernels (quantize → bit-pack → residual in
-one VMEM pass; codes and the dequantized ``own`` tensor never reach HBM),
-otherwise the key-compatible sequential oracles in ``kernels.ref`` run the
-same op sequence (bit-identical wire words; the uniform residual's dequant
-multiply-add keeps ulp-level FMA slack) and stay shard_map-safe on the
-pinned toolchain.
+The bucketed collective bodies are codec-agnostic: every local half of the
+sync — planning, the fused encode-pack(-residual), the fused
+decode(-reduce), and the static wire/state geometry — goes through the
+:mod:`repro.core.codecs` registry (``get_codec(cfg.method)``), and the
+bodies branch only on the codec *interface* (``chunkable``, aux state),
+never on method strings.  The quantizer family's hooks preserve the
+pre-registry wire layout byte-for-byte (codes then bitcast codebook per
+bucket), so existing methods stay bit-identical; non-chunkable codecs
+(``powersgd`` low-rank factors) ride the same fused tensors by tiling
+their full wire into every two-phase row (an embedded all-gather) with a
+zero-width phase-2 contribution.  Codec-opaque per-bucket state (the
+warm-started PowerSGD Q) flows in via ``aux=`` and comes back concatenated
+onto the EF residual row (``concat(resid, aux_new)``) — quantizers carry
+no aux and return the residual rows unchanged.
 
-Decode side: every decode site routes through :func:`decode_reduce` /
-:func:`decode_rows` — fused unpack → dequant → (mean) passes over the
-gathered wire rows (``kernels.decode`` Pallas kernels under ``use_pallas``,
-the bit-identical ``kernels.ref`` sequential-peer jnp oracle otherwise) that
-never materialize the (n_peers, m) unpacked code tensor the old
-``vmap(unpack_codes)`` + ``jnp.mean`` path staged in HBM.
+The kernel/jnp dispatch helpers (:func:`encode_pack`,
+:func:`encode_pack_residual`, :func:`decode_reduce`, :func:`decode_rows`,
+``_plan_bucket``, …) live in ``core.codecs`` and are re-exported here for
+the reference replay and the per-leaf codec: ``use_pallas`` selects the
+``kernels.encode_fused``/``kernels.decode`` Pallas kernels (one VMEM pass;
+codes and the dequantized ``own`` tensor never reach HBM), otherwise the
+key-compatible sequential oracles in ``kernels.ref`` run the same op
+sequence (bit-identical wire words; uniform dequant keeps ulp-level FMA
+slack) and stay shard_map-safe on the pinned toolchain.
 
 Peer RNG independence: every encode folds ``compat.flat_axis_index`` of the
 collective's own axes into the key.  The paper's Lemma 2 (mean error
@@ -67,17 +71,33 @@ a stream.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import CompressorConfig, plan, plan_from_stats
+# Local codec halves live in core.codecs; re-exported names keep the
+# long-standing import surface (reference replay, benches, tests) stable.
+from repro.core.codecs import (  # noqa: F401  (re-exports)
+    _UNIFORM_DECODE,
+    _bucket_stats,
+    _decode_dispatch,
+    _encode_dispatch,
+    _levels_from_wire,
+    _levels_to_wire,
+    _plan_bucket,
+    bucket_cfgs as _registry_bucket_cfgs,
+    bucket_state_sizes,
+    decode_reduce,
+    decode_rows,
+    encode_pack,
+    encode_pack_residual,
+    get_codec,
+)
+from repro.core.compressors import CompressorConfig, plan
 from repro.core.quantizers import (
     QuantMeta,
     pack_codes,
-    packed_size,
     unpack_codes,
 )
 
@@ -126,109 +146,6 @@ def _peer_key(key: jax.Array, axis_name) -> jax.Array:
     peer's linear index over the collective's axes is folded in.
     """
     return jax.random.fold_in(key, compat.flat_axis_index(axis_name))
-
-
-# Methods whose codebook is the uniform linspace: the fused kernels encode/
-# dequantize them straight from α (code · 2α/s − α) instead of a table walk.
-_UNIFORM_DECODE = ("qsgd", "tqsgd", "dsgd")
-
-
-def _encode_dispatch(cfg: CompressorConfig, op: str, flat: jax.Array, meta: QuantMeta,
-                     key: jax.Array, use_pallas: bool):
-    """Kernel/jnp dispatch for the fused encode ops (mirror of
-    ``_decode_dispatch``): ``use_pallas`` selects ``kernels.encode_fused``
-    via the ``kernels.ops`` wrappers, else the key-compatible sequential
-    oracles in ``kernels.ref`` (shard_map-safe, bit-identical words)."""
-    if use_pallas:
-        from repro.kernels import ops as mod
-    else:
-        from repro.kernels import ref as mod
-    if cfg.method in _UNIFORM_DECODE:
-        return getattr(mod, f"uniform_{op}")(flat, meta.alpha, cfg.bits, key)
-    return getattr(mod, f"codebook_{op}")(flat, meta.levels, cfg.bits, key)
-
-
-def encode_pack(cfg: CompressorConfig, flat: jax.Array, meta: QuantMeta, key: jax.Array,
-                use_pallas: bool) -> jax.Array:
-    """Flat fp32 -> packed uint32 wire words in one fused pass (no codes,
-    no residual reach HBM)."""
-    return _encode_dispatch(cfg, "encode_pack", flat, meta, key, use_pallas)
-
-
-def encode_pack_residual(cfg: CompressorConfig, flat: jax.Array, meta: QuantMeta,
-                         key: jax.Array, use_pallas: bool) -> tuple[jax.Array, jax.Array]:
-    """Flat fp32 -> (uint32 wire words, ``flat − dequant(code)`` residual).
-
-    The fused EF encode: the residual is written in the same pass as the
-    pack, so the unpacked codes and the dequantized ``own`` tensor never
-    leave VMEM on the kernel path.  Exact for codebook methods
-    (``levels[code]`` is the interval endpoint the rounding chose); the
-    uniform dequant keeps ulp-level FMA slack.
-    """
-    return _encode_dispatch(cfg, "encode_pack_residual", flat, meta, key, use_pallas)
-
-
-def decode_reduce(cfg: CompressorConfig, words: jax.Array, levels: jax.Array, n: int,
-                  use_pallas: bool) -> jax.Array:
-    """Fused unpack → dequant → peer mean of gathered codec rows.
-
-    ``words``: (peers, packed_words) uint32 wire rows; ``levels``: (peers,
-    s+1) codebooks; returns the (n,) fp32 mean over peers, never
-    materializing the (peers, n) unpacked tensor.  ``use_pallas`` selects the
-    ``kernels.decode`` Pallas kernels (interpret-mode off-TPU); the fallback
-    is the sequential-peer jnp oracle from ``kernels.ref``, which runs the
-    same op sequence (bit-exact for codebook methods, ulp-level FMA slack
-    for the uniform dequant — see ``tests/test_decode_kernels.py``) and is
-    safe under shard_map tracing on the pinned toolchain.  Every peer of a
-    collective runs one compiled program over identical gathered bytes, so
-    peers agree bit-for-bit on the result regardless of path (the
-    peer-agreement contract).
-    """
-    return _decode_dispatch(cfg, "decode_reduce", words, levels, n, use_pallas)
-
-
-def decode_rows(cfg: CompressorConfig, words: jax.Array, levels: jax.Array, n: int,
-                use_pallas: bool) -> jax.Array:
-    """Fused unpack → dequant of gathered rows, one (n,) row per peer.
-
-    The all-gather phase-2 shape: peer j's decode is output chunk j, so the
-    (peers, n) result *is* the payload (no reduction) — the fusion removes
-    the (peers, n) int32 code intermediate.  Same dispatch contract as
-    :func:`decode_reduce`.
-    """
-    return _decode_dispatch(cfg, "decode_rows", words, levels, n, use_pallas)
-
-
-def _decode_dispatch(cfg: CompressorConfig, op: str, words: jax.Array, levels: jax.Array,
-                     n: int, use_pallas: bool) -> jax.Array:
-    """Select kernel vs fallback module and uniform vs codebook variant.
-
-    Uniform-codebook methods dequantize from α alone (``levels[:, -1]``);
-    everything else walks the shipped codebook.
-    """
-    if use_pallas:
-        from repro.kernels import ops as mod
-    else:
-        from repro.kernels import ref as mod
-    if cfg.method in _UNIFORM_DECODE:
-        return getattr(mod, f"uniform_{op}")(words, levels[:, -1], n, cfg.bits)
-    return getattr(mod, f"codebook_{op}")(words, levels, n, cfg.bits)
-
-
-def _bucket_stats(flat: jax.Array, use_pallas: bool):
-    """One-pass (counts, log_sums, g_max, …) statistics dispatch for the
-    secondary plan sites (phase-2 chunks, pod means) that have no
-    precomputed stats from the train step's fused EF-correct pass."""
-    from repro.adaptive.telemetry import bucket_statistics
-
-    return bucket_statistics(flat, use_pallas=use_pallas)
-
-
-def _plan_bucket(cfg: CompressorConfig, flat: jax.Array, stat, use_pallas: bool) -> QuantMeta:
-    """Histogram-driven plan from precomputed or inline one-pass stats."""
-    if stat is None:
-        stat = _bucket_stats(flat, use_pallas)
-    return plan_from_stats(cfg, stat[0], stat[1], stat[2])
 
 
 def _plan_encode_rows(cfg: CompressorConfig, rows: jax.Array, key: jax.Array,
@@ -351,29 +268,25 @@ def faithful_ring_mean(
 # ---------------------------------------------------------------------------
 
 
-def _levels_to_wire(levels: jax.Array) -> jax.Array:
-    return jax.lax.bitcast_convert_type(levels.astype(jnp.float32), jnp.uint32)
-
-
-def _levels_from_wire(words: jax.Array) -> jax.Array:
-    return jax.lax.bitcast_convert_type(words, jnp.float32)
-
-
 def _bucket_cfgs(
-    cfg: CompressorConfig, n_buckets: int, bits: Optional[Sequence[int]]
+    cfg: CompressorConfig, n_buckets: int, bits: Optional[Sequence]
 ) -> list[CompressorConfig]:
-    """Per-bucket compressor configs for a (possibly heterogeneous) bit plan.
+    """Per-bucket compressor configs for a (possibly heterogeneous) plan.
 
-    ``bits=None`` keeps ``cfg`` everywhere; otherwise one config per bucket
-    with that bucket's static wire width.  The bit plan is trace-time
+    Entries may be ints (bit widths), ``("method", value)`` pairs, or full
+    configs — see ``core.codecs.bucket_cfgs``.  The plan is trace-time
     Python, so bucket offsets in the fused wire tensor stay static.
     """
-    if bits is None:
-        return [cfg] * n_buckets
-    if len(bits) != n_buckets:
-        raise ValueError(f"bit plan has {len(bits)} entries for {n_buckets} buckets")
-    return [cfg if int(b) == cfg.bits else dataclasses.replace(cfg, bits=int(b))
-            for b in bits]
+    return _registry_bucket_cfgs(cfg, n_buckets, bits)
+
+
+def _state_row(resid: jax.Array, aux_new) -> jax.Array:
+    """One bucket's EF/state row: the residual plus any codec aux tail."""
+    return resid if aux_new is None else jnp.concatenate([resid, aux_new])
+
+
+def _bucket_aux(aux: Optional[list], b: int):
+    return aux[b] if aux is not None else None
 
 
 def bucketed_faithful_ring_mean(
@@ -382,57 +295,55 @@ def bucketed_faithful_ring_mean(
     axis_name,
     key: jax.Array,
     use_pallas: bool = False,
-    bits: Optional[Sequence[int]] = None,
+    bits: Optional[Sequence] = None,
     stats: Optional[list] = None,
+    aux: Optional[list] = None,
 ) -> tuple[list, list]:
     """Faithful ring mean over a bucket list with ONE all-gather total.
 
-    Each bucket is quantized once with its own codebook — planned with
-    ``compressors.plan_from_stats`` from the one-pass ``stats`` tuples (the
-    fused EF-correct→stats pass; computed inline when None) — and all
-    buckets' packed words and bitcast codebooks are concatenated into a
-    single uint32 wire tensor.  ``bits`` optionally assigns each bucket its
-    own static wire width (the adaptive bit plan) — bucket offsets stay
-    static because the plan is trace-time Python.  Returns ``(mean_buckets,
-    resid_buckets)`` with ``resid = corrected − own dequant``, the next EF
-    residual, produced inside the fused encode.
+    Each bucket is encoded once by its registered codec — planned from the
+    one-pass ``stats`` tuples (the fused EF-correct→stats pass; computed
+    inline when None) — and all buckets' wire vectors are concatenated into
+    a single uint32 tensor sliced back by ``codec.wire_words`` (static)
+    offsets.  ``bits`` optionally assigns per-bucket plan entries (bit
+    widths or ``("method", value)`` pairs).  ``aux`` threads codec-opaque
+    warm state in; returns ``(mean_buckets, state_rows)`` with row ``b`` =
+    ``concat(resid, aux_new)`` (just the EF residual for aux-free codecs).
     """
     n = compat.axis_size(axis_name)
     if n > 1:
         key = _peer_key(key, axis_name)
     cfgs = _bucket_cfgs(cfg, len(buckets), bits)
-    parts, resids, sizes, metas = [], [], [], []
+    codecs = [get_codec(c.method) for c in cfgs]
+    parts, states, sizes = [], [], []
     for b, g in enumerate(buckets):
         flat = g.reshape(-1).astype(jnp.float32)
-        meta = _plan_bucket(cfgs[b], flat, stats[b] if stats is not None else None,
-                            use_pallas)
-        words, resid = encode_pack_residual(cfgs[b], flat, meta,
-                                            jax.random.fold_in(key, b), use_pallas)
-        resids.append(resid)
-        parts.append(words)
-        parts.append(_levels_to_wire(meta.levels))
+        pln = codecs[b].plan(cfgs[b], flat, stats[b] if stats is not None else None,
+                             use_pallas)
+        wire, resid, aux_new = codecs[b].encode_residual(
+            cfgs[b], flat, pln, jax.random.fold_in(key, b), use_pallas,
+            aux=_bucket_aux(aux, b))
+        states.append(_state_row(resid, aux_new))
+        parts.append(wire)
         sizes.append(flat.size)
-        metas.append(meta)
     if n == 1:
         # Degenerate single-peer ring: the "mean" is this peer's own
         # dequantized transmission, recovered through the same fused decode
         # every multi-peer site uses (exact codebook lookup).
         means = [
-            decode_reduce(cfgb, parts[2 * b][None], metas[b].levels[None], m, use_pallas)
-            for b, (m, cfgb) in enumerate(zip(sizes, cfgs))
+            codecs[b].decode_reduce(cfgs[b], parts[b][None], m, use_pallas)
+            for b, m in enumerate(sizes)
         ]
-        return means, resids
+        return means, states
     wire = jnp.concatenate(parts)
     rows = compat.all_gather_stacked(wire, axis_name)                    # (n, T)
     means, off = [], 0
-    for m, cfgb in zip(sizes, cfgs):
-        w = packed_size(m, cfgb.bits)
-        nl = cfgb.s + 1
-        words = rows[:, off:off + w]
-        levels = _levels_from_wire(rows[:, off + w:off + w + nl])
-        off += w + nl
-        means.append(decode_reduce(cfgb, words, levels, m, use_pallas))
-    return means, resids
+    for b, m in enumerate(sizes):
+        w = codecs[b].wire_words(cfgs[b], m)
+        means.append(codecs[b].decode_reduce(cfgs[b], rows[:, off:off + w], m,
+                                             use_pallas))
+        off += w
+    return means, states
 
 
 def bucketed_two_phase_mean(
@@ -441,70 +352,95 @@ def bucketed_two_phase_mean(
     axis_name,
     key: jax.Array,
     use_pallas: bool = False,
-    bits: Optional[Sequence[int]] = None,
+    bits: Optional[Sequence] = None,
     stats: Optional[list] = None,
+    aux: Optional[list] = None,
 ) -> tuple[list, list]:
     """Two-phase compressed mean over a bucket list: ONE all-to-all (phase 1)
     plus ONE all-gather (phase 2) for every bucket together.
 
-    Each bucket gets a single per-bucket codebook shared by its n peer
-    chunks (padded to ``n*32`` elements so packed chunk words slice
-    cleanly); the codebook rides along once per all-to-all row.  Phase-1
-    plans come from the one-pass ``stats``; the phase-2 mean-chunk
-    re-quantization computes its own inline.  ``bits`` optionally assigns
-    per-bucket wire widths (both phases use the bucket's width).  Returns
-    ``(mean_buckets, resid_buckets)``.
+    Chunkable codecs ship one plan per bucket shared by its n peer-chunk
+    rows (``codec.encode_chunks``); non-chunkable codecs tile their full
+    wire into every row and finish in phase 1 (see ``core.codecs``).
+    Phase-1 plans come from the one-pass ``stats``; the phase-2 mean-chunk
+    re-encode computes its own inline.  ``bits`` optionally assigns
+    per-bucket plan entries (both phases use the bucket's width).  ``aux``
+    threads codec warm state; returns ``(mean_buckets, state_rows)`` as in
+    :func:`bucketed_faithful_ring_mean`.
     """
     n = compat.axis_size(axis_name)
     flats = [g.reshape(-1).astype(jnp.float32) for g in buckets]
+    cfgs = _bucket_cfgs(cfg, len(buckets), bits)
+    codecs = [get_codec(c.method) for c in cfgs]
     if n == 1:
         # Size-1 axis: nothing is transmitted (identity mean), so the EF
-        # residual of this stage is exactly zero.
-        return flats, [jnp.zeros_like(f) for f in flats]
+        # residual of this stage is exactly zero; codec aux passes through.
+        return flats, [_state_row(jnp.zeros_like(f), _bucket_aux(aux, b))
+                       for b, f in enumerate(flats)]
     k1, k2 = jax.random.split(_peer_key(key, axis_name))
-    cfgs = _bucket_cfgs(cfg, len(buckets), bits)
-    parts, resids, chunk_meta = [], [], []
+    parts, states, widths = [], [], []
     for b, flat in enumerate(flats):
-        padded = jnp.pad(flat, (0, (-flat.size) % (n * 32)))
-        meta = _plan_bucket(cfgs[b], flat, stats[b] if stats is not None else None,
-                            use_pallas)
-        words, resid = encode_pack_residual(cfgs[b], padded, meta,
-                                            jax.random.fold_in(k1, b), use_pallas)
-        resids.append(resid[: flat.size])
-        mc = padded.size // n                                            # chunk elements
-        wc = packed_size(mc, cfgs[b].bits)                               # chunk words
-        parts.append(words.reshape(n, wc))
-        parts.append(jnp.tile(_levels_to_wire(meta.levels)[None], (n, 1)))
-        chunk_meta.append((mc, wc))
+        pln = codecs[b].plan(cfgs[b], flat, stats[b] if stats is not None else None,
+                             use_pallas)
+        kb = jax.random.fold_in(k1, b)
+        if codecs[b].chunkable:
+            rows_b, resid = codecs[b].encode_chunks(cfgs[b], flat, pln, kb, n,
+                                                    use_pallas)
+            aux_new = None
+        else:
+            # Non-chunkable wire (low-rank factors): tile the full wire into
+            # every all-to-all row — an embedded all-gather riding the same
+            # fused tensor, decoded entirely in phase 1.
+            wire_b, resid, aux_new = codecs[b].encode_residual(
+                cfgs[b], flat, pln, kb, use_pallas, aux=_bucket_aux(aux, b))
+            rows_b = jnp.tile(wire_b[None], (n, 1))
+        states.append(_state_row(resid, aux_new))
+        parts.append(rows_b)
+        widths.append(rows_b.shape[1])
     wire = jnp.concatenate(parts, axis=1)                                # (n, T1)
     recv = compat.all_to_all_rows(wire, axis_name)                       # (n, T1)
 
-    # Phase 1 decode: this peer's chunk of every bucket's mean.
-    mean_chunks, off = [], 0
-    for (mc, wc), cfgb in zip(chunk_meta, cfgs):
-        nl = cfgb.s + 1
-        words = recv[:, off:off + wc]
-        levels = _levels_from_wire(recv[:, off + wc:off + wc + nl])
-        off += wc + nl
-        mean_chunks.append(decode_reduce(cfgb, words, levels, mc, use_pallas))
+    # Phase 1 decode: this peer's chunk of each chunkable bucket's mean;
+    # non-chunkable buckets decode their full mean here (every peer holds
+    # every peer's tiled wire after the all-to-all).
+    mean_chunks, full_means, off = [], {}, 0
+    for b, flat in enumerate(flats):
+        rows_b = recv[:, off:off + widths[b]]
+        off += widths[b]
+        if codecs[b].chunkable:
+            mc = codecs[b].chunk_elems(cfgs[b], flat.size, n)
+            mean_chunks.append(codecs[b].decode_reduce(cfgs[b], rows_b, mc, use_pallas))
+        else:
+            full_means[b] = codecs[b].decode_reduce(cfgs[b], rows_b, flat.size,
+                                                    use_pallas)
+            mean_chunks.append(None)
 
-    # Phase 2: re-quantize the mean chunks, one fused all-gather back.
-    parts2 = []
+    # Phase 2: re-encode the mean chunks, one fused all-gather back (skipped
+    # entirely when no bucket chunks — then phase 1 already produced every
+    # full mean).
+    parts2, widths2 = [], []
     for b, ch in enumerate(mean_chunks):
-        meta2 = _plan_bucket(cfgs[b], ch, None, use_pallas)
-        words2 = encode_pack(cfgs[b], ch, meta2, jax.random.fold_in(k2, b), use_pallas)
-        parts2.append(words2)
-        parts2.append(_levels_to_wire(meta2.levels))
-    rows2 = compat.all_gather_stacked(jnp.concatenate(parts2), axis_name)  # (n, T2)
+        if ch is None:
+            widths2.append(0)
+            continue
+        pln2 = codecs[b].plan(cfgs[b], ch, None, use_pallas)
+        parts2.append(codecs[b].encode(cfgs[b], ch, pln2, jax.random.fold_in(k2, b),
+                                       use_pallas))
+        widths2.append(parts2[-1].shape[0])
+    rows2 = None
+    if parts2:
+        rows2 = compat.all_gather_stacked(jnp.concatenate(parts2), axis_name)  # (n, T2)
     means, off = [], 0
-    for (mc, wc), cfgb, flat in zip(chunk_meta, cfgs, flats):
-        nl = cfgb.s + 1
-        words = rows2[:, off:off + wc]
-        levels = _levels_from_wire(rows2[:, off + wc:off + wc + nl])
-        off += wc + nl
-        vals = decode_rows(cfgb, words, levels, mc, use_pallas)          # row j = chunk j
+    for b, flat in enumerate(flats):
+        if mean_chunks[b] is None:
+            means.append(full_means[b])
+            continue
+        mc = mean_chunks[b].size
+        vals = codecs[b].decode_rows(cfgs[b], rows2[:, off:off + widths2[b]], mc,
+                                     use_pallas)                         # row j = chunk j
+        off += widths2[b]
         means.append(vals.reshape(n * mc)[: flat.size])
-    return means, resids
+    return means, states
 
 
 def bucketed_hierarchical_mean(
@@ -513,8 +449,9 @@ def bucketed_hierarchical_mean(
     dp: tuple,
     key: jax.Array,
     use_pallas: bool = False,
-    bits: Optional[Sequence[int]] = None,
+    bits: Optional[Sequence] = None,
     stats: Optional[list] = None,
+    aux: Optional[list] = None,
 ) -> tuple[list, list]:
     """Two-phase inside the innermost data axis, faithful exchange of the
     pod means across the leading pod axes — 3 collectives total.
@@ -524,13 +461,15 @@ def bucketed_hierarchical_mean(
     share a stream, and leaving them correlated caps the phase-1 error at
     1/sqrt(data) instead of 1/sqrt(n).  (The cross-pod faithful stage keeps
     per-pod streams — members of one pod must emit identical bytes.)
-    The EF residual comes from the intra-pod stage (what this peer actually
-    transmitted); the cross-pod stage plans from inline pod-mean stats.
+    The EF state (residual + codec aux) comes from the intra-pod stage (what
+    this peer actually transmitted); the cross-pod stage plans from inline
+    pod-mean stats and runs aux-cold (its encode is of a pod *mean*, not
+    this peer's gradient, so warm factors would be the wrong subspace).
     """
     pod_axes, data_axis = dp[:-1], dp[-1:]
     k1, k2 = jax.random.split(key)
     k1 = _peer_key(k1, dp)
-    means, resids = bucketed_two_phase_mean(cfg, buckets, data_axis, k1, use_pallas,
-                                            bits, stats)
+    means, states = bucketed_two_phase_mean(cfg, buckets, data_axis, k1, use_pallas,
+                                            bits, stats, aux)
     means, _ = bucketed_faithful_ring_mean(cfg, means, pod_axes, k2, use_pallas, bits)
-    return means, resids
+    return means, states

@@ -117,9 +117,21 @@ class TrainStepConfig:
         if self.bits_plan is not None:
             if self.bucket_mb <= 0:
                 raise ValueError("bits_plan targets the bucketed codec (bucket_mb > 0)")
-            object.__setattr__(self, "bits_plan", tuple(int(b) for b in self.bits_plan))
-            if any(not (1 <= b <= 8) for b in self.bits_plan):
-                raise ValueError("bits_plan entries must be in [1, 8]")
+            norm = []
+            for b in self.bits_plan:
+                if isinstance(b, (tuple, list)):
+                    # method-aware plan entry: ("method", value) — value is
+                    # the rank for rank-based codecs, the bit width otherwise
+                    from repro.core.codecs import get_codec
+
+                    method, value = b
+                    get_codec(str(method))  # raises on unknown methods
+                    norm.append((str(method), int(value)))
+                else:
+                    if not (1 <= int(b) <= 8):
+                        raise ValueError("bits_plan entries must be in [1, 8]")
+                    norm.append(int(b))
+            object.__setattr__(self, "bits_plan", tuple(norm))
 
     @property
     def bucket_elements(self) -> int:
@@ -247,6 +259,18 @@ def _sync_buckets(ts: TrainStepConfig, vals: list, key: jax.Array, dp: tuple,
     bp = compressors.plan_buckets([v.size for v in vals], ts.bucket_elements)
     buckets = compressors.bucket_concat(vals, bp)
     compressed = not (ts.sync == "dsgd" or cfg.method == "dsgd")
+    # Split each bucket's EF row into the residual prefix and the codec-
+    # opaque aux tail (``state_extra``; quantizer rows pass through whole,
+    # keeping those graphs unchanged).
+    cfgs = sc._bucket_cfgs(cfg, bp.n_buckets, ts.bits_plan)
+    extras = [sc.get_codec(c.method).state_extra(c, g.size)
+              for c, g in zip(cfgs, buckets)]
+    aux = None
+    if ef is not None and any(extras):
+        aux = [ef[b][g.size:] if x else None
+               for b, (g, x) in enumerate(zip(buckets, extras))]
+        ef = [ef[b][:g.size] if x else ef[b]
+              for b, (g, x) in enumerate(zip(buckets, extras))]
     stats = None
     if compressed or tstate is not None:
         corrected, stats = [], []
@@ -267,13 +291,13 @@ def _sync_buckets(ts: TrainStepConfig, vals: list, key: jax.Array, dp: tuple,
         resids = None
     elif ts.sync == "faithful":
         means, resids = sc.bucketed_faithful_ring_mean(cfg, buckets, dp, key,
-                                                       cfg.use_pallas, bits, stats)
+                                                       cfg.use_pallas, bits, stats, aux)
     elif ts.sync == "two_phase" or len(dp) == 1:
         means, resids = sc.bucketed_two_phase_mean(cfg, buckets, dp, key,
-                                                   cfg.use_pallas, bits, stats)
+                                                   cfg.use_pallas, bits, stats, aux)
     else:
         means, resids = sc.bucketed_hierarchical_mean(cfg, buckets, dp, key,
-                                                      cfg.use_pallas, bits, stats)
+                                                      cfg.use_pallas, bits, stats, aux)
     shapes = [v.shape for v in vals]
     mean_leaves = compressors.bucket_split(means, bp, shapes)
     if not ts.error_feedback:
@@ -609,6 +633,10 @@ def init_ef_state(params_like: Any, mesh, pspecs: Any, ts: TrainStepConfig) -> A
     ``TrainStepConfig`` (mirroring :func:`init_telemetry_state`).
     """
     sizes = local_bucket_sizes(params_like, mesh, pspecs, ts)
+    # Rank-based codecs carry extra per-shard state (e.g. the warm-started
+    # powersgd Q factor) appended after the residual; quantizer buckets keep
+    # their exact pre-registry row width.
+    state_sizes = sc.bucket_state_sizes(ts.compressor, sizes, ts.bits_plan)
     dp = sharding.manual_axes(mesh)
     n = 1
     for a in dp:
@@ -617,7 +645,7 @@ def init_ef_state(params_like: Any, mesh, pspecs: Any, ts: TrainStepConfig) -> A
     for a in mesh.axis_names:
         if a not in dp:
             n_model *= mesh.shape[a]
-    return tuple(jnp.zeros((max(n, 1), n_model * s), jnp.float32) for s in sizes)
+    return tuple(jnp.zeros((max(n, 1), n_model * s), jnp.float32) for s in state_sizes)
 
 
 def local_bucket_sizes(params_like: Any, mesh, pspecs: Any, ts: TrainStepConfig) -> tuple[int, ...]:

@@ -321,3 +321,21 @@ def codebook_encode_pack_residual(
     words, resid = _e.codebook_encode_pack_resid_2d(
         g2, rand, levels.astype(jnp.float32), n, bits=bits, interpret=interpret)
     return _packed_words(words, n, bits), resid.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def orthogonalize(p: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Gram–Schmidt orthonormalization of a tall-skinny (rows, r) factor.
+
+    The PowerSGD power-iteration step: pads to the (8k, 128) fp32 tile,
+    runs the single-block ``kernels.orthogonalize`` kernel, slices the
+    (rows, r) corner back out.  r must be ≤ 128 lanes.
+    """
+    from . import orthogonalize as _o
+
+    interpret = _use_interpret() if interpret is None else interpret
+    rows, r = p.shape
+    rows_p = -(-rows // _o.SUBLANES) * _o.SUBLANES
+    pp = jnp.pad(p.astype(jnp.float32), ((0, rows_p - rows), (0, _o.LANES - r)))
+    out = _o.orthogonalize_2d(pp, r=r, interpret=interpret)
+    return out[:rows, :r]

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: Gram–Schmidt orthogonalization of the PowerSGD P factor.
+
+PowerSGD's power iteration needs ``P̂ = orth(M @ Q)`` before the back-
+projection ``Qn = Mᵀ @ P̂`` — a (rows, r) tall-skinny matrix with r ≤ 64
+columns.  Modified Gram–Schmidt over so few columns is a chain of
+column-wise dot products and AXPYs: each column is one (rows,) vector
+reduction plus a rank-1 update, all VPU work over a tile that fits VMEM
+whole (rows ≤ 64K at r ≤ 128 ⇒ ≤ 32 MB is far above real buckets; the
+4-MB-bucket default gives rows ≈ 1024 ⇒ 0.5 MB).  The kernel runs the whole
+factor in one grid step — no cross-block reduction tree, so the float op
+order is a single static unroll.
+
+Layout: columns are padded to the 128-lane register width and rows to the
+8-sublane fp32 tile, zeros beyond (rows, r).  Zero padding is invariant
+under the loop (projections and normalizations of zero columns stay zero —
+`jax.lax.rsqrt(eps)` times a zero vector), so the wrapper just slices the
+(rows, r) corner back out.
+
+``_gs_padded`` is the single source of the loop for both the kernel body
+and the ``kernels.ref`` oracle: interpret mode executes the identical jnp
+op sequence, so kernel and oracle agree to fusion-level rounding (XLA may
+fuse the reductions differently inside the interpreted ``pallas_call``;
+``tests/test_lowrank.py`` pins the agreement at float32 ULP scale).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+SUBLANES = 8
+_EPS = 1e-30
+
+
+def _gs_padded(p: jax.Array, r: int) -> jax.Array:
+    """Modified Gram–Schmidt over the first ``r`` columns of a zero-padded
+    (rows_p, LANES) tile; columns ≥ r pass through as zeros.
+
+    MGS (normalize column j, then project it out of all later columns)
+    with one reorthogonalization sweep per pivot ("twice is enough",
+    Parlett/Kahan), rather than classical GS: on rank-deficient inputs —
+    routine for PowerSGD, where ``M @ Q`` has at most rank(M) independent
+    columns — single-pass GS leaves the near-dependent late columns with
+    O(1) overlap against the earlier basis, and their back-projection
+    ``Mᵀ @ P̂`` corrupts the reconstruction; the second projection pass
+    drives the overlap back to working precision so surplus columns
+    contribute ~0.  Zero columns degrade to zero vectors (0 · rsqrt(eps)).
+    """
+    cols = []
+    rest = p[:, :r]
+    for _ in range(r):
+        v = rest[:, 0:1]
+        for u in cols:  # reorthogonalize the pivot against the basis
+            v = v - jnp.sum(u * v) * u
+        v = v * jax.lax.rsqrt(jnp.maximum(jnp.sum(v * v), _EPS))
+        cols.append(v)
+        rest = rest[:, 1:]
+        if rest.shape[1]:
+            rest = rest - jnp.sum(v * rest, axis=0, keepdims=True) * v
+    pad = p.shape[1] - r
+    if pad:
+        cols.append(jnp.zeros((p.shape[0], pad), jnp.float32))
+    return jnp.concatenate(cols, axis=1)
+
+
+def _gs_kernel(p_ref, out_ref, *, r: int):
+    out_ref[...] = _gs_padded(p_ref[...], r)
+
+
+def orthogonalize_2d(p: jax.Array, *, r: int, interpret: bool) -> jax.Array:
+    """p: (rows_p, LANES) fp32, rows_p a multiple of 8, columns ≥ r zero.
+    Returns the same tile with columns [0, r) orthonormalized."""
+    return pl.pallas_call(
+        lambda p_ref, out_ref: _gs_kernel(p_ref, out_ref, r=r),
+        out_shape=jax.ShapeDtypeStruct(p.shape, jnp.float32),
+        interpret=interpret,
+    )(p)

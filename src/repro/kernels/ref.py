@@ -286,3 +286,15 @@ def bucket_stats(g: jax.Array) -> jax.Array:
         row = jax.lax.broadcasted_iota(jnp.int32, (S.STATS_ROWS, S.NUM_BINS), 0)
         acc = jnp.where(row == 2, jnp.maximum(acc, part), acc + part)
     return acc
+
+
+def orthogonalize(p: jax.Array) -> jax.Array:
+    """Oracle for ``kernels.orthogonalize``: the identical padded-tile
+    Gram–Schmidt loop (shared ``_gs_padded`` body ⇒ bit-exact vs the kernel
+    in interpret mode), shard_map-safe jnp."""
+    from .orthogonalize import LANES as _GS_LANES, SUBLANES as _GS_SUB, _gs_padded
+
+    rows, r = p.shape
+    rows_p = -(-rows // _GS_SUB) * _GS_SUB
+    pp = jnp.pad(p.astype(jnp.float32), ((0, rows_p - rows), (0, _GS_LANES - r)))
+    return _gs_padded(pp, r)[:rows, :r]

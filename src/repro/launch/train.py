@@ -30,7 +30,8 @@ def main(argv=None) -> int:
 
     from repro.checkpoint.io import load_checkpoint, latest_step, save_checkpoint
     from repro.configs import get_config, list_archs, reduced as make_reduced
-    from repro.core.compressors import CompressorConfig, METHODS
+    from repro.core.codecs import known_methods
+    from repro.core.compressors import CompressorConfig
     from repro.data.synthetic import lm_batch
     from repro.dist.train_step import SYNC_MODES, TrainStepConfig, make_train_step
     from repro.launch.mesh import make_mesh_from_spec
@@ -46,8 +47,10 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--sync", default="two_phase", choices=SYNC_MODES)
-    ap.add_argument("--method", default="tnqsgd", choices=METHODS)
+    ap.add_argument("--method", default="tnqsgd", choices=known_methods())
     ap.add_argument("--bits", type=int, default=3)
+    ap.add_argument("--rank", type=int, default=4,
+                    help="factor rank for rank-based codecs (powersgd)")
     ap.add_argument("--bucket-mb", type=float, default=4.0,
                     help="bucketed-codec target bucket size; 0 = per-leaf codec")
     ap.add_argument("--ef", action="store_true",
@@ -83,6 +86,7 @@ def main(argv=None) -> int:
                               replan_every=args.replan_every)
     ts = TrainStepConfig(sync=args.sync,
                          compressor=CompressorConfig(method=args.method, bits=args.bits,
+                                                     rank=args.rank,
                                                      approx_gmin=args.adaptive),
                          bucket_mb=args.bucket_mb, error_feedback=args.ef, adaptive=acfg)
     batch0 = lm_batch(cfg, jnp.uint32(0), args.batch, args.seq)

@@ -7,10 +7,26 @@ jnp fallbacks; the CI ``kernels-interpret`` job runs with it so both decode
 dispatch branches are covered on every PR.  The option is exported through
 ``REPRO_TEST_USE_PALLAS`` so the subprocess-based distributed tests inherit
 it.
+
+When hypothesis is installed (the ``dev`` extra; it is not in the pinned
+runtime deps) a derandomized "ci" profile registers here and activates under
+``CI=true``, so the property tests in ``tests/test_properties.py`` are
+reproducible across CI runs instead of sampling fresh examples per run.
+Local runs keep hypothesis's default randomized profile.
 """
 import os
 
 import pytest
+
+try:  # hypothesis ships via the dev extra only; tier-1 must run without it
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", derandomize=True, deadline=None,
+                                   print_blob=True)
+    if os.environ.get("CI"):
+        _hyp_settings.load_profile("ci")
+except ImportError:
+    pass
 
 
 def pytest_addoption(parser):

@@ -19,9 +19,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.compressors import CompressorConfig
+from repro.core.compressors import CompressorConfig, plan_buckets
+from repro.dist import sharded_codec as sc
 from repro.data.synthetic import client_batches, make_templates
-from repro.dist.reference import reference_sync
+from repro.dist.reference import reference_sync, reference_sync_state
 from repro.dist.train_step import TrainStepConfig
 from repro.models.smallnet import init_smallnet, smallnet_loss
 from repro.optim.optimizers import momentum_sgd
@@ -30,49 +31,62 @@ N_CLIENTS = 8
 BATCH = 32
 STEPS = 30
 
-# sync -> ((pods, data) layout, pinned final loss, tolerance).  The synthetic
-# shapes task converges hard in 30 steps (first-step loss ≈ 6.49); a codec
-# bias that perturbs the synced mean stalls convergence orders of magnitude
-# above these windows.
+# case -> (sync, method, ef, (pods, data) layout, pinned final loss,
+# tolerance).  The synthetic shapes task converges hard in 30 steps
+# (first-step loss ≈ 6.49); a codec bias that perturbs the synced mean
+# stalls convergence orders of magnitude above these windows.  The
+# powersgd case runs with error feedback — biased low-rank compression
+# needs the residual (and its warm-started Q rides the same EF row), so
+# the window also pins the bucket-resident aux-state threading.
 GOLDEN = {
-    "dsgd": ((8,), 0.0000, 0.02),
-    "two_phase": ((8,), 0.0037, 0.05),
-    "hierarchical": ((2, 4), 0.0207, 0.05),
-    "faithful": ((8,), 0.0162, 0.05),
+    "dsgd": ("dsgd", "tnqsgd", False, (8,), 0.0000, 0.02),
+    "two_phase": ("two_phase", "tnqsgd", False, (8,), 0.0037, 0.05),
+    "hierarchical": ("hierarchical", "tnqsgd", False, (2, 4), 0.0207, 0.05),
+    "faithful": ("faithful", "tnqsgd", False, (8,), 0.0162, 0.05),
+    "powersgd": ("faithful", "powersgd", True, (8,), 0.0110, 0.05),
 }
 
 
-def _run(sync: str, dp: tuple) -> list:
-    ts = TrainStepConfig(sync=sync,
-                         compressor=CompressorConfig(method="tnqsgd", bits=3))
+def _run(sync: str, method: str, ef_on: bool, dp: tuple) -> list:
+    ts = TrainStepConfig(sync=sync, error_feedback=ef_on,
+                         compressor=CompressorConfig(method=method, bits=3, rank=4))
     templates = make_templates(jax.random.key(42))
     params = init_smallnet(jax.random.key(0))
     opt = momentum_sgd(lr=0.01, momentum=0.9, weight_decay=5e-4)
     state = opt.init(params)
+    ef = None
+    if ef_on:
+        bp = plan_buckets([x.size for x in jax.tree.leaves(params)],
+                          int(4.0 * (1 << 20) / 4))
+        st_sizes = sc.bucket_state_sizes(ts.compressor, bp.sizes, ts.bits_plan)
+        ef = [jnp.zeros((N_CLIENTS, s), jnp.float32) for s in st_sizes]
 
     @jax.jit
-    def step(p, s, i):
+    def step(p, s, ef, i):
         imgs, labels = client_batches(templates, i, N_CLIENTS, BATCH)
         losses, grads = jax.vmap(
             lambda im, lb: jax.value_and_grad(smallnet_loss)(p, im, lb))(imgs, labels)
         leaves, treedef = jax.tree.flatten(grads)
         key = jax.random.fold_in(jax.random.key(0x5EED), i)
-        mean = reference_sync(ts, leaves, dp, key)
+        if ef_on:
+            mean, ef2, _ = reference_sync_state(ts, leaves, dp, key, ef=ef)
+        else:
+            mean, ef2 = reference_sync(ts, leaves, dp, key), None
         p2, s2 = opt.update(p, jax.tree.unflatten(treedef, mean), s, i)
-        return p2, s2, jnp.mean(losses)
+        return p2, s2, ef2, jnp.mean(losses)
 
     hist = []
     p, s = params, state
     for i in range(STEPS):
-        p, s, loss = step(p, s, jnp.uint32(i))
+        p, s, ef, loss = step(p, s, ef, jnp.uint32(i))
         hist.append(float(loss))
     return hist
 
 
-@pytest.mark.parametrize("sync", sorted(GOLDEN))
-def test_golden_final_loss(sync):
-    dp, pinned, tol = GOLDEN[sync]
-    hist = _run(sync, dp)
-    assert hist[-1] == pytest.approx(pinned, abs=tol), (sync, hist)
+@pytest.mark.parametrize("case", sorted(GOLDEN))
+def test_golden_final_loss(case):
+    sync, method, ef_on, dp, pinned, tol = GOLDEN[case]
+    hist = _run(sync, method, ef_on, dp)
+    assert hist[-1] == pytest.approx(pinned, abs=tol), (case, hist)
     # and training actually converged (quantization noise notwithstanding)
-    assert hist[-1] < hist[0] - 5.0, (sync, hist)
+    assert hist[-1] < hist[0] - 5.0, (case, hist)

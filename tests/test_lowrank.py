@@ -1,0 +1,169 @@
+"""PowerSGD codec + Gram–Schmidt orthogonalization kernel.
+
+Pins the codec contract the registry exposes to the bucketed collectives:
+the Pallas orthogonalization kernel is bit-exact against the shared-body
+``kernels.ref`` oracle (interpret mode executes the identical op
+sequence), the factor wire round-trips, warm-starting the power iteration
+tightens the approximation, and the EF residual is exactly the
+reconstruction error.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lowrank
+from repro.core.codecs import bucket_cfg_entry, get_codec, known_methods
+from repro.core.compressors import CompressorConfig, wire_bytes
+from repro.kernels import ops, ref
+
+SHAPES = [(8, 4), (128, 8), (1000, 3), (7, 7), (513, 16)]
+
+
+def _tall(key, rows, cols):
+    return jax.random.normal(key, (rows, cols), jnp.float32)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_orthogonalize_kernel_matches_ref(shape):
+    p = _tall(jax.random.key(1), *shape)
+    got = ops.orthogonalize(p)
+    want = ref.orthogonalize(p)
+    # shared loop body + interpret mode: agreement to fusion-level rounding
+    # (XLA may fuse the dot-product reductions differently inside the
+    # interpreted pallas_call), pinned at float32 ULP scale
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_orthogonalize_orthonormal(shape):
+    rows, cols = shape
+    p = _tall(jax.random.key(2), rows, cols)
+    q = np.asarray(ref.orthogonalize(p))
+    r = min(rows, cols)
+    gram = q.T @ q
+    np.testing.assert_allclose(gram[:r, :r], np.eye(r), atol=2e-3)
+    # the span is preserved: projecting p onto q reproduces p
+    np.testing.assert_allclose(q @ (q.T @ np.asarray(p)), np.asarray(p),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_orthogonalize_zero_columns_stay_zero():
+    p = jnp.zeros((64, 4), jnp.float32).at[:, 0].set(1.0)
+    q = np.asarray(ref.orthogonalize(p))
+    assert np.all(np.isfinite(q))
+    np.testing.assert_array_equal(q[:, 1:], 0.0)
+
+
+def test_matrix_shape_static_properties():
+    for m in (1, 2, 3, 31, 32, 999, 3072, 2257, 1 << 20):
+        rows, cols = lowrank.matrix_shape(m)
+        assert rows * cols >= m
+        assert cols & (cols - 1) == 0  # power of two
+        assert (rows - 1) * cols < m   # no wasted full row
+    assert lowrank.matrix_shape(1) == (1, 1)
+
+
+def test_registry_exposes_powersgd():
+    assert "powersgd" in known_methods()
+    codec = get_codec("powersgd")
+    assert codec.rank_based and not codec.chunkable
+    cfg = bucket_cfg_entry(CompressorConfig(method="tnqsgd", bits=3),
+                           ("powersgd", 4))
+    assert cfg.method == "powersgd" and cfg.rank == 4
+    m = 3072
+    rows, cols = lowrank.matrix_shape(m)
+    assert codec.wire_words(cfg, m) == (rows + cols) * 4
+    assert codec.state_extra(cfg, m) == cols * 4
+    assert wire_bytes(cfg, m) == 4 * (rows + cols) * 4
+
+
+def test_encode_decode_roundtrip_and_residual():
+    cfg = CompressorConfig(method="powersgd", rank=4)
+    codec = get_codec("powersgd")
+    m = 3072
+    flat = jax.random.normal(jax.random.key(3), (m,), jnp.float32)
+    wire, resid, aux = codec.encode_residual(cfg, flat, None, jax.random.key(0),
+                                             False, aux=None)
+    assert wire.dtype == jnp.uint32 and wire.size == codec.wire_words(cfg, m)
+    assert aux.size == codec.state_extra(cfg, m)
+    own = codec.decode_reduce(cfg, wire[None], m, False)
+    # EF residual is exactly the own-reconstruction error
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(flat - own),
+                               rtol=1e-5, atol=1e-5)
+    # decode_rows stacks per-peer reconstructions consistently
+    rows2 = codec.decode_rows(cfg, jnp.stack([wire, wire]), m, False)
+    np.testing.assert_array_equal(np.asarray(rows2[0]), np.asarray(rows2[1]))
+    np.testing.assert_allclose(np.asarray(rows2[0]), np.asarray(own), rtol=1e-6)
+
+
+def test_rank_captures_low_rank_signal():
+    """A genuinely rank-2 bucket is reconstructed near-exactly at rank >= 2."""
+    rows, cols = 64, 32
+    k1, k2 = jax.random.split(jax.random.key(4))
+    mat = _tall(k1, rows, 2) @ _tall(k2, cols, 2).T
+    flat = mat.reshape(-1)
+    cfg = CompressorConfig(method="powersgd", rank=8)
+    codec = get_codec("powersgd")
+    # two warm-started iterations converge onto the 2-dim subspace
+    wire, resid, aux = codec.encode_residual(cfg, flat, None, jax.random.key(0),
+                                             False, aux=None)
+    err_cold = float(jnp.sum(resid * resid))
+    wire, resid, aux = codec.encode_residual(cfg, flat, None, jax.random.key(0),
+                                             False, aux=aux)
+    err_warm = float(jnp.sum(resid * resid))
+    total = float(jnp.sum(flat * flat))
+    assert err_warm <= err_cold + 1e-6
+    assert err_warm < 1e-4 * total
+
+
+def test_warm_start_tracks_subspace_better_than_cold():
+    """On a slowly-rotating low-rank gradient stream, carrying Q beats
+    restarting from Q0 every step (the point of the EF-state aux tail)."""
+    rows, cols, r = 128, 64, 2
+    base_p = _tall(jax.random.key(5), rows, r)
+    base_q = _tall(jax.random.key(6), cols, r)
+    noise_k = jax.random.key(7)
+    cfg = CompressorConfig(method="powersgd", rank=r)
+    codec = get_codec("powersgd")
+
+    def stream(step):
+        nk = jax.random.fold_in(noise_k, step)
+        drift = 0.02 * step
+        return ((base_p + drift * jax.random.normal(nk, base_p.shape))
+                @ base_q.T).reshape(-1)
+
+    warm_aux, warm_errs, cold_errs = None, [], []
+    for i in range(6):
+        flat = stream(i)
+        _, res_w, warm_aux = codec.encode_residual(
+            cfg, flat, None, jax.random.key(0), False, aux=warm_aux)
+        _, res_c, _ = codec.encode_residual(
+            cfg, flat, None, jax.random.key(0), False, aux=None)
+        warm_errs.append(float(jnp.sum(res_w * res_w)))
+        cold_errs.append(float(jnp.sum(res_c * res_c)))
+    assert sum(warm_errs[1:]) <= sum(cold_errs[1:])
+
+
+def test_zero_aux_means_cold_start():
+    """A freshly-initialized (all-zero) EF aux tail must not poison Q."""
+    cfg = CompressorConfig(method="powersgd", rank=4)
+    codec = get_codec("powersgd")
+    m = 999
+    flat = jax.random.normal(jax.random.key(8), (m,), jnp.float32)
+    zero_aux = jnp.zeros((codec.state_extra(cfg, m),), jnp.float32)
+    w0, r0, _ = codec.encode_residual(cfg, flat, None, jax.random.key(0),
+                                      False, aux=None)
+    wz, rz, _ = codec.encode_residual(cfg, flat, None, jax.random.key(0),
+                                      False, aux=zero_aux)
+    np.testing.assert_array_equal(np.asarray(w0), np.asarray(wz))
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(rz))
+
+
+def test_effective_rank_clamps_to_matrix():
+    cfg = CompressorConfig(method="powersgd", rank=64)
+    assert lowrank.effective_rank(cfg, 9) == 2        # (5, 2) matrix
+    assert lowrank.effective_rank(cfg, 1) == 1
+    assert lowrank.effective_rank(CompressorConfig(method="powersgd", rank=4),
+                                  1 << 20) == 4

@@ -46,7 +46,7 @@ from jax.sharding import PartitionSpec as P, AxisType
 from repro.core.compressors import CompressorConfig, plan_buckets
 from repro.adaptive.controller import AdaptiveConfig
 from repro.adaptive.telemetry import init_telemetry
-from repro.dist import reference, sharding
+from repro.dist import reference, sharded_codec as sc, sharding
 from repro.dist.train_step import TrainStepConfig, _sync_buckets, _sync_leaf
 
 MESH_SHAPE = %(shape)r
@@ -125,6 +125,15 @@ def check_state(name, ts, exact):
     # threads the stacked EF bucket arrays and the telemetry rows exactly as
     # _make_sync_fn does; means must agree bitwise across peers, and the
     # per-peer residual/telemetry rows must equal the reference's.
+    # Rank-based codec buckets carry a codec-opaque aux tail after the
+    # residual (state_extra); a random non-zero tail exercises the
+    # warm-started power iteration on both sides.  Quantizer buckets reuse
+    # the exact ef0 arrays, keeping the pre-registry cases bit-identical.
+    st_sizes = sc.bucket_state_sizes(ts.compressor, BP.sizes, ts.bits_plan)
+    ef = [ef0[b] if st == BP.sizes[b] else
+          (jax.random.normal(jax.random.fold_in(key0, 200 + b), (n, st)) * 0.01
+           ).astype(jnp.float32)
+          for b, st in enumerate(st_sizes)]
     t0 = jax.tree.map(lambda x: jnp.tile(x[None], (n,) + (1,) * x.ndim),
                       init_telemetry(BP.n_buckets))
 
@@ -140,15 +149,15 @@ def check_state(name, ts, exact):
     t_spec = jax.tree.map(lambda _: P(dp), t0)
     smap = jax.shard_map(
         body, mesh=mesh,
-        in_specs=(P(), t_spec) + (P(dp),) * (len(leaves) + len(ef0)),
-        out_specs=(tuple(P(dp) for _ in leaves), tuple(P(dp) for _ in ef0), t_spec),
+        in_specs=(P(), t_spec) + (P(dp),) * (len(leaves) + len(ef)),
+        out_specs=(tuple(P(dp) for _ in leaves), tuple(P(dp) for _ in ef), t_spec),
         axis_names=set(mesh.axis_names), check_vma=False)
-    means, resids, new_t = jax.jit(smap)(skey, t0, *leaves, *ef0)
+    means, resids, new_t = jax.jit(smap)(skey, t0, *leaves, *ef)
 
     w_means, w_resids, w_t = jax.jit(
-        lambda key, t, ls, ef: reference.reference_sync_state(
-            ts, list(ls), dp_sizes, key, ef=list(ef), tstate=t)
-    )(skey, t0, tuple(leaves), tuple(ef0))
+        lambda key, t, ls, e: reference.reference_sync_state(
+            ts, list(ls), dp_sizes, key, ef=list(e), tstate=t)
+    )(skey, t0, tuple(leaves), tuple(ef))
 
     for leaf_i, (g, w) in enumerate(zip(means, w_means)):
         assert_peer_rows(name, "leaf", leaf_i, np.asarray(g), w, exact)
@@ -167,10 +176,11 @@ def check_state(name, ts, exact):
 
 
 def ts_for(sync, method="tnqsgd", bits=3, bucket_mb=1.0 / 64.0, bits_plan=None,
-           **kw):
+           rank=4, **kw):
     return TrainStepConfig(
         sync=sync, bucket_mb=bucket_mb, bits_plan=bits_plan,
-        compressor=CompressorConfig(method=method, bits=bits, use_pallas=USE_PALLAS),
+        compressor=CompressorConfig(method=method, bits=bits, rank=rank,
+                                    use_pallas=USE_PALLAS),
         **kw)
 
 
@@ -215,6 +225,34 @@ if FULL:
     check_state("bucketed_state/faithful/bits_plan",
                 ts_for("faithful", bits_plan=(2, 4, 3), error_feedback=True,
                        adaptive=AdaptiveConfig(ema=0.9)), exact=True)
+
+# powersgd through the registry: the non-chunkable wire rides every sync
+# mode (two_phase tiles the full factor pair into each all-to-all row).
+# Peer agreement stays bitwise (assert_peer_rows part (a)); the reference
+# comparison is allclose — the factor matmuls' FMA contraction is
+# compiler-discretionary between the mesh and reference graphs.
+psgd = ("two_phase", "faithful") if FULL else (
+    ("hierarchical",) if len(dp_sizes) > 1 else ())
+for sync in psgd:
+    check(f"bucketed/{sync}/powersgd", ts_for(sync, method="powersgd", rank=4),
+          exact=False)
+# mixed per-bucket method plan: quantized buckets next to a low-rank one
+# in the same fused wire (plan entries resolve through the codec registry)
+mixed_plan = (3, ("powersgd", 4), 2)
+mixed = ("faithful", "two_phase") if FULL else (
+    ("hierarchical",) if len(dp_sizes) > 1 and MESH_SHAPE[-1] > 1 else ())
+for sync in mixed:
+    check(f"bucketed/{sync}/mixed_plan", ts_for(sync, bits_plan=mixed_plan),
+          exact=False)
+# EF + adaptive with the rank-based codec: the state rows grow the
+# codec-opaque aux tail (warm-started Q), threaded by _sync_buckets.
+if FULL:
+    check_state("bucketed_state/faithful/powersgd",
+                ts_for("faithful", method="powersgd", error_feedback=True,
+                       adaptive=AdaptiveConfig(ema=0.9)), exact=False)
+    check_state("bucketed_state/two_phase/mixed_plan",
+                ts_for("two_phase", bits_plan=mixed_plan, error_feedback=True,
+                       adaptive=AdaptiveConfig(ema=0.9)), exact=False)
 
 print("ALL_OK")
 """
