@@ -42,9 +42,11 @@ SPECS = [
 ]
 
 _COUNT_DEMO = """
-import collections, jax, jax.numpy as jnp
+import jax, jax.numpy as jnp
 from jax.sharding import AxisType
+from repro.analysis.jaxpr_lint import check_budget, count_collectives
 from repro.configs import get_config, reduced
+from repro.core.codecs import get_codec
 from repro.core.compressors import CompressorConfig
 from repro.dist import sharding
 from repro.dist.train_step import (TrainStepConfig, _make_sync_fn, init_telemetry_state,
@@ -52,23 +54,11 @@ from repro.dist.train_step import (TrainStepConfig, _make_sync_fn, init_telemetr
 from repro.adaptive.controller import AdaptiveConfig
 from repro.models import init_lm
 
-COLLECTIVES = {"all_to_all", "all_gather", "psum", "ppermute", "all_gather_invariant"}
-def count(jaxpr, acc):
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name in COLLECTIVES:
-            acc[eqn.primitive.name] += 1
-        for v in eqn.params.values():
-            if hasattr(v, "jaxpr"):
-                count(v.jaxpr, acc)
-            elif hasattr(v, "eqns"):
-                count(v, acc)
-    return acc
-
 cfg = reduced(get_config("llama3.2-1b")).replace(fsdp=False)
 params0, logical = init_lm(jax.random.key(0), cfg)
 key = jax.random.key(3)
-for sync, axes, want in [("faithful", ("data",), 1), ("two_phase", ("data",), 2),
-                         ("hierarchical", ("pod", "data"), 3)]:
+for sync, axes in [("faithful", ("data",)), ("two_phase", ("data",)),
+                   ("hierarchical", ("pod", "data"))]:
     shape = (4,) if len(axes) == 1 else (2, 2)
     mesh = jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
     pspecs = sharding.param_pspecs(logical, mesh, False, params0)
@@ -83,10 +73,14 @@ for sync, axes, want in [("faithful", ("data",), 1), ("two_phase", ("data",), 2)
     grads_like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
     tstate = init_telemetry_state(params0, mesh, pspecs, ts)
     jfn = jax.jit(_make_sync_fn(ts, mesh, pspecs, grads_like))
-    n = sum(count(jfn.trace(grads, key, tstate).jaxpr.jaxpr,
-                  collections.Counter()).values())
+    closed = jfn.trace(grads, key, tstate).jaxpr
+    # the registry-declared budget is the want: 1/2/3 for faithful/
+    # two_phase/hierarchical, telemetry + heterogeneous bits add nothing
+    budget = get_codec("tqsgd").collective_budget(sync, nb)
+    n = sum(count_collectives(closed).values())
     print(f"adaptive,{sync}_hetero_n_collectives,0,{n}")
-    assert n == want, (sync, n, want)
+    assert not check_budget(closed, budget, sync), (sync, n, budget)
+    assert n == budget, (sync, n, budget)
 print("adaptive,collectives_unchanged,0,OK")
 """
 
@@ -112,7 +106,7 @@ def main(quick: bool = False):
     sizes = [b.size for b in buckets]
 
     st = T.init_telemetry(len(buckets))
-    for i in range(3):
+    for _ in range(3):
         st = T.update_telemetry(st, buckets, decay=0.9)
     tails = T.estimate_tails(st)
     for b, (_, ga, _, _) in enumerate(SPECS):

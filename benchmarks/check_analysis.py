@@ -1,0 +1,158 @@
+"""Validate the ANALYSIS.json artifact ``python -m repro.analysis`` writes.
+
+CI runs this right after the analyzer so a malformed or internally
+inconsistent report (truncated mid-write, a pass silently skipped, findings
+that disagree with the ``clean`` flag or the VMEM table) fails the
+``static-analysis`` job instead of archiving garbage.
+
+Schema: ``{"version": 1, "passes": {"jaxpr": {"traces": N, "per_trace":
+{label: {"collectives": {prim: n}, "budget"?: N, "n_buckets"?: N}}, "ast":
+{"files": N}, "vmem": {"kernels": N, "table": [...]}}, "findings":
+[{"code": "REPROxxx", "where": str, "message": str}], "clean": bool}``.
+
+Guards:
+
+- ``clean`` is exactly ``findings == []``;
+- every budgeted trace row satisfies ``sum(collectives) <= budget`` unless
+  a matching REPRO101 finding reports the excess;
+- every VMEM table row satisfies ``vmem_bytes <= budget_bytes`` unless a
+  matching REPRO301 finding reports the excess;
+- all three passes ran (``--pass``-restricted local runs are fine, but the
+  CI artifact must cover the full surface).
+
+Usage: ``python -m benchmarks.check_analysis ANALYSIS.json``.  Exits
+non-zero listing every violation.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+_CODE_RE = re.compile(r"REPRO\d{3}\Z")
+_REQUIRED_PASSES = ("jaxpr", "ast", "vmem")
+
+
+def _is_count(x) -> bool:
+    return isinstance(x, int) and not isinstance(x, bool) and x >= 0
+
+
+def check_schema(report, errors: list[str]) -> int:
+    """Structural checks; returns the number of checks performed."""
+    n = 0
+
+    def req(cond: bool, msg: str) -> None:
+        nonlocal n
+        n += 1
+        if not cond:
+            errors.append(msg)
+
+    req(isinstance(report, dict), "top level is not an object")
+    if not isinstance(report, dict):
+        return n
+    req(report.get("version") == 1, f"version must be 1, got {report.get('version')!r}")
+    req(isinstance(report.get("clean"), bool), "clean must be a bool")
+    findings = report.get("findings")
+    req(isinstance(findings, list), "findings must be a list")
+    for i, f in enumerate(findings or []):
+        req(isinstance(f, dict) and _CODE_RE.match(str(f.get("code", "")))
+            and isinstance(f.get("where"), str) and isinstance(f.get("message"), str),
+            f"finding[{i}] must be {{code: REPROxxx, where: str, message: str}}, got {f!r}")
+    passes = report.get("passes")
+    req(isinstance(passes, dict), "passes must be an object")
+    if not isinstance(passes, dict):
+        return n
+    for name in _REQUIRED_PASSES:
+        req(name in passes, f"pass {name!r} missing from the report")
+    jx = passes.get("jaxpr")
+    if isinstance(jx, dict):
+        per = jx.get("per_trace")
+        req(_is_count(jx.get("traces")) and jx.get("traces", 0) >= 1,
+            "jaxpr: traces must be a positive count")
+        req(isinstance(per, dict) and len(per) == jx.get("traces"),
+            "jaxpr: per_trace must be an object with one row per trace")
+        for label, row in (per or {}).items() if isinstance(per, dict) else ():
+            coll = row.get("collectives") if isinstance(row, dict) else None
+            req(isinstance(coll, dict) and all(_is_count(v) for v in (coll or {}).values()),
+                f"jaxpr trace {label!r}: collectives must map primitive -> count")
+    ast_pass = passes.get("ast")
+    if isinstance(ast_pass, dict):
+        req(_is_count(ast_pass.get("files")) and ast_pass.get("files", 0) >= 1,
+            "ast: files must be a positive count")
+    vm = passes.get("vmem")
+    if isinstance(vm, dict):
+        table = vm.get("table")
+        req(isinstance(table, list) and vm.get("kernels") == len(table or []),
+            "vmem: kernels must equal the table length")
+        for i, row in enumerate(table or []):
+            req(isinstance(row, dict) and isinstance(row.get("wrapper"), str)
+                and isinstance(row.get("kernel"), str)
+                and _is_count(row.get("vmem_bytes"))
+                and _is_count(row.get("budget_bytes")),
+                f"vmem table[{i}] must carry wrapper/kernel/vmem_bytes/budget_bytes")
+    return n
+
+
+def check_guards(report, errors: list[str]) -> int:
+    """Cross-consistency guards; returns the number of guards run."""
+    n = 0
+    findings = report.get("findings", [])
+    codes_by_where = {(f.get("code"), f.get("where")) for f in findings
+                      if isinstance(f, dict)}
+    n += 1
+    if report.get("clean") is not (not findings):
+        errors.append(f"clean={report.get('clean')!r} disagrees with "
+                      f"{len(findings)} finding(s)")
+    per = report.get("passes", {}).get("jaxpr", {}).get("per_trace", {})
+    for label, row in per.items() if isinstance(per, dict) else ():
+        if not isinstance(row, dict) or "budget" not in row:
+            continue
+        n += 1
+        total = sum(row.get("collectives", {}).values())
+        reported = ("REPRO101", label) in codes_by_where
+        if total > row["budget"] and not reported:
+            errors.append(f"jaxpr trace {label!r}: {total} collectives over "
+                          f"budget {row['budget']} with no REPRO101 finding")
+    table = report.get("passes", {}).get("vmem", {}).get("table", [])
+    for row in table if isinstance(table, list) else ():
+        if not isinstance(row, dict):
+            continue
+        n += 1
+        where = f"vmem:{row.get('wrapper')}/{row.get('kernel')}"
+        reported = ("REPRO301", where) in codes_by_where
+        if row.get("vmem_bytes", 0) > row.get("budget_bytes", 0) and not reported:
+            errors.append(f"{where}: {row.get('vmem_bytes')} B over the "
+                          f"{row.get('budget_bytes')} B budget with no "
+                          "REPRO301 finding")
+    return n
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        report = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable: {e}"]
+    n_schema = check_schema(report, errors)
+    n_guards = check_guards(report, errors) if not errors else 0
+    if not errors:
+        print(f"{path}: OK ({n_schema} schema checks, {n_guards} guards)")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("usage: check_analysis.py ANALYSIS.json [...]", file=sys.stderr)
+        return 2
+    failed = False
+    for arg in argv:
+        for msg in check_file(pathlib.Path(arg)):
+            failed = True
+            print(f"{arg}: FAIL: {msg}", file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,7 +42,7 @@ _PIPELINE_SLACK = 1.5
 
 
 def _is_num(x) -> bool:
-    return isinstance(x, (int, float)) and not isinstance(x, bool)
+    return isinstance(x, int | float) and not isinstance(x, bool)
 
 
 def check_schema(report, errors: list[str]) -> int:

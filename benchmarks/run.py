@@ -44,18 +44,15 @@ def main(argv=None) -> int:
         kernel_bench, lowrank_bench, quant_error,
     )
 
-    if args.adaptive:
-        suites = {"adaptive": adaptive_bench.main}
-    else:
-        suites = {
-            "quant_error": quant_error.main,
-            "kernels": kernel_bench.main,
-            "collectives": collectives_bench.main,
-            "lowrank": lowrank_bench.main,
-            "fig1_grad_density": fig1_grad_density.main,
-            "fig3_accuracy": fig3_accuracy.main,
-            "fig4_tradeoff": fig4_tradeoff.main,
-        }
+    suites = {"adaptive": adaptive_bench.main} if args.adaptive else {
+        "quant_error": quant_error.main,
+        "kernels": kernel_bench.main,
+        "collectives": collectives_bench.main,
+        "lowrank": lowrank_bench.main,
+        "fig1_grad_density": fig1_grad_density.main,
+        "fig3_accuracy": fig3_accuracy.main,
+        "fig4_tradeoff": fig4_tradeoff.main,
+    }
     if args.only:
         keep = set(args.only.split(","))
         unknown = sorted(keep - set(suites))

@@ -29,7 +29,8 @@ dynamically.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Sequence
+from collections.abc import Sequence
+from typing import NamedTuple
 
 import jax.numpy as jnp
 
@@ -102,7 +103,7 @@ def budget_bytes(cfg: AdaptiveConfig, ccfg: CompressorConfig, sizes: Sequence[in
     return int(wire_bytes(ccfg, list(sizes)))
 
 
-def _solve_bucket(tail: PowerLawTail, dens: Optional[EmpiricalDensity], k: int,
+def _solve_bucket(tail: PowerLawTail, dens: EmpiricalDensity | None, k: int,
                   ccfg: CompressorConfig, iters: int) -> tuple[float, float]:
     """(α, per-element E_TQ) for one bucket at ``k`` bits, dispatched on the
     compressor method so both track what the codec's ``plan`` actually does:
@@ -129,7 +130,7 @@ def predicted_error(
     bits: Sequence[int],
     ccfg: CompressorConfig,
     *,
-    dens: Optional[Sequence[EmpiricalDensity]] = None,
+    dens: Sequence[EmpiricalDensity] | None = None,
     alpha_iters: int = 10,
 ) -> float:
     """Size-weighted total model error of an arbitrary bit assignment —
@@ -147,7 +148,7 @@ def allocate_bits(
     budget: int,
     ccfg: CompressorConfig,
     *,
-    dens: Optional[Sequence[EmpiricalDensity]] = None,
+    dens: Sequence[EmpiricalDensity] | None = None,
     min_bits: int = 2,
     max_bits: int = 8,
     alpha_iters: int = 10,
@@ -255,7 +256,7 @@ def allocate_plan(
     budget: int,
     ccfg: CompressorConfig,
     *,
-    dens: Optional[Sequence[EmpiricalDensity]] = None,
+    dens: Sequence[EmpiricalDensity] | None = None,
     min_bits: int = 2,
     max_bits: int = 8,
     alpha_iters: int = 10,

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,7 @@ class AdaptiveStepper:
         if params_like is None:
             from repro.models import transformer
 
+            # repro: allow REPRO204 (eval_shape aval-only trace; value never used)
             params_like = jax.eval_shape(lambda: transformer.init_lm(jax.random.key(0), cfg)[0])
         # The plan/telemetry hot loop never full-sorts: force the histogram
         # quantile for g_min unless the caller already chose.
@@ -63,7 +64,7 @@ class AdaptiveStepper:
         self.opt_state_like = opt_state_like
         self.params_like = params_like
         self._cache: collections.OrderedDict[tuple[int, ...], Any] = collections.OrderedDict()
-        self.plan: Optional[BitPlan] = None
+        self.plan: BitPlan | None = None
         self.tails = None  # last telemetry-estimated stacked PowerLawTail
         # First build fixes pspecs and the bucket layout (uniform plan).
         step0, self.pspecs = self._build(None)
@@ -71,7 +72,7 @@ class AdaptiveStepper:
         self.bits = (ts.compressor.bits,) * len(self.sizes)
         self._cache[self.bits] = step0
 
-    def _build(self, bits: Optional[tuple[int, ...]]):
+    def _build(self, bits: tuple[int, ...] | None):
         ts_b = dataclasses.replace(self.ts, bits_plan=bits)
         return make_train_step(
             self.cfg, self.mesh, self.logical, self.opt, ts_b, self.batch0,

@@ -21,7 +21,8 @@ full sort ``jnp.quantile`` runs in the offline fit.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence
+from collections.abc import Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -114,7 +115,7 @@ def update_telemetry(
     *,
     decay: float = 0.9,
     use_pallas: bool = False,
-    stats: Optional[Sequence] = None,
+    stats: Sequence | None = None,
 ) -> TelemetryState:
     """Fold one step's buckets into the EMA state (B must match).
 

@@ -1,0 +1,94 @@
+"""Static-analysis passes over the sync surface (``python -m repro.analysis``).
+
+Three passes, one rule-code band each:
+
+- ``REPRO1xx`` — :mod:`repro.analysis.jaxpr_lint`: traces every registered
+  sync mode × codec through the ``dist.train_step`` / ``dist.reference``
+  closures and walks the ClosedJaxpr — collective counts against the
+  budgets declared on the codec registry, per-peer RNG decorrelation
+  (every ``random_*`` key inside a shard_map region must data-depend on
+  ``axis_index``), f64 leaks, nondeterministic reductions, and non-uint32
+  wire tensors crossing collective boundaries.
+- ``REPRO2xx`` — :mod:`repro.analysis.ast_lint`: architectural rules over
+  the source tree — no method-string dispatch in the collective bodies,
+  no bare ``pl.pallas_call`` outside ``kernels/``, interpret-fallback
+  dispatch on every kernel wrapper, no literal PRNG seeds in library code.
+- ``REPRO3xx`` — :mod:`repro.analysis.vmem`: static VMEM footprint of each
+  Pallas kernel from its BlockSpecs/grid against a per-kernel budget.
+
+A finding is suppressed by a source comment on (or one line above) the
+offending line::
+
+    x = jnp.zeros(...).at[b].add(v)  # repro: allow REPRO104 (CPU-only path)
+
+This module is deliberately import-light (no jax): the CLI must set
+``XLA_FLAGS`` for the fake-device mesh before jax loads, and the AST pass
+has no reason to pay for a jax import.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["Finding", "RULES", "suppressed_codes", "filter_suppressed"]
+
+#: rule code -> one-line description (the taxonomy REPRO1xx/2xx/3xx)
+RULES = {
+    "REPRO101": "collective count exceeds the mode's declared budget",
+    "REPRO102": "random_* key inside shard_map lacks an axis_index dependency "
+                "(correlated per-peer quantization RNG)",
+    "REPRO103": "float64 value in a traced sync computation",
+    "REPRO104": "nondeterministic float reduction (scatter-add without "
+                "unique indices)",
+    "REPRO105": "non-uint32 tensor crossing a compressed-wire collective",
+    "REPRO201": "method-string dispatch inside a collective body",
+    "REPRO202": "bare pl.pallas_call outside kernels/",
+    "REPRO203": "kernel wrapper without interpret-fallback dispatch",
+    "REPRO204": "argless/literal jax.random.PRNGKey/key seed in library code",
+    "REPRO301": "Pallas kernel VMEM footprint exceeds its budget",
+}
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\s+(REPRO\d{3}(?:\s*,\s*REPRO\d{3})*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source location when known."""
+
+    code: str            # REPROxxx
+    where: str           # "path:line" or a trace label like "faithful/tqsgd"
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.where}: {self.code} {self.message}"
+
+    def to_json(self) -> dict:
+        return {"code": self.code, "where": self.where, "message": self.message}
+
+
+def suppressed_codes(source_lines: list[str], lineno: int) -> frozenset[str]:
+    """Codes allowed at 1-based ``lineno``: a ``# repro: allow REPROxxx``
+    comment on the line itself or on the line directly above."""
+    codes: set[str] = set()
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(source_lines):
+            m = _ALLOW_RE.search(source_lines[ln - 1])
+            if m:
+                codes.update(c.strip() for c in m.group(1).split(","))
+    return frozenset(codes)
+
+
+def filter_suppressed(findings: list[Finding], sources: dict[str, list[str]]) -> list[Finding]:
+    """Drop findings whose ``path:line`` location carries an allow comment.
+
+    ``sources`` maps path -> source lines; findings anchored to unlisted
+    paths (or to trace labels) pass through unfiltered.
+    """
+    out = []
+    for f in findings:
+        path, _, line = f.where.rpartition(":")
+        if (path in sources and line.isdigit()
+                and f.code in suppressed_codes(sources[path], int(line))):
+            continue
+        out.append(f)
+    return out

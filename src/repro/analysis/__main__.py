@@ -1,0 +1,107 @@
+"""``python -m repro.analysis`` — run the three static-analysis passes.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis [--json ANALYSIS.json]
+        [--pass jaxpr|ast|vmem ...] [--quick]
+
+Exit status is non-zero iff any finding survives suppression.  The JSON
+report schema (validated in CI by ``benchmarks/check_analysis.py``)::
+
+    {"version": 1,
+     "passes": {"jaxpr": {"traces": N, "per_trace": {...}},
+                "ast":   {"files": N},
+                "vmem":  {"kernels": N, "table": [...]}},
+     "findings": [{"code": ..., "where": ..., "message": ...}],
+     "clean": true}
+"""
+# The jaxpr pass traces shard_map over a 4-device mesh; the fake-device
+# flag must land in the environment before jax is first imported, so the
+# pass modules are imported lazily inside main().
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+PASSES = ("jaxpr", "ast", "vmem")
+
+
+def _ensure_fake_devices(n: int = 4) -> None:
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if "jax" in sys.modules:
+        return  # too late to change device count; _require_devices() reports
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="three-pass static analysis of the sync surface")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the ANALYSIS.json report here")
+    ap.add_argument("--pass", dest="passes", action="append", choices=PASSES,
+                    metavar="|".join(PASSES), default=None,
+                    help="run only the named pass (repeatable; default: all)")
+    ap.add_argument("--quick", action="store_true",
+                    help="jaxpr pass: one method per codec family")
+    args = ap.parse_args(argv)
+    selected = tuple(args.passes) if args.passes else PASSES
+
+    _ensure_fake_devices()
+
+    from repro.analysis import Finding  # noqa: F401  (import-light root)
+
+    findings = []
+    passes: dict[str, dict] = {}
+
+    if "jaxpr" in selected:
+        from repro.analysis import jaxpr_lint
+
+        f, stats = jaxpr_lint.run_pass(quick=args.quick)
+        findings += f
+        passes["jaxpr"] = stats
+        print(f"[jaxpr] {stats['traces']} traces, {len(f)} finding(s)")
+
+    if "ast" in selected:
+        from repro.analysis import ast_lint
+
+        f, stats = ast_lint.run_pass()
+        findings += f
+        passes["ast"] = stats
+        print(f"[ast]   {stats['files']} files, {len(f)} finding(s)")
+
+    if "vmem" in selected:
+        from repro.analysis import vmem
+
+        f, table = vmem.run_pass()
+        findings += f
+        passes["vmem"] = {"kernels": len(table),
+                          "table": [e.to_json() for e in table]}
+        peak = max((e.vmem_bytes for e in table), default=0)
+        print(f"[vmem]  {len(table)} kernels, peak {peak} B, "
+              f"{len(f)} finding(s)")
+
+    for f in findings:
+        print(f"  {f}", file=sys.stderr)
+
+    report = {"version": 1, "passes": passes,
+              "findings": [f.to_json() for f in findings],
+              "clean": not findings}
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"report -> {args.json}")
+
+    if findings:
+        print(f"FAIL: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

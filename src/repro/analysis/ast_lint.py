@@ -1,0 +1,142 @@
+"""Pass 2 (``REPRO2xx``): AST linter for the repo's architectural rules.
+
+Rules (all honor the ``# repro: allow REPROxxx`` comment suppression):
+
+- **REPRO201** — no method-string dispatch inside the collective bodies
+  (``dist/sharded_codec.py``): comparing ``*.method`` against string
+  literals (``==``, ``!=``, ``in``) reintroduces exactly the branching the
+  codec registry removed; collective code must branch on the ``Codec``
+  interface (``chunkable``, ``state_extra``, …) only.
+- **REPRO202** — no bare ``pl.pallas_call`` outside ``kernels/``: every
+  kernel launch must live behind the ``kernels.ops`` wrappers that own
+  padding, dtype narrowing, and the interpret fallback.
+- **REPRO203** — every public wrapper in ``kernels/ops.py`` that takes an
+  ``interpret`` keyword must resolve it through ``_use_interpret`` (the
+  CPU/TPU dispatch every call site relies on).
+- **REPRO204** — no argless or literal-seeded ``jax.random.PRNGKey`` /
+  ``jax.random.key`` in library code (``src/``): a baked-in seed silently
+  correlates anything derived from it across callers; keys must flow in
+  from the caller (trace-geometry and dataset seeds carry an allow
+  comment stating why the constant is sound).
+
+The linter is plain ``ast`` — no jax import — so it runs anywhere, fast.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from . import Finding, suppressed_codes
+
+#: files whose bodies are collective wiring (REPRO201 scope)
+COLLECTIVE_MODULES = ("dist/sharded_codec.py",)
+
+#: directory whose modules may call pl.pallas_call directly (REPRO202)
+KERNELS_DIR = "kernels/"
+
+#: the kernel-wrapper module (REPRO203 scope)
+OPS_MODULE = "kernels/ops.py"
+
+
+def _is_method_attr(node: ast.AST) -> bool:
+    return isinstance(node, ast.Attribute) and node.attr == "method"
+
+
+def _is_str_const(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return True
+    return (isinstance(node, ast.Tuple | ast.List | ast.Set)
+            and all(_is_str_const(e) for e in node.elts))
+
+
+def _lint_tree(tree: ast.Module, relpath: str) -> list[tuple[str, int, str]]:
+    """Raw (code, lineno, message) hits for one parsed module."""
+    hits: list[tuple[str, int, str]] = []
+    in_collective = any(relpath.endswith(m) for m in COLLECTIVE_MODULES)
+    in_kernels = KERNELS_DIR in relpath
+    in_ops = relpath.endswith(OPS_MODULE)
+
+    for node in ast.walk(tree):
+        # REPRO201: cfg.method == "..." / cfg.method in ("...",) dispatch
+        if in_collective and isinstance(node, ast.Compare):
+            sides = [node.left] + list(node.comparators)
+            if any(_is_method_attr(s) for s in sides) and \
+                    any(_is_str_const(s) for s in sides):
+                hits.append((
+                    "REPRO201", node.lineno,
+                    "method-string comparison in a collective body; branch "
+                    "on the Codec interface (get_codec(...).<attr>) instead"))
+
+        # REPRO202: pl.pallas_call outside kernels/
+        if not in_kernels and isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Attribute) and fn.attr == "pallas_call":
+                hits.append((
+                    "REPRO202", node.lineno,
+                    "bare pl.pallas_call outside kernels/; launch through "
+                    "the kernels.ops wrappers (padding + interpret fallback)"))
+
+        # REPRO203: ops.py wrappers must dispatch through _use_interpret
+        if in_ops and isinstance(node, ast.FunctionDef):
+            takes_interpret = any(a.arg == "interpret"
+                                  for a in node.args.kwonlyargs + node.args.args)
+            if takes_interpret:
+                uses = any(isinstance(n, ast.Name) and n.id == "_use_interpret"
+                           for n in ast.walk(node))
+                if not uses:
+                    hits.append((
+                        "REPRO203", node.lineno,
+                        f"kernel wrapper {node.name}() takes interpret= but "
+                        "never resolves it via _use_interpret(); the CPU "
+                        "fallback dispatch is the wrapper contract"))
+
+        # REPRO204: argless/literal jax.random.PRNGKey / jax.random.key
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Attribute) and fn.attr in ("PRNGKey", "key"):
+                base = fn.value
+                if isinstance(base, ast.Attribute) and base.attr == "random":
+                    literal = (not node.args and not node.keywords) or (
+                        len(node.args) == 1
+                        and isinstance(node.args[0], ast.Constant))
+                    if literal:
+                        hits.append((
+                            "REPRO204", node.lineno,
+                            f"jax.random.{fn.attr} with a baked-in seed in "
+                            "library code; thread the key in from the caller"))
+    return hits
+
+
+def lint_source(source: str, relpath: str) -> list[Finding]:
+    """Lint one module's source; ``relpath`` selects the scoped rules."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("REPRO202", f"{relpath}:{e.lineno or 0}",
+                        f"unparseable module: {e.msg}")]
+    lines = source.splitlines()
+    out = []
+    for code, lineno, message in _lint_tree(tree, relpath):
+        if code in suppressed_codes(lines, lineno):
+            continue
+        out.append(Finding(code, f"{relpath}:{lineno}", message))
+    return out
+
+
+def lint_file(path: pathlib.Path, relpath: str | None = None) -> list[Finding]:
+    """Lint one file.  ``relpath`` overrides the scope key — the corpus
+    tests use it to make a fixture masquerade as e.g. a ``dist/`` module."""
+    rel = relpath if relpath is not None else str(path)
+    return lint_source(path.read_text(), rel)
+
+
+def run_pass(root: pathlib.Path | None = None):
+    """Lint every module under ``src/`` (library code only — tests and
+    benchmarks may seed keys and poke kernels at will)."""
+    if root is None:
+        root = pathlib.Path(__file__).resolve().parents[2]  # src/
+    findings: list[Finding] = []
+    files = sorted(root.rglob("*.py"))
+    for path in files:
+        findings += lint_file(path, str(path.relative_to(root.parent)))
+    return findings, {"files": len(files)}

@@ -1,0 +1,230 @@
+"""Pass 3 (``REPRO3xx``): static VMEM footprint of every Pallas kernel.
+
+Each ``kernels.ops`` wrapper is traced abstractly (``jax.eval_shape`` — no
+compilation, no execution) at representative shapes while ``pl.pallas_call``
+is shimmed to record its grid/BlockSpec/out_shape geometry and the operand
+avals it is applied to.  The footprint model is the standard double-buffered
+tiling estimate:
+
+- a *blocked* operand/result (a BlockSpec with a block shape) keeps two
+  tiles resident (the compute tile + the in-flight DMA tile): ``2 × block
+  bytes``;
+- an *unblocked* one (``memory_space=None`` — whole-operand residency, e.g.
+  codebooks, α rows, the orthogonalize factor) charges its full size;
+- per-kernel scratch shapes, when requested, are charged in full.
+
+The sum must stay under the per-kernel budget (default 4 MiB — a quarter of
+the ~16 MiB/core TPU VMEM, leaving room for semaphores, spills, and the
+next kernel's prologue).  Violations are ``REPRO301`` findings; the whole
+table lands in ``ANALYSIS.json`` so CI archives the footprint history.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from collections.abc import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import Finding
+
+#: default per-kernel budget: 4 MiB of ~16 MiB/core VMEM
+DEFAULT_BUDGET = 4 << 20
+
+#: per-wrapper overrides (bytes), for kernels allowed to run hotter
+BUDGETS: dict[str, int] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEstimate:
+    """Static VMEM geometry of one recorded ``pallas_call``."""
+
+    wrapper: str         # the ops.py entry point traced
+    kernel: str          # the kernel function handed to pallas_call
+    grid: tuple[int, ...]
+    operands: tuple[tuple[str, int], ...]  # (describe, resident bytes)
+    vmem_bytes: int
+    budget_bytes: int
+
+    def to_json(self) -> dict:
+        return {"wrapper": self.wrapper, "kernel": self.kernel,
+                "grid": list(self.grid),
+                "operands": [list(o) for o in self.operands],
+                "vmem_bytes": self.vmem_bytes,
+                "budget_bytes": self.budget_bytes}
+
+
+def _block_bytes(block_shape, aval) -> tuple[str, int]:
+    """(description, resident bytes) of one operand/result under its spec."""
+    itemsize = jnp.dtype(aval.dtype).itemsize
+    if block_shape is None:
+        n = math.prod(aval.shape) if aval.shape else 1
+        return f"full {tuple(aval.shape)} {aval.dtype}", n * itemsize
+    dims = tuple(1 if b is None else int(b) for b in block_shape)
+    return (f"block {dims} {aval.dtype} x2",
+            2 * math.prod(dims) * itemsize)
+
+
+def _as_list(x) -> list:
+    if x is None:
+        return []
+    return list(x) if isinstance(x, list | tuple) else [x]
+
+
+@contextlib.contextmanager
+def _record_pallas_calls(records: list):
+    """Swap ``pallas.pallas_call`` for a recording shim within the block.
+
+    The shim still builds the real traced call (abstract eval only under
+    ``jax.eval_shape``) but first captures the geometry + operand avals.
+    """
+    from jax.experimental import pallas as pl
+
+    real = pl.pallas_call
+
+    def spy(kernel, **kwargs):
+        inner = real(kernel, **kwargs)
+
+        def call(*args):
+            grid = kwargs.get("grid", ())
+            grid = (grid,) if isinstance(grid, int) else tuple(grid)
+            in_specs = _as_list(kwargs.get("in_specs"))
+            out_specs = _as_list(kwargs.get("out_specs"))
+            out_shape = _as_list(kwargs.get("out_shape"))
+            # a missing spec means whole-operand residency (no tiling)
+            in_specs += [None] * (len(args) - len(in_specs))
+            out_specs += [None] * (len(out_shape) - len(out_specs))
+            ops = []
+            for spec, a in zip(in_specs, args):
+                ops.append(_block_bytes(getattr(spec, "block_shape", None),
+                                        jax.api_util.shaped_abstractify(a)))
+            for spec, sds in zip(out_specs, out_shape):
+                ops.append(_block_bytes(getattr(spec, "block_shape", None), sds))
+            for scratch in _as_list(kwargs.get("scratch_shapes")):
+                n = math.prod(getattr(scratch, "shape", ()) or ())
+                item = jnp.dtype(getattr(scratch, "dtype", jnp.float32)).itemsize
+                ops.append((f"scratch {getattr(scratch, 'shape', ())}", n * item))
+            body = getattr(kernel, "func", kernel)  # unwrap functools.partial
+            records.append({
+                "kernel": getattr(body, "__name__", str(body)),
+                "grid": grid, "operands": tuple(ops),
+                "vmem_bytes": sum(b for _, b in ops)})
+            return inner(*args)
+
+        return call
+
+    pl.pallas_call = spy
+    try:
+        yield
+    finally:
+        pl.pallas_call = real
+
+
+def estimate(thunks: dict[str, Callable[[], object]],
+             budgets: dict[str, int] | None = None,
+             default_budget: int = DEFAULT_BUDGET,
+             ) -> tuple[list[Finding], list[KernelEstimate]]:
+    """Trace each named thunk, estimate every Pallas kernel it launches.
+
+    A thunk is a zero-argument callable that traces its wrapper abstractly
+    (``jax.eval_shape``); whatever ``pallas_call``\\ s fire during the trace
+    are attributed to that wrapper name.
+    """
+    budgets = {**BUDGETS, **(budgets or {})}
+    findings: list[Finding] = []
+    table: list[KernelEstimate] = []
+    for name, thunk in thunks.items():
+        records: list = []
+        with _record_pallas_calls(records):
+            thunk()
+        budget = budgets.get(name, default_budget)
+        for rec in records:
+            est = KernelEstimate(wrapper=name, kernel=rec["kernel"],
+                                 grid=rec["grid"], operands=rec["operands"],
+                                 vmem_bytes=rec["vmem_bytes"],
+                                 budget_bytes=budget)
+            table.append(est)
+            if est.vmem_bytes > budget:
+                detail = "; ".join(f"{d}={b}" for d, b in est.operands)
+                findings.append(Finding(
+                    "REPRO301", f"vmem:{name}/{est.kernel}",
+                    f"static VMEM footprint {est.vmem_bytes} B exceeds the "
+                    f"{budget} B budget (grid {est.grid}; {detail})"))
+        if not records:
+            findings.append(Finding(
+                "REPRO301", f"vmem:{name}",
+                "wrapper traced no pallas_call — estimator wiring is stale"))
+    return findings, table
+
+
+# ---------------------------------------------------------------------------
+# The repo's kernel surface at representative shapes
+# ---------------------------------------------------------------------------
+
+_N = 1 << 20          # one 4 MiB fp32 bucket
+_PEERS = 4
+_BITS = 3
+
+
+def default_thunks() -> dict[str, Callable[[], object]]:
+    """One abstract-trace thunk per public ``kernels.ops`` wrapper."""
+    from repro.core.quantizers import num_levels, packed_size
+    from repro.kernels import ops
+
+    f32 = jnp.float32
+    g = jax.ShapeDtypeStruct((_N,), f32)
+    codes = jax.ShapeDtypeStruct((_N,), jnp.uint8)
+    alpha = jax.ShapeDtypeStruct((1,), f32)
+    levels = jax.ShapeDtypeStruct((num_levels(_BITS) + 1,), f32)
+    words = jax.ShapeDtypeStruct((_PEERS, packed_size(_N, _BITS)), jnp.uint32)
+    alphas = jax.ShapeDtypeStruct((_PEERS,), f32)
+    plevels = jax.ShapeDtypeStruct((_PEERS, num_levels(_BITS) + 1), f32)
+    factor = jax.ShapeDtypeStruct((2048, 32), f32)
+    key = jax.random.key(0)  # repro: allow REPRO204 (abstract trace only)
+
+    class _S:
+        """Static-argument marker: baked into the closure, not traced
+        (``bits``/``n`` are ``static_argnames`` on the jitted wrappers)."""
+
+        def __init__(self, v):
+            self.v = v
+
+    def t(fn, *tmpl):
+        arrays = [a for a in tmpl if not isinstance(a, _S)]
+
+        def call(*traced):
+            it = iter(traced)
+            args = [a.v if isinstance(a, _S) else next(it) for a in tmpl]
+            return fn(*args, interpret=True)
+
+        return lambda: jax.eval_shape(call, *arrays)
+
+    bits, n = _S(_BITS), _S(_N)
+    return {
+        "uniform_encode": t(ops.uniform_encode, g, alpha, bits, key),
+        "uniform_decode": t(ops.uniform_decode, codes, alpha, bits),
+        "codebook_encode": t(ops.codebook_encode, g, levels, key),
+        "codebook_decode": t(ops.codebook_decode, codes, levels),
+        "uniform_encode_packed": t(ops.uniform_encode_packed, g, alpha, bits, key),
+        "codebook_encode_packed": t(ops.codebook_encode_packed, g, levels, bits, key),
+        "uniform_decode_reduce": t(ops.uniform_decode_reduce, words, alphas, n, bits),
+        "codebook_decode_reduce": t(ops.codebook_decode_reduce, words, plevels, n, bits),
+        "uniform_decode_rows": t(ops.uniform_decode_rows, words, alphas, n, bits),
+        "codebook_decode_rows": t(ops.codebook_decode_rows, words, plevels, n, bits),
+        "bucket_stats": t(ops.bucket_stats, g),
+        "ef_correct_stats": t(ops.ef_correct_stats, g, g),
+        "uniform_encode_pack": t(ops.uniform_encode_pack, g, alpha, bits, key),
+        "codebook_encode_pack": t(ops.codebook_encode_pack, g, levels, bits, key),
+        "uniform_encode_pack_residual": t(
+            ops.uniform_encode_pack_residual, g, alpha, bits, key),
+        "codebook_encode_pack_residual": t(
+            ops.codebook_encode_pack_residual, g, levels, bits, key),
+        "orthogonalize": t(ops.orthogonalize, factor),
+    }
+
+
+def run_pass() -> tuple[list[Finding], list[KernelEstimate]]:
+    """Estimate the whole registered kernel surface against its budgets."""
+    return estimate(default_thunks())

@@ -9,7 +9,6 @@ d_model <= 512, <= 4 experts) of the same family.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -18,7 +17,7 @@ class MoESpec:
     top_k: int
     capacity_factor: float = 1.25
     every: int = 1          # layer i has an MoE FFN iff i % every == every - 1
-    d_ff: Optional[int] = None  # per-expert hidden dim (defaults to ArchConfig.d_ff)
+    d_ff: int | None = None  # per-expert hidden dim (defaults to ArchConfig.d_ff)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,8 +46,8 @@ class ArchConfig:
     rope: str = "rope"              # rope | mrope | sincos | learned | none
     rope_theta: float = 10_000.0
     tie_embeddings: bool = True
-    moe: Optional[MoESpec] = None
-    ssm: Optional[SSMSpec] = None
+    moe: MoESpec | None = None
+    ssm: SSMSpec | None = None
     # hybrid: layer i is attention iff i % attn_period == attn_offset, else SSM.
     attn_period: int = 1
     attn_offset: int = 0
@@ -60,7 +59,7 @@ class ArchConfig:
     vlm_patches: int = 0
     vlm_vision_dim: int = 0
     # long-context variant: sliding-window attention (rolling KV cache).
-    sliding_window: Optional[int] = None
+    sliding_window: int | None = None
     # numerics / memory policy
     param_dtype: str = "float32"
     compute_dtype: str = "float32"

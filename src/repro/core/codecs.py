@@ -41,7 +41,7 @@ The quantizer family (``core.compressors.METHODS``) is registered at import;
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -169,6 +169,17 @@ def _levels_from_wire(words: jax.Array) -> jax.Array:
 # The codec interface
 # ---------------------------------------------------------------------------
 
+#: Collective ops one *bucketed* sync of a compressed codec may issue, by
+#: mode — the whole value proposition of the fused wire tensor (the count is
+#: bounded by the mode, never by the bucket or leaf count).  Declared here,
+#: on the registry, so ``repro.analysis.jaxpr_lint`` (REPRO101) and the
+#: benchmarks check every registered codec against the same numbers.
+COLLECTIVE_BUDGETS = {
+    "faithful": 1,       # one fused all-gather of every peer's wire
+    "two_phase": 2,      # all-to-all reduce-scatter + all-gather of chunk wires
+    "hierarchical": 3,   # intra-pod two-phase + the cross-pod faithful exchange
+}
+
 
 class Codec:
     """One registered compressor method (see the module docstring contracts).
@@ -188,6 +199,22 @@ class Codec:
     def plan(self, cfg: CompressorConfig, flat: jax.Array, stat, use_pallas: bool):
         """Data-dependent per-bucket plan (codebook fit); opaque to callers."""
         return None
+
+    # -- trace-time contracts ----------------------------------------------
+    def collective_budget(self, mode: str, n_buckets: int = 1) -> int:
+        """Max collective eqns one bucketed sync of this codec traces under
+        ``mode``.  Uncompressed paths (``dsgd``) fall back to one ``pmean``
+        per bucket; every compressed codec shares the fused-wire budgets in
+        :data:`COLLECTIVE_BUDGETS`.
+        """
+        if mode == "dsgd" or self.name == "dsgd":
+            return int(n_buckets)
+        try:
+            return COLLECTIVE_BUDGETS[mode]
+        except KeyError:
+            raise ValueError(
+                f"unknown sync mode {mode!r}; expected one of "
+                f"{tuple(COLLECTIVE_BUDGETS) + ('dsgd',)}") from None
 
     # -- static geometry ---------------------------------------------------
     def wire_words(self, cfg: CompressorConfig, n: int) -> int:
@@ -302,10 +329,21 @@ class QuantizerCodec(Codec):
 _REGISTRY: dict[str, Codec] = {}
 
 
-def register_codec(codec: Codec) -> Codec:
-    """Register ``codec`` under ``codec.name`` (last registration wins)."""
+def register_codec(codec: Codec, *, override: bool = False) -> Codec:
+    """Register ``codec`` under ``codec.name``.
+
+    A second registration of the same name raises — two plugins silently
+    shadowing each other is exactly the dispatch ambiguity the registry
+    exists to rule out.  Pass ``override=True`` to replace a registered
+    codec deliberately (tests, method shims).
+    """
     if not codec.name:
         raise ValueError("codec must set a non-empty name")
+    if not override and codec.name in _REGISTRY:
+        raise ValueError(
+            f"codec {codec.name!r} is already registered "
+            f"({type(_REGISTRY[codec.name]).__name__}); pass override=True "
+            "to replace it deliberately")
     _REGISTRY[codec.name] = codec
     return codec
 
@@ -349,27 +387,45 @@ def bucket_cfg_entry(cfg: CompressorConfig, entry) -> CompressorConfig:
 
     ``entry`` is an int (bit width under ``cfg.method``), a
     ``("method", value)`` pair (value = rank for rank-based codecs, bits
-    otherwise), or a full :class:`CompressorConfig`.
+    otherwise), or a full :class:`CompressorConfig`.  Malformed entries
+    raise ``ValueError`` naming the entry and the accepted forms.
     """
     import dataclasses
 
     if isinstance(entry, CompressorConfig):
         return entry
-    if isinstance(entry, (tuple, list)):
+    if isinstance(entry, tuple | list):
+        if len(entry) != 2 or not isinstance(entry[0], str):
+            raise ValueError(
+                f"malformed bits_plan entry {entry!r}: a sequence entry must "
+                "be a ('method', value) pair — e.g. ('tqsgd', 3) or "
+                "('powersgd', 2)")
         method, value = entry
-        method = str(method)
+        try:
+            value = int(value)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"malformed bits_plan entry {entry!r}: value must be an int "
+                f"(rank for rank-based codecs, bits otherwise), got "
+                f"{type(entry[1]).__name__}") from None
         if get_codec(method).rank_based:
-            if method == cfg.method and int(value) == cfg.rank:
+            if method == cfg.method and value == cfg.rank:
                 return cfg
-            return dataclasses.replace(cfg, method=method, rank=int(value))
-        if method == cfg.method and int(value) == cfg.bits:
+            return dataclasses.replace(cfg, method=method, rank=value)
+        if method == cfg.method and value == cfg.bits:
             return cfg
-        return dataclasses.replace(cfg, method=method, bits=int(value))
-    return cfg if int(entry) == cfg.bits else dataclasses.replace(cfg, bits=int(entry))
+        return dataclasses.replace(cfg, method=method, bits=value)
+    try:
+        entry = int(entry)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"malformed bits_plan entry {entry!r}: expected an int bit "
+            "width, a ('method', value) pair, or a CompressorConfig") from None
+    return cfg if entry == cfg.bits else dataclasses.replace(cfg, bits=entry)
 
 
 def bucket_cfgs(
-    cfg: CompressorConfig, n_buckets: int, plan: Optional[Sequence]
+    cfg: CompressorConfig, n_buckets: int, plan: Sequence | None
 ) -> list[CompressorConfig]:
     """Per-bucket compressor configs for a (possibly heterogeneous) plan.
 
@@ -385,7 +441,7 @@ def bucket_cfgs(
 
 
 def bucket_state_sizes(
-    cfg: CompressorConfig, sizes: Sequence[int], plan: Optional[Sequence] = None
+    cfg: CompressorConfig, sizes: Sequence[int], plan: Sequence | None = None
 ) -> list[int]:
     """EF/state row length per bucket: ``m + state_extra`` under the plan."""
     cfgs = bucket_cfgs(cfg, len(sizes), plan)

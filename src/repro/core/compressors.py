@@ -229,7 +229,7 @@ def compress_decompress(cfg: CompressorConfig, g: jax.Array, key: jax.Array) -> 
 
 def _is_plan_entry(entry) -> bool:
     """A per-bucket ``("method", value)`` plan pair (vs a bits list)."""
-    return (isinstance(entry, (list, tuple)) and len(entry) == 2
+    return (isinstance(entry, list | tuple) and len(entry) == 2
             and isinstance(entry[0], str))
 
 
@@ -252,8 +252,8 @@ def wire_bytes(cfg: CompressorConfig, n_elements, bits=None) -> int:
     fused wire tensor pays one codebook per bucket, which is exactly this
     sum.
     """
-    if isinstance(n_elements, (list, tuple)):
-        if isinstance(bits, (list, tuple)) and not _is_plan_entry(bits):
+    if isinstance(n_elements, list | tuple):
+        if isinstance(bits, list | tuple) and not _is_plan_entry(bits):
             if len(bits) != len(n_elements):
                 raise ValueError(f"{len(bits)} bit-widths vs {len(n_elements)} buckets")
             return sum(wire_bytes(cfg, n, b) for n, b in zip(n_elements, bits))
@@ -262,7 +262,7 @@ def wire_bytes(cfg: CompressorConfig, n_elements, bits=None) -> int:
         from .codecs import bucket_cfg_entry
 
         return wire_bytes(bucket_cfg_entry(cfg, bits), n_elements)
-    if isinstance(bits, (list, tuple)):
+    if isinstance(bits, list | tuple):
         raise ValueError("per-bucket bits need a matching list of bucket sizes")
     if cfg.method == "dsgd":
         return 4 * n_elements
@@ -282,7 +282,7 @@ def wire_bytes(cfg: CompressorConfig, n_elements, bits=None) -> int:
 
 def wire_bits_per_element(cfg: CompressorConfig, n_elements, bits=None) -> float:
     """Effective wire bits per element, metadata included (8·wire_bytes/n)."""
-    total = sum(n_elements) if isinstance(n_elements, (list, tuple)) else n_elements
+    total = sum(n_elements) if isinstance(n_elements, list | tuple) else n_elements
     return 8.0 * wire_bytes(cfg, n_elements, bits) / max(total, 1)
 
 

@@ -75,10 +75,8 @@ def fit_power_law_tail(
     """
     gabs = jnp.abs(g.reshape(-1)).astype(jnp.float32)
     g_max = jnp.max(gabs)
-    if approx_quantile:
-        g_min = approx_abs_quantile(gabs, gmin_quantile, num_bins=quantile_bins)
-    else:
-        g_min = jnp.quantile(gabs, gmin_quantile)
+    g_min = approx_abs_quantile(gabs, gmin_quantile, num_bins=quantile_bins) \
+        if approx_quantile else jnp.quantile(gabs, gmin_quantile)
     # Guard degenerate tensors (all zeros / constant): fall back to a tiny
     # positive g_min so downstream math stays finite.
     g_min = jnp.maximum(g_min, _EPS)

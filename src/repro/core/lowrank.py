@@ -77,6 +77,10 @@ def orthogonalize(p: jax.Array, use_pallas: bool) -> jax.Array:
 
 
 def _q_init(cols: int, r: int) -> jax.Array:
+    # Deliberately peer-identical: PowerSGD requires every worker to start
+    # the power iteration in the same random subspace so the gathered P/Q
+    # factors are averageable (and the cold-start wire is reproducible).
+    # repro: allow REPRO102, REPRO204 (shared Q0 init is the PowerSGD contract)
     return jax.random.normal(jax.random.key(_Q0_SEED), (cols, r), jnp.float32)
 
 

@@ -45,6 +45,7 @@ def make_mrope_positions(batch: int, seq: int, n_patches: int, grid: int = 16) -
 @partial(jax.jit, static_argnames=("cfg", "batch", "seq"))
 def lm_batch(cfg, seed: jax.Array, batch: int, seq: int) -> Batch:
     """One training batch for any zoo config."""
+    # repro: allow REPRO204 (the dataset IS the fixed stream; seed selects the batch)
     key = jax.random.fold_in(jax.random.key(0), seed)
     k_tok, k_extra = jax.random.split(key)
     tokens = _zipf_tokens(k_tok, (batch, seq), cfg.vocab)
@@ -88,6 +89,7 @@ def shapes_batch(
     samples get 10x amplified noise — the outliers that make gradients
     heavy-tailed (paper Fig. 1's regime)."""
     nc = templates.shape[0]
+    # repro: allow REPRO204 (the dataset IS the fixed stream; seed selects the batch)
     key = jax.random.fold_in(jax.random.key(1), seed)
     k_lab, k_noise, k_out = jax.random.split(key, 3)
     labels = jax.random.randint(k_lab, (batch,), 0, nc)

@@ -33,7 +33,7 @@ def _plan_entry(bits):
     """True for a ``("method", value)`` plan entry or a full config."""
     if isinstance(bits, CompressorConfig):
         return True
-    return (isinstance(bits, (tuple, list)) and len(bits) == 2
+    return (isinstance(bits, tuple | list) and len(bits) == 2
             and isinstance(bits[0], str))
 
 
@@ -55,8 +55,8 @@ def wire_bytes_per_device(cfg: CompressorConfig, n, shards: int, mode: str, bits
     an indivisible factor pair on the wire, so their two-phase cost is the
     full wire (tiled all-to-all rows, no phase-2 refinement).
     """
-    if isinstance(n, (list, tuple)):
-        bl = bits if isinstance(bits, (list, tuple)) and not _plan_entry(bits) \
+    if isinstance(n, list | tuple):
+        bl = bits if isinstance(bits, list | tuple) and not _plan_entry(bits) \
             else [bits] * len(n)
         if len(bl) != len(n):
             raise ValueError(f"{len(bl)} bit-widths vs {len(n)} buckets")
@@ -102,27 +102,28 @@ def decode_hbm_bytes(cfg: CompressorConfig, n, peers: int, fused: bool, bits=Non
     Both include the per-peer codebook reads.  ``n``/``bits`` may be
     per-bucket sequences (the adaptive fused wire format); the cost sums.
     """
-    if isinstance(n, (list, tuple)):
-        bl = bits if isinstance(bits, (list, tuple)) and not _plan_entry(bits) \
+    if isinstance(n, list | tuple):
+        bl = bits if isinstance(bits, list | tuple) and not _plan_entry(bits) \
             else [bits] * len(n)
         if len(bl) != len(n):
             raise ValueError(f"{len(bl)} bit-widths vs {len(n)} buckets")
         return sum(decode_hbm_bytes(cfg, nb, peers, fused, b) for nb, b in zip(n, bl))
-    from repro.core.quantizers import num_levels, packed_size
+    from repro.core.codecs import get_codec
 
     bcfg = _bucket_cfg(cfg, bits)
+    # The registry is the single source of truth for wire geometry: one
+    # (wire_words,) uint32 row per peer — packed codes + bitcast codebook
+    # for the quantizers, the bitcast factor pair for rank-based codecs
+    # (cross-checked against the traced collective operands in
+    # ``tests/test_analysis.py``).
+    words = 4.0 * peers * get_codec(bcfg.method).wire_words(bcfg, n)
     if bcfg.method not in METHODS:
         # Rank-based decode: read every peer's factor pair, reconstruct
         # (fused keeps the per-peer (n,) reconstructions in VMEM; unfused
         # writes + re-reads them before the mean).
-        from repro.core.codecs import get_codec
-
-        words = 4.0 * peers * get_codec(bcfg.method).wire_words(bcfg, n)
         if fused:
             return words + 4.0 * n
         return words + 2 * 4.0 * peers * n + 4.0 * n
-    b = bcfg.bits
-    words = 4.0 * peers * packed_size(n, b) + 4.0 * peers * (num_levels(b) + 1)
     if fused:
         return words + 4.0 * n
     return words + 2 * 4.0 * peers * n + 2 * 4.0 * peers * n + 4.0 * n
@@ -160,8 +161,8 @@ def encode_hbm_bytes(cfg: CompressorConfig, n, fused: bool, *, ef: bool = True,
     the EF/telemetry sweeps are in play).  ``n``/``bits`` may be per-bucket
     sequences (the heterogeneous adaptive wire); the cost sums.
     """
-    if isinstance(n, (list, tuple)):
-        bl = bits if isinstance(bits, (list, tuple)) and not _plan_entry(bits) \
+    if isinstance(n, list | tuple):
+        bl = bits if isinstance(bits, list | tuple) and not _plan_entry(bits) \
             else [bits] * len(n)
         if len(bl) != len(n):
             raise ValueError(f"{len(bl)} bit-widths vs {len(n)} buckets")
@@ -169,7 +170,7 @@ def encode_hbm_bytes(cfg: CompressorConfig, n, fused: bool, *, ef: bool = True,
                    for nb, b in zip(n, bl))
     from math import ceil, log2
 
-    from repro.core.quantizers import packed_size
+    from repro.core.codecs import get_codec
 
     bcfg = _bucket_cfg(cfg, bits)
     if bcfg.method not in METHODS:
@@ -177,8 +178,6 @@ def encode_hbm_bytes(cfg: CompressorConfig, n, fused: bool, *, ef: bool = True,
         # reads of the bucket, the factor-pair wire write, the own
         # reconstruction, and the residual write-back.  The factorization
         # is one jitted graph either way, so fused == unfused here.
-        from repro.core.codecs import get_codec
-
         words = 4.0 * get_codec(bcfg.method).wire_words(bcfg, n)
         total = 4.0 * n                      # stats/correct: read g
         if ef:
@@ -188,8 +187,9 @@ def encode_hbm_bytes(cfg: CompressorConfig, n, fused: bool, *, ef: bool = True,
         if ef:
             total += 4.0 * n                 # residual write-back
         return total
-    b = bcfg.bits
-    words = 4.0 * packed_size(n, b)
+    # packed code words only: the codebook rides the registry wire row
+    # (wire_words = packed + s + 1) but is written straight from VMEM
+    words = 4.0 * (get_codec(bcfg.method).wire_words(bcfg, n) - (bcfg.s + 1))
     if fused:
         total = 4.0 * n                      # ef_correct_stats: read g
         if ef:
@@ -199,10 +199,8 @@ def encode_hbm_bytes(cfg: CompressorConfig, n, fused: bool, *, ef: bool = True,
             total += 4.0 * n                 # ... write bucket-resident residual
         return total
     s = min(n, cfg.plan_sample) if cfg.plan_sample else n
-    if cfg.approx_gmin:
-        plan_pass = 4.0 * s * 3              # gather + 2 histogram passes
-    else:
-        plan_pass = 4.0 * s * (1 + 2 * max(ceil(log2(max(s, 2))), 1))  # gather + sort
+    plan_pass = 4.0 * s * 3 if cfg.approx_gmin \
+        else 4.0 * s * (1 + 2 * max(ceil(log2(max(s, 2))), 1))  # gather + hists/sort
     total = plan_pass + 4.0 * n + 1.0 * n + 1.0 * n + words   # encode + pack passes
     if adaptive:
         total += 4.0 * n                     # standalone telemetry stats sweep

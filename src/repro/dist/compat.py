@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import enum
 import inspect
-from typing import Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp

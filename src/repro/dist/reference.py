@@ -27,7 +27,7 @@ refactors that silently bias the mean fail tier-1.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +48,7 @@ def _in_keys(key, n: int) -> list:
     """Per-peer *incoming* key list: collectives normally receive one
     replicated key, but the hierarchical intra-pod phase hands each peer an
     already-folded key — accept both."""
-    return list(key) if isinstance(key, (list, tuple)) else [key] * n
+    return list(key) if isinstance(key, list | tuple) else [key] * n
 
 
 # ---------------------------------------------------------------------------
@@ -130,7 +130,7 @@ def hierarchical_mean(cfg: CompressorConfig, stacked: jax.Array, n_pod: int, key
 
 
 def _peer_stats(cfg: CompressorConfig, buckets: list, use_pallas: bool,
-                stats: Optional[list]) -> list:
+                stats: list | None) -> list:
     """Per-peer × per-bucket one-pass statistics tuples (computed from each
     peer's bucket row when not handed in): ``stats[i][b]``."""
     if stats is not None:
@@ -143,8 +143,8 @@ def _peer_stats(cfg: CompressorConfig, buckets: list, use_pallas: bool,
 
 def bucketed_faithful_ring_mean(
     cfg: CompressorConfig, buckets: list, key, use_pallas: bool = False,
-    bits: Optional[Sequence] = None, stats: Optional[list] = None,
-    aux: Optional[list] = None,
+    bits: Sequence | None = None, stats: list | None = None,
+    aux: list | None = None,
 ) -> tuple[list, list]:
     """``sc.bucketed_faithful_ring_mean`` over stacked (n, m_b) buckets.
     ``aux[b]`` (optional) stacks the per-peer codec aux tails (n, extra_b).
@@ -175,8 +175,8 @@ def bucketed_faithful_ring_mean(
 
 def bucketed_two_phase_mean(
     cfg: CompressorConfig, buckets: list, key, use_pallas: bool = False,
-    bits: Optional[Sequence] = None, stats: Optional[list] = None,
-    aux: Optional[list] = None,
+    bits: Sequence | None = None, stats: list | None = None,
+    aux: list | None = None,
 ) -> tuple[list, list]:
     """``sc.bucketed_two_phase_mean`` over stacked (n, m_b) buckets.
     Returns ``(mean_buckets, state_stacked)``."""
@@ -236,8 +236,8 @@ def bucketed_two_phase_mean(
 
 def bucketed_hierarchical_mean(
     cfg: CompressorConfig, buckets: list, n_pod: int, key, use_pallas: bool = False,
-    bits: Optional[Sequence] = None, stats: Optional[list] = None,
-    aux: Optional[list] = None,
+    bits: Sequence | None = None, stats: list | None = None,
+    aux: list | None = None,
 ) -> tuple[list, list]:
     """``sc.bucketed_hierarchical_mean``: intra-pod two-phase (keys folded by
     the *full* dp index), faithful pod-mean exchange across pods.  The EF

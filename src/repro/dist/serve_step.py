@@ -13,7 +13,7 @@ instead and need no margin).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -50,7 +50,7 @@ def make_serve_fns(
     cfg,
     mesh,
     logical: Any,
-    batch: Optional[Any],
+    batch: Any | None,
     B: int,
     T: int,
     *,
@@ -67,6 +67,7 @@ def make_serve_fns(
     """
     del batch  # structure comes from cfg; kept for call-site symmetry
     if params_like is None:
+        # repro: allow REPRO204 (eval_shape aval-only trace; value never used)
         params_like = jax.eval_shape(lambda: transformer.init_lm(jax.random.key(0), cfg)[0])
     pspecs = sharding.param_pspecs(logical, mesh, cfg.fsdp, params_like)
     rules = sharding.activation_rules(mesh, fsdp=cfg.fsdp)

@@ -71,7 +71,7 @@ a stream.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -122,7 +122,7 @@ def pack_dim(codes: jax.Array, dim: int, bits: int) -> jax.Array:
     return jnp.moveaxis(words.reshape(lead + (words.shape[-1],)), -1, dim)
 
 
-def unpack_dim(words: jax.Array, dim: int, bits: int, n: Optional[int] = None) -> jax.Array:
+def unpack_dim(words: jax.Array, dim: int, bits: int, n: int | None = None) -> jax.Array:
     """Inverse of :func:`pack_dim`; ``n`` recovers a non-multiple-of-32 axis."""
     moved = jnp.moveaxis(words, dim, -1)
     lead = moved.shape[:-1]
@@ -269,7 +269,7 @@ def faithful_ring_mean(
 
 
 def _bucket_cfgs(
-    cfg: CompressorConfig, n_buckets: int, bits: Optional[Sequence]
+    cfg: CompressorConfig, n_buckets: int, bits: Sequence | None
 ) -> list[CompressorConfig]:
     """Per-bucket compressor configs for a (possibly heterogeneous) plan.
 
@@ -285,7 +285,7 @@ def _state_row(resid: jax.Array, aux_new) -> jax.Array:
     return resid if aux_new is None else jnp.concatenate([resid, aux_new])
 
 
-def _bucket_aux(aux: Optional[list], b: int):
+def _bucket_aux(aux: list | None, b: int):
     return aux[b] if aux is not None else None
 
 
@@ -295,9 +295,9 @@ def bucketed_faithful_ring_mean(
     axis_name,
     key: jax.Array,
     use_pallas: bool = False,
-    bits: Optional[Sequence] = None,
-    stats: Optional[list] = None,
-    aux: Optional[list] = None,
+    bits: Sequence | None = None,
+    stats: list | None = None,
+    aux: list | None = None,
 ) -> tuple[list, list]:
     """Faithful ring mean over a bucket list with ONE all-gather total.
 
@@ -352,9 +352,9 @@ def bucketed_two_phase_mean(
     axis_name,
     key: jax.Array,
     use_pallas: bool = False,
-    bits: Optional[Sequence] = None,
-    stats: Optional[list] = None,
-    aux: Optional[list] = None,
+    bits: Sequence | None = None,
+    stats: list | None = None,
+    aux: list | None = None,
 ) -> tuple[list, list]:
     """Two-phase compressed mean over a bucket list: ONE all-to-all (phase 1)
     plus ONE all-gather (phase 2) for every bucket together.
@@ -449,9 +449,9 @@ def bucketed_hierarchical_mean(
     dp: tuple,
     key: jax.Array,
     use_pallas: bool = False,
-    bits: Optional[Sequence] = None,
-    stats: Optional[list] = None,
-    aux: Optional[list] = None,
+    bits: Sequence | None = None,
+    stats: list | None = None,
+    aux: list | None = None,
 ) -> tuple[list, list]:
     """Two-phase inside the innermost data axis, faithful exchange of the
     pod means across the leading pod axes — 3 collectives total.

@@ -24,7 +24,7 @@ the serve path installs the full table.
 from __future__ import annotations
 
 from contextlib import contextmanager
-from typing import Any, Optional
+from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -39,7 +39,7 @@ REPLICATED_AXES = ("layers", "embed", "seq")
 _ACTIVE: list[tuple[Mesh, dict]] = []
 
 
-def data_axes(mesh: Mesh) -> Optional[tuple]:
+def data_axes(mesh: Mesh) -> tuple | None:
     """Batch-parallel mesh axes, outermost first (``("pod", "data")`` …)."""
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     return axes or None
@@ -91,7 +91,7 @@ def _axis_group_size(mesh: Mesh, axes) -> int:
     return size
 
 
-def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
     """Constrain ``x``'s sharding by logical axis names (None = replicated).
 
     Identity outside an :func:`axis_rules` context, and per-dimension axes
@@ -119,7 +119,7 @@ def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _leaf_pspec(axes: tuple, shape: Optional[tuple], mesh: Mesh, fsdp: bool) -> P:
+def _leaf_pspec(axes: tuple, shape: tuple | None, mesh: Mesh, fsdp: bool) -> P:
     entries = []
     for dim, name in enumerate(axes):
         mapped = None
@@ -142,10 +142,8 @@ def param_pspecs(logical: Any, mesh: Mesh, fsdp: bool, params_like: Any = None) 
     """
     is_axes = lambda t: isinstance(t, tuple)
     axes_leaves, treedef = jax.tree.flatten(logical, is_leaf=is_axes)
-    if params_like is not None:
-        shape_leaves = [x.shape for x in jax.tree.leaves(params_like)]
-    else:
-        shape_leaves = [None] * len(axes_leaves)
+    shape_leaves = [x.shape for x in jax.tree.leaves(params_like)] \
+        if params_like is not None else [None] * len(axes_leaves)
     specs = [_leaf_pspec(a, s, mesh, fsdp) for a, s in zip(axes_leaves, shape_leaves)]
     return jax.tree.unflatten(treedef, specs)
 

@@ -35,7 +35,7 @@ is live at a time.  It is numerically equivalent to the plain schedule.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -95,8 +95,8 @@ class TrainStepConfig:
     compressor: CompressorConfig = dataclasses.field(default_factory=CompressorConfig)
     bucket_mb: float = 4.0
     error_feedback: bool = False
-    adaptive: Optional[AdaptiveConfig] = None
-    bits_plan: Optional[tuple[int, ...]] = None
+    adaptive: AdaptiveConfig | None = None
+    bits_plan: tuple[int, ...] | None = None
     metrics_gnorm: bool = True
 
     def __post_init__(self):
@@ -119,14 +119,15 @@ class TrainStepConfig:
                 raise ValueError("bits_plan targets the bucketed codec (bucket_mb > 0)")
             norm = []
             for b in self.bits_plan:
-                if isinstance(b, (tuple, list)):
+                if isinstance(b, tuple | list):
                     # method-aware plan entry: ("method", value) — value is
-                    # the rank for rank-based codecs, the bit width otherwise
-                    from repro.core.codecs import get_codec
+                    # the rank for rank-based codecs, the bit width otherwise.
+                    # The registry validates the shape, the method name, and
+                    # the value range with actionable messages.
+                    from repro.core.codecs import bucket_cfg_entry
 
-                    method, value = b
-                    get_codec(str(method))  # raises on unknown methods
-                    norm.append((str(method), int(value)))
+                    bucket_cfg_entry(self.compressor, b)
+                    norm.append((str(b[0]), int(b[1])))
                 else:
                     if not (1 <= int(b) <= 8):
                         raise ValueError("bits_plan entries must be in [1, 8]")
@@ -494,6 +495,7 @@ def make_train_step(
     initialized with :func:`init_telemetry_state`.
     """
     if params_like is None:
+        # repro: allow REPRO204 (eval_shape aval-only trace; value never used)
         params_like = jax.eval_shape(lambda: transformer.init_lm(jax.random.key(0), cfg)[0])
     if opt_state_like is None:
         opt_state_like = jax.eval_shape(opt.init, params_like)

@@ -161,7 +161,9 @@ def bucket_stats_scatter(g: jax.Array):
     w = (S.LOG2_HI - S.LOG2_LO) / S.NUM_BINS
     b = jnp.clip(jnp.floor((lnab / jnp.log(2.0) - S.LOG2_LO) / w),
                  0.0, S.NUM_BINS - 1.0).astype(jnp.int32)
+    # repro: allow REPRO104 (counts sum exact 1.0s — order-free; see above)
     counts = jnp.zeros((S.NUM_BINS,), jnp.float32).at[b].add(1.0)
+    # repro: allow REPRO104 (last-bit slack documented in the EMA contract)
     log_sums = jnp.zeros((S.NUM_BINS,), jnp.float32).at[b].add(lnab)
     return counts, log_sums, jnp.max(gabs), jnp.sum(flat), jnp.sum(flat * flat)
 

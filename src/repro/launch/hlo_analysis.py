@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
@@ -65,7 +64,7 @@ _COLLECTIVES = {
 }
 
 
-def _shape_elems_bytes(ty: str) -> Tuple[int, int]:
+def _shape_elems_bytes(ty: str) -> tuple[int, int]:
     elems = 0
     nbytes = 0
     for dt, dims in _SHAPE.findall(ty):
@@ -91,7 +90,7 @@ def _shape_dims(ty: str) -> list[int]:
 class Cost:
     flops: float = 0.0
     bytes: float = 0.0
-    coll: Optional[Dict[str, float]] = None
+    coll: dict[str, float] | None = None
 
     def __post_init__(self):
         if self.coll is None:
@@ -107,11 +106,11 @@ class Cost:
 class HloModule:
     def __init__(self, text: str, default_group: int):
         self.default_group = default_group
-        self.computations: Dict[str, list] = {}
-        self.entry: Optional[str] = None
+        self.computations: dict[str, list] = {}
+        self.entry: str | None = None
         self._parse(text)
-        self._memo: Dict[str, Cost] = {}
-        self._trip_memo: Dict[str, int] = {}
+        self._memo: dict[str, Cost] = {}
+        self._trip_memo: dict[str, int] = {}
 
     def _parse(self, text: str):
         cur = None
@@ -151,7 +150,7 @@ class HloModule:
         """Operand sublist of an instruction line (drop attrs/metadata)."""
         return args.split(")", 1)[0]
 
-    def _lhs_dims(self, args: str, symbols: Dict[str, str]) -> list:
+    def _lhs_dims(self, args: str, symbols: dict[str, str]) -> list:
         """Dims of the first (lhs) operand.
 
         Newer HLO text carries inline operand types ("f32[64,128]{1,0} %x");
@@ -163,7 +162,7 @@ class HloModule:
         lhs_name = operands.split(",")[0].strip().lstrip("%")
         return _shape_dims(symbols.get(lhs_name, ""))
 
-    def _operand_bytes(self, args: str, symbols: Dict[str, str]) -> int:
+    def _operand_bytes(self, args: str, symbols: dict[str, str]) -> int:
         operands = self._operand_list(args)
         if _SHAPE.search(operands):
             return _shape_elems_bytes(operands)[1]
@@ -172,7 +171,7 @@ class HloModule:
             for a in operands.split(",")
         )
 
-    def _dot_flops(self, line: str, ty: str, args: str, symbols: Dict[str, str]) -> float:
+    def _dot_flops(self, line: str, ty: str, args: str, symbols: dict[str, str]) -> float:
         out_elems, _ = _shape_elems_bytes(ty)
         m = _LHS_CDIMS.search(line)
         contracted = 1
@@ -183,7 +182,7 @@ class HloModule:
                     contracted *= dims[int(idx)]
         return 2.0 * out_elems * contracted
 
-    def _collective_bytes(self, op: str, line: str, ty: str) -> Tuple[str, float]:
+    def _collective_bytes(self, op: str, line: str, ty: str) -> tuple[str, float]:
         _, nbytes = _shape_elems_bytes(ty)
         n = self.default_group
         m = _GROUPS_IOTA.search(line)
@@ -212,7 +211,7 @@ class HloModule:
             return self._memo[comp_name]
         total = Cost()
         self._memo[comp_name] = total  # guard recursion
-        symbols: Dict[str, str] = {}
+        symbols: dict[str, str] = {}
         for line in self.computations.get(comp_name, ()):
             m = _INSTR.match(line)
             if not m:

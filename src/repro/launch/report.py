@@ -5,6 +5,7 @@ Usage:  PYTHONPATH=src python -m repro.launch.report [--dir runs/dryrun]
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import pathlib
 
@@ -22,10 +23,8 @@ def load(dirpath: pathlib.Path, canonical: bool = True):
         is_canon = len(parts) == 3 and parts[2] in ("16x16", "2x16x16")
         if canonical != is_canon:
             continue
-        try:
+        with contextlib.suppress(Exception):
             recs.append(json.loads(f.read_text()))
-        except Exception:
-            pass
     return recs
 
 

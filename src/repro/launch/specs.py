@@ -23,6 +23,7 @@ def abstract_init(cfg: ArchConfig) -> tuple[Any, Any]:
         box["la"] = la
         return p
 
+    # repro: allow REPRO204 (eval_shape aval-only trace; value never used)
     shapes = jax.eval_shape(f, jax.random.key(0))
     return shapes, box["la"]
 

@@ -76,6 +76,7 @@ def main(argv=None) -> int:
     print(f"arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"sync={args.sync} method={args.method} bits={args.bits}")
 
+    # repro: allow REPRO204 (CLI entry point: the reproducible demo seed)
     params, logical = init_lm(jax.random.key(0), cfg)
     opt = get_optimizer(args.optimizer, lr=args.lr) if args.optimizer == "momentum_sgd" else get_optimizer(args.optimizer)
     acfg = None

@@ -12,7 +12,7 @@ cache slots and no unrotation is needed.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +69,7 @@ def flash_attention(
     v: jax.Array,
     *,
     causal: bool = True,
-    window: Optional[int] = None,
+    window: int | None = None,
     q_chunk: int = 1024,
     kv_chunk: int = 1024,
 ) -> jax.Array:
@@ -139,7 +139,7 @@ def attention_forward(
     positions: jax.Array,
     *,
     causal: bool = True,
-    window: Optional[int] = None,
+    window: int | None = None,
 ) -> jax.Array:
     """Full-sequence self-attention (training / prefill)."""
     dh = cfg.resolved_head_dim
@@ -155,7 +155,7 @@ def attention_forward(
     return out.reshape(x.shape[:-1] + (cfg.num_heads * dh,)) @ p["wo"]
 
 
-def attention_prefill(cfg, p, x, positions, *, window=None, capacity: Optional[int] = None):
+def attention_prefill(cfg, p, x, positions, *, window=None, capacity: int | None = None):
     """Prefill: returns (y, KVCache with rotated keys).
 
     ``capacity`` > seq_len leaves room for subsequent decode steps (decode
@@ -187,7 +187,7 @@ def attention_decode(
     cache: KVCache,
     position: jax.Array,     # scalar int32: absolute position of the new token
     *,
-    window: Optional[int] = None,
+    window: int | None = None,
 ) -> tuple[jax.Array, KVCache]:
     dh = cfg.resolved_head_dim
     b = x.shape[0]

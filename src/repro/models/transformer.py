@@ -15,7 +15,7 @@ Design:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -75,10 +75,8 @@ def _sublayer_init(key, cfg, desc: SubDesc):
     ks = jax.random.split(key, 6)
     p, la = {}, {}
     p["ln1"], la["ln1"] = norm_init(cfg, cfg.d_model)
-    if desc.mixer == "attn":
-        p["mixer"], la["mixer"] = attn_init(ks[0], cfg, cfg.d_model)
-    else:
-        p["mixer"], la["mixer"] = ssm_init(ks[0], cfg, cfg.d_model)
+    mixer_init = attn_init if desc.mixer == "attn" else ssm_init
+    p["mixer"], la["mixer"] = mixer_init(ks[0], cfg, cfg.d_model)
     if desc.cross:
         p["lnx"], la["lnx"] = norm_init(cfg, cfg.d_model)
         p["cross"], la["cross"] = attn_init(ks[2], cfg, cfg.d_model, cross=True)
@@ -331,9 +329,9 @@ def chunked_xent_with(cfg, params_for_head, hidden, labels, chunk: int = 512):
 class Batch(NamedTuple):
     tokens: jax.Array                      # (B, S) int32
     labels: jax.Array                      # (B, S) int32, -1 = masked
-    positions: Optional[jax.Array] = None  # (B,S) or (3,B,S) for mrope
-    patches: Optional[jax.Array] = None    # (B, P, vdim) VLM patch embeddings
-    frames: Optional[jax.Array] = None     # (B, enc_seq, D) audio frames
+    positions: jax.Array | None = None  # (B,S) or (3,B,S) for mrope
+    patches: jax.Array | None = None    # (B, P, vdim) VLM patch embeddings
+    frames: jax.Array | None = None     # (B, enc_seq, D) audio frames
 
 
 def _positions_for(cfg, batch: Batch):
@@ -501,8 +499,6 @@ def init_caches(cfg, batch: int, cache_len: int):
             return kv()
         return init_ssm_state(cfg, batch, jnp.float32)
 
-    if len(descs) == 1:
-        unit_cache = one(descs[0])
-    else:
-        unit_cache = {f"sub{j}": one(d) for j, d in enumerate(descs)}
+    unit_cache = one(descs[0]) if len(descs) == 1 \
+        else {f"sub{j}": one(d) for j, d in enumerate(descs)}
     return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (units,) + x.shape) if hasattr(x, "shape") else x, unit_cache)

@@ -6,7 +6,8 @@ pytree, so FSDP-sharded params get FSDP-sharded optimizer state for free.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from collections.abc import Callable
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

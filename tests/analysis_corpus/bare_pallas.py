@@ -1,0 +1,7 @@
+"""REPRO202 fixture: a bare ``pallas_call`` launch outside ``kernels/``."""
+from jax.experimental import pallas as pl
+
+
+def sneaky_launch(kernel, x, out_shape):
+    # bypasses the ops wrappers: no padding, no interpret fallback
+    return pl.pallas_call(kernel, out_shape=out_shape)(x)

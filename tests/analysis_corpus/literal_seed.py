@@ -1,0 +1,11 @@
+"""REPRO204 fixture: baked-in PRNG seeds in library code."""
+import jax
+
+
+def make_noise(shape):
+    key = jax.random.key(42)
+    return jax.random.normal(key, shape)
+
+
+def legacy_noise(shape):
+    return jax.random.normal(jax.random.PRNGKey(0), shape)

@@ -1,0 +1,13 @@
+"""REPRO201 fixture: method-string dispatch inside a collective body.
+
+Linted with a ``dist/sharded_codec.py`` relpath by ``tests/test_analysis.py``
+so the path-scoped rule arms; never imported.
+"""
+
+
+def reduce_bucket(cfg, rows):
+    if cfg.method == "qsgd":  # the branching the codec registry outlawed
+        return rows.sum(0)
+    if cfg.method in ("tqsgd", "tnqsgd"):
+        return rows.mean(0)
+    return rows[0]

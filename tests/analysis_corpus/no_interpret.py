@@ -1,0 +1,8 @@
+"""REPRO203 fixture: an ops-style kernel wrapper that accepts ``interpret=``
+but never resolves it through ``_use_interpret`` (linted as
+``kernels/ops.py``)."""
+
+
+def fancy_encode(x, bits, *, interpret=None):
+    interpret = False if interpret is None else interpret  # wrong: ignores env dispatch
+    return x, bits, interpret

@@ -1,0 +1,10 @@
+"""Suppression round-trip fixture: the ``literal_seed.py`` pattern carrying
+the allow comment — the linter must come back clean, and stripping the
+comment must re-arm the rule."""
+import jax
+
+
+def make_noise(shape):
+    # repro: allow REPRO204 (fixture: documented constant trace seed)
+    key = jax.random.key(42)
+    return jax.random.normal(key, shape)

@@ -14,19 +14,19 @@ runtime deps) a derandomized "ci" profile registers here and activates under
 reproducible across CI runs instead of sampling fresh examples per run.
 Local runs keep hypothesis's default randomized profile.
 """
+import contextlib
 import os
 
 import pytest
 
-try:  # hypothesis ships via the dev extra only; tier-1 must run without it
+# hypothesis ships via the dev extra only; tier-1 must run without it
+with contextlib.suppress(ImportError):
     from hypothesis import settings as _hyp_settings
 
     _hyp_settings.register_profile("ci", derandomize=True, deadline=None,
                                    print_blob=True)
     if os.environ.get("CI"):
         _hyp_settings.load_profile("ci")
-except ImportError:
-    pass
 
 
 def pytest_addoption(parser):

@@ -1,0 +1,90 @@
+"""Codec-registry error paths: unknown lookups, duplicate registration,
+malformed ``bits_plan`` entries — each must raise with a message that names
+the offender and says what to do instead."""
+import pytest
+
+from repro.core.codecs import (COLLECTIVE_BUDGETS, Codec, bucket_cfg_entry,
+                               bucket_cfgs, get_codec, known_methods,
+                               register_codec)
+from repro.core.compressors import CompressorConfig
+from repro.dist.train_step import TrainStepConfig
+
+
+def test_get_codec_unknown_lists_known():
+    with pytest.raises(KeyError) as e:
+        get_codec("fp8")
+    msg = str(e.value)
+    assert "fp8" in msg
+    for m in known_methods():
+        assert m in msg  # the fix is right there in the message
+
+
+def test_register_duplicate_raises_then_override_replaces():
+    class Shadow(Codec):
+        name = "tqsgd"
+
+    original = get_codec("tqsgd")
+    with pytest.raises(ValueError) as e:
+        register_codec(Shadow())
+    msg = str(e.value)
+    assert "tqsgd" in msg and "override=True" in msg
+    assert type(original).__name__ in msg  # names the codec being shadowed
+    assert get_codec("tqsgd") is original  # failed registration is a no-op
+    try:
+        register_codec(Shadow(), override=True)
+        assert isinstance(get_codec("tqsgd"), Shadow)
+    finally:
+        register_codec(original, override=True)
+    assert get_codec("tqsgd") is original
+
+
+def test_register_unnamed_codec_rejected():
+    with pytest.raises(ValueError, match="non-empty name"):
+        register_codec(Codec())
+
+
+def test_collective_budget_unknown_mode_lists_modes():
+    with pytest.raises(ValueError) as e:
+        get_codec("tqsgd").collective_budget("ring")
+    msg = str(e.value)
+    assert "ring" in msg
+    for mode in (*COLLECTIVE_BUDGETS, "dsgd"):
+        assert mode in msg
+
+
+@pytest.mark.parametrize("entry, hint", [
+    (("tqsgd", 3, 1), "pair"),            # wrong arity
+    ((3, "tqsgd"), "pair"),               # method not first
+    (("tqsgd", "three"), "must be an int"),
+    (object(), "expected an int"),
+    ("tqsgd", "expected an int"),         # bare method name, no value
+])
+def test_malformed_bits_plan_entries(entry, hint):
+    cfg = CompressorConfig(method="tqsgd", bits=3)
+    with pytest.raises(ValueError, match=hint) as e:
+        bucket_cfg_entry(cfg, entry)
+    assert "bits_plan entry" in str(e.value)
+
+
+def test_bits_plan_unknown_method_surfaces_registry_error():
+    cfg = CompressorConfig(method="tqsgd", bits=3)
+    with pytest.raises(KeyError, match="fp8"):
+        bucket_cfg_entry(cfg, ("fp8", 3))
+
+
+def test_bucket_cfgs_length_mismatch():
+    cfg = CompressorConfig(method="tqsgd", bits=3)
+    with pytest.raises(ValueError, match="2 entries for 3 buckets"):
+        bucket_cfgs(cfg, 3, (2, 3))
+
+
+def test_train_step_config_validates_plan_entries():
+    with pytest.raises(ValueError, match="bits_plan entry"):
+        TrainStepConfig(sync="two_phase", bits_plan=(("tqsgd", "x"),))
+    with pytest.raises(ValueError, match=r"\[1, 8\]"):
+        TrainStepConfig(sync="two_phase", bits_plan=(0,))
+    with pytest.raises(KeyError, match="fp8"):
+        TrainStepConfig(sync="two_phase", bits_plan=(("fp8", 3),))
+    # well-formed mixed plans normalize to hashable (str, int) tuples
+    ts = TrainStepConfig(sync="two_phase", bits_plan=(("powersgd", 2), 3))
+    assert ts.bits_plan == (("powersgd", 2), 3)

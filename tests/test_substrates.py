@@ -7,7 +7,7 @@ import pytest
 from repro.checkpoint.io import latest_step, load_checkpoint, save_checkpoint
 from repro.configs import ARCHS, INPUT_SHAPES, get_config, get_shape, reduced, variant_for_shape
 from repro.data.synthetic import client_batches, lm_batch, make_templates, shapes_batch
-from repro.launch.specs import abstract_batch, abstract_init, count_active_params, count_params
+from repro.launch.specs import abstract_init, count_active_params, count_params
 from repro.optim.optimizers import adamw, momentum_sgd
 
 
