@@ -1,0 +1,144 @@
+"""Validate the OBS.json summary ``python -m repro.obs report --json`` writes.
+
+CI runs this right after the obs smoke train (5 steps with ``--obs-dir``) so
+a malformed summary, an empty metrics stream, or an in-graph metric landing
+outside its physical range fails the job instead of archiving garbage.
+
+Schema (produced by ``repro.obs.report.summarize``): ``{"version": 1,
+"n_events": N, "n_steps": N, "threshold": x, "buckets": [{"bucket": b,
+"bits": n, "rank": n, "alpha": x, "clip_frac": x, "ef_norm": x,
+"wire_bytes": x, "realized_mse": x, "predicted_mse": x, "ratio": x|null,
+"flagged": bool}], "phases": [{"name": str, "count": N, "total_s": x,
+"mean_s": x, "max_s": x}], "drift": [...], "flagged": [b...]}``.
+
+Guards:
+
+- at least one metrics step and one bucket made it into the summary;
+- per bucket: ``bits`` in [0, 32], ``wire_bytes > 0``, ``clip_frac`` in
+  [0, 1], ``realized_mse >= 0``, ``predicted_mse >= 0``, all finite;
+- ``ratio`` is consistent with realized/predicted and ``flagged`` with
+  ``ratio > threshold``; the top-level ``flagged`` list matches the rows;
+- predicted-vs-realized sanity: at least one bucket carries a positive
+  prediction whose realized/predicted ratio lies in [1e-3, 1e3] — the
+  error model and the measurement are at least on the same planet;
+- phase rows have positive counts and non-negative durations.
+
+Usage: ``python -m benchmarks.check_obs OBS.json [more.json ...]``.  Exits
+non-zero listing every violation.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import sys
+
+_BUCKET_FIELDS = ("bits", "rank", "alpha", "clip_frac", "ef_norm",
+                  "wire_bytes", "realized_mse", "predicted_mse")
+_SANITY_LO, _SANITY_HI = 1e-3, 1e3
+
+
+def _is_num(x) -> bool:
+    return isinstance(x, int | float) and not isinstance(x, bool)
+
+
+def check_summary(summary, errors: list[str]) -> int:
+    """Schema + guard checks; returns the number of checks performed."""
+    n = 0
+
+    def req(cond: bool, msg: str) -> None:
+        nonlocal n
+        n += 1
+        if not cond:
+            errors.append(msg)
+
+    req(isinstance(summary, dict), "top level is not an object")
+    if not isinstance(summary, dict):
+        return n
+    req(summary.get("version") == 1,
+        f"version must be 1, got {summary.get('version')!r}")
+    req(_is_num(summary.get("n_steps")) and summary.get("n_steps", 0) >= 1,
+        "n_steps must be >= 1 (no metrics events made it into the summary)")
+    req(_is_num(summary.get("threshold")) and summary.get("threshold", 0) > 0,
+        "threshold must be a positive number")
+    threshold = summary.get("threshold", 0)
+    buckets = summary.get("buckets")
+    req(isinstance(buckets, list) and buckets, "buckets must be a non-empty list")
+    sane = 0
+    flagged_rows = []
+    for row in buckets or []:
+        if not isinstance(row, dict):
+            req(False, f"bucket row is not an object: {row!r}")
+            continue
+        b = row.get("bucket")
+        where = f"bucket {b}"
+        for f in _BUCKET_FIELDS:
+            req(_is_num(row.get(f)) and math.isfinite(row.get(f, math.nan)),
+                f"{where}: {f} must be a finite number, got {row.get(f)!r}")
+        if not all(_is_num(row.get(f)) for f in _BUCKET_FIELDS):
+            continue
+        req(0 <= row["bits"] <= 32, f"{where}: bits {row['bits']} outside [0, 32]")
+        req(row["rank"] >= 0, f"{where}: negative rank")
+        req(row["wire_bytes"] > 0, f"{where}: wire_bytes must be positive")
+        req(0.0 <= row["clip_frac"] <= 1.0,
+            f"{where}: clip_frac {row['clip_frac']} outside [0, 1]")
+        req(row["realized_mse"] >= 0.0, f"{where}: negative realized_mse")
+        req(row["predicted_mse"] >= 0.0, f"{where}: negative predicted_mse")
+        req(row["ef_norm"] >= 0.0, f"{where}: negative ef_norm")
+        ratio = row.get("ratio")
+        if row["predicted_mse"] > 0:
+            want = row["realized_mse"] / row["predicted_mse"]
+            req(_is_num(ratio) and abs(ratio - want) <= 1e-6 * max(1.0, want),
+                f"{where}: ratio {ratio!r} inconsistent with realized/predicted {want}")
+            if _is_num(ratio) and _SANITY_LO <= ratio <= _SANITY_HI:
+                sane += 1
+        else:
+            req(ratio is None, f"{where}: ratio must be null without a prediction")
+        want_flag = bool(_is_num(ratio) and ratio > threshold)
+        req(row.get("flagged") == want_flag,
+            f"{where}: flagged={row.get('flagged')!r} disagrees with "
+            f"ratio {ratio!r} vs threshold {threshold}")
+        if row.get("flagged"):
+            flagged_rows.append(b)
+    req(summary.get("flagged") == flagged_rows,
+        f"top-level flagged {summary.get('flagged')!r} disagrees with the "
+        f"rows ({flagged_rows})")
+    req(sane >= 1,
+        f"predicted-vs-realized sanity: no bucket with a positive prediction "
+        f"has realized/predicted within [{_SANITY_LO:g}, {_SANITY_HI:g}]")
+    for p in summary.get("phases", []) if isinstance(summary.get("phases"), list) else ():
+        req(isinstance(p, dict) and isinstance(p.get("name"), str)
+            and _is_num(p.get("count")) and p.get("count", 0) >= 1
+            and all(_is_num(p.get(k)) and p.get(k, -1) >= 0
+                    for k in ("total_s", "mean_s", "max_s")),
+            f"phase row malformed: {p!r}")
+    return n
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        summary = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable: {e}"]
+    n = check_summary(summary, errors)
+    if not errors:
+        print(f"{path}: OK ({n} checks)")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("usage: check_obs.py OBS.json [...]", file=sys.stderr)
+        return 2
+    failed = False
+    for arg in argv:
+        for msg in check_file(pathlib.Path(arg)):
+            failed = True
+            print(f"{arg}: FAIL: {msg}", file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

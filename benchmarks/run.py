@@ -41,7 +41,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (
         adaptive_bench, collectives_bench, fig1_grad_density, fig3_accuracy, fig4_tradeoff,
-        kernel_bench, lowrank_bench, quant_error,
+        kernel_bench, lowrank_bench, obs_bench, quant_error,
     )
 
     suites = {"adaptive": adaptive_bench.main} if args.adaptive else {
@@ -49,6 +49,7 @@ def main(argv=None) -> int:
         "kernels": kernel_bench.main,
         "collectives": collectives_bench.main,
         "lowrank": lowrank_bench.main,
+        "obs": obs_bench.main,
         "fig1_grad_density": fig1_grad_density.main,
         "fig3_accuracy": fig3_accuracy.main,
         "fig4_tradeoff": fig4_tradeoff.main,

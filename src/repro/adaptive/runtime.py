@@ -42,10 +42,25 @@ class AdaptiveStepper:
     The current plan is exposed as ``stepper.plan`` (a
     :class:`~repro.adaptive.controller.BitPlan`), ``None`` until the first
     replan — before that the uniform ``ts.compressor.bits`` plan runs.
+
+    Observability hooks (both optional, keyword-only): ``obs`` is a
+    :class:`repro.obs.SpanRecorder` — the replan path (telemetry merge +
+    tail fit + allocation, the host-side stall candidate) runs under an
+    ``adaptive.replan`` span; ``drift`` is a
+    :class:`repro.obs.DriftMonitor` fed the freshly estimated per-bucket
+    tails at every replan, so a Hill estimate railing out of the power-law
+    regime raises a structured warning the moment the controller would
+    have consumed it.
     """
 
+    # class-level defaults so stepper shells built without __init__ (the
+    # stubbed-builder tests) still replan cleanly
+    obs = None
+    drift = None
+
     def __init__(self, cfg, mesh, logical, opt, ts: TrainStepConfig, batch0,
-                 opt_state_like: Any = None, params_like: Any = None):
+                 opt_state_like: Any = None, params_like: Any = None,
+                 *, obs: Any = None, drift: Any = None):
         if ts.adaptive is None:
             raise ValueError("AdaptiveStepper needs TrainStepConfig.adaptive set")
         if params_like is None:
@@ -59,6 +74,7 @@ class AdaptiveStepper:
             ts = dataclasses.replace(
                 ts, compressor=dataclasses.replace(ts.compressor, approx_gmin=True))
         self.ts = ts
+        self.obs, self.drift = obs, drift
         self.cfg, self.mesh, self.logical, self.opt = cfg, mesh, logical, opt
         self.batch0 = batch0
         self.opt_state_like = opt_state_like
@@ -98,6 +114,12 @@ class AdaptiveStepper:
         re-solve bits, and adopt the new plan only past the hysteresis
         margin (the first replan away from the uniform bootstrap always
         adopts — there is nothing compiled worth protecting yet)."""
+        if self.obs is not None:
+            with self.obs.span("adaptive.replan"):
+                return self._replan(tstate)
+        return self._replan(tstate)
+
+    def _replan(self, tstate: Any) -> BitPlan:
         acfg = self.ts.adaptive
         merged = telemetry.aggregate_peers(jax.device_get(tstate))
         if float(merged.steps) < acfg.warmup_steps:
@@ -106,6 +128,8 @@ class AdaptiveStepper:
         tails = telemetry.estimate_tails(merged, gmin_quantile=acfg.gmin_quantile)
         dens = telemetry.estimate_densities(merged)
         self.tails = tails
+        if self.drift is not None:
+            self.drift.check_tails(tails, step=int(merged.steps))
         plan = allocate_bits(tails, self.sizes, self.budget, self.ts.compressor,
                              dens=dens, min_bits=acfg.min_bits, max_bits=acfg.max_bits,
                              alpha_iters=self.ts.compressor.alpha_iters)

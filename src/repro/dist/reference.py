@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro.adaptive import telemetry as adaptive_telemetry
 from repro.core import compressors
 from repro.core.compressors import CompressorConfig, plan
+from repro.obs import metrics as obs_metrics
 
 from . import sharded_codec as sc
 
@@ -281,10 +282,15 @@ def reference_sync_state(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Arr
     fused encode-pack-residual, and the collective replay.  ``ef`` is a
     list of stacked (n, m_b) bucket-resident residual arrays, ``tstate`` a
     per-peer-stacked :class:`~repro.adaptive.TelemetryState`.  Returns
-    ``(mean_leaves, resid_stacked | None, new_tstate | None)`` —
-    bit-identical to the mesh under a common jit for the codebook methods,
-    which is what the EF+adaptive rows of ``tests/test_mesh_invariance.py``
-    pin.
+    ``(mean_leaves, resid_stacked | None, new_tstate | None, metrics |
+    None)`` — bit-identical to the mesh under a common jit for the codebook
+    methods, which is what the EF+adaptive rows of
+    ``tests/test_mesh_invariance.py`` pin.  ``metrics`` (under
+    ``ts.metrics_compression``) replays the in-graph
+    :class:`repro.obs.metrics.CompressionMetrics` per peer through the very
+    same ``obs.metrics`` helpers the sync region calls — leaves stacked
+    ``(n, n_buckets)``, bitwise equal to the mesh on meshes without model
+    axes (``tests/test_obs.py`` pins this on a (2,2) pod×data mesh).
     """
     cfg = ts.compressor
     n = 1
@@ -341,9 +347,21 @@ def reference_sync_state(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Arr
         means, resids = bucketed_hierarchical_mean(cfg, buckets, n_pod, key,
                                                    cfg.use_pallas, ts.bits_plan, stats,
                                                    aux)
+    cm = None
+    if ts.metrics_compression:
+        rows = []
+        for j in range(n):
+            sums, static = obs_metrics.local_sums(
+                ts, cfgs, per_peer[j],
+                stats[j] if stats is not None else None,
+                [resids[b][j] for b in range(bp.n_buckets)] if resids is not None else None,
+                [ef[b][j] for b in range(bp.n_buckets)] if ef is not None else None,
+                compressed)
+            rows.append(obs_metrics.finalize(sums, static, 1))
+        cm = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
     if not ts.error_feedback:
         resids = None
-    return compressors.bucket_split(means, bp, shapes), resids, new_t
+    return compressors.bucket_split(means, bp, shapes), resids, new_t, cm
 
 
 def reference_sync(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Array) -> list:
@@ -363,8 +381,7 @@ def reference_sync(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Array) ->
     n_pod = n // dp_sizes[-1]
     shapes = [tuple(x.shape[1:]) for x in stacked_leaves]
     if ts.bucket_mb > 0:
-        means, _, _ = reference_sync_state(ts, stacked_leaves, dp_sizes, key)
-        return means
+        return reference_sync_state(ts, stacked_leaves, dp_sizes, key)[0]
     out = []
     for i, x in enumerate(stacked_leaves):
         ki = jax.random.fold_in(key, i)

@@ -316,33 +316,39 @@ def bucketed_faithful_ring_mean(
     cfgs = _bucket_cfgs(cfg, len(buckets), bits)
     codecs = [get_codec(c.method) for c in cfgs]
     parts, states, sizes = [], [], []
-    for b, g in enumerate(buckets):
-        flat = g.reshape(-1).astype(jnp.float32)
-        pln = codecs[b].plan(cfgs[b], flat, stats[b] if stats is not None else None,
-                             use_pallas)
-        wire, resid, aux_new = codecs[b].encode_residual(
-            cfgs[b], flat, pln, jax.random.fold_in(key, b), use_pallas,
-            aux=_bucket_aux(aux, b))
-        states.append(_state_row(resid, aux_new))
-        parts.append(wire)
-        sizes.append(flat.size)
+    # obs.* named scopes label the encode/collective/decode phases in
+    # profiler traces (see repro.obs.trace); they change no numerics.
+    with jax.named_scope("obs.encode"):
+        for b, g in enumerate(buckets):
+            flat = g.reshape(-1).astype(jnp.float32)
+            pln = codecs[b].plan(cfgs[b], flat, stats[b] if stats is not None else None,
+                                 use_pallas)
+            wire, resid, aux_new = codecs[b].encode_residual(
+                cfgs[b], flat, pln, jax.random.fold_in(key, b), use_pallas,
+                aux=_bucket_aux(aux, b))
+            states.append(_state_row(resid, aux_new))
+            parts.append(wire)
+            sizes.append(flat.size)
     if n == 1:
         # Degenerate single-peer ring: the "mean" is this peer's own
         # dequantized transmission, recovered through the same fused decode
         # every multi-peer site uses (exact codebook lookup).
-        means = [
-            codecs[b].decode_reduce(cfgs[b], parts[b][None], m, use_pallas)
-            for b, m in enumerate(sizes)
-        ]
+        with jax.named_scope("obs.decode"):
+            means = [
+                codecs[b].decode_reduce(cfgs[b], parts[b][None], m, use_pallas)
+                for b, m in enumerate(sizes)
+            ]
         return means, states
-    wire = jnp.concatenate(parts)
-    rows = compat.all_gather_stacked(wire, axis_name)                    # (n, T)
-    means, off = [], 0
-    for b, m in enumerate(sizes):
-        w = codecs[b].wire_words(cfgs[b], m)
-        means.append(codecs[b].decode_reduce(cfgs[b], rows[:, off:off + w], m,
-                                             use_pallas))
-        off += w
+    with jax.named_scope("obs.collective"):
+        wire = jnp.concatenate(parts)
+        rows = compat.all_gather_stacked(wire, axis_name)                # (n, T)
+    with jax.named_scope("obs.decode"):
+        means, off = [], 0
+        for b, m in enumerate(sizes):
+            w = codecs[b].wire_words(cfgs[b], m)
+            means.append(codecs[b].decode_reduce(cfgs[b], rows[:, off:off + w], m,
+                                                 use_pallas))
+            off += w
     return means, states
 
 
@@ -379,67 +385,73 @@ def bucketed_two_phase_mean(
                        for b, f in enumerate(flats)]
     k1, k2 = jax.random.split(_peer_key(key, axis_name))
     parts, states, widths = [], [], []
-    for b, flat in enumerate(flats):
-        pln = codecs[b].plan(cfgs[b], flat, stats[b] if stats is not None else None,
-                             use_pallas)
-        kb = jax.random.fold_in(k1, b)
-        if codecs[b].chunkable:
-            rows_b, resid = codecs[b].encode_chunks(cfgs[b], flat, pln, kb, n,
-                                                    use_pallas)
-            aux_new = None
-        else:
-            # Non-chunkable wire (low-rank factors): tile the full wire into
-            # every all-to-all row — an embedded all-gather riding the same
-            # fused tensor, decoded entirely in phase 1.
-            wire_b, resid, aux_new = codecs[b].encode_residual(
-                cfgs[b], flat, pln, kb, use_pallas, aux=_bucket_aux(aux, b))
-            rows_b = jnp.tile(wire_b[None], (n, 1))
-        states.append(_state_row(resid, aux_new))
-        parts.append(rows_b)
-        widths.append(rows_b.shape[1])
-    wire = jnp.concatenate(parts, axis=1)                                # (n, T1)
-    recv = compat.all_to_all_rows(wire, axis_name)                       # (n, T1)
+    with jax.named_scope("obs.encode"):
+        for b, flat in enumerate(flats):
+            pln = codecs[b].plan(cfgs[b], flat, stats[b] if stats is not None else None,
+                                 use_pallas)
+            kb = jax.random.fold_in(k1, b)
+            if codecs[b].chunkable:
+                rows_b, resid = codecs[b].encode_chunks(cfgs[b], flat, pln, kb, n,
+                                                        use_pallas)
+                aux_new = None
+            else:
+                # Non-chunkable wire (low-rank factors): tile the full wire into
+                # every all-to-all row — an embedded all-gather riding the same
+                # fused tensor, decoded entirely in phase 1.
+                wire_b, resid, aux_new = codecs[b].encode_residual(
+                    cfgs[b], flat, pln, kb, use_pallas, aux=_bucket_aux(aux, b))
+                rows_b = jnp.tile(wire_b[None], (n, 1))
+            states.append(_state_row(resid, aux_new))
+            parts.append(rows_b)
+            widths.append(rows_b.shape[1])
+    with jax.named_scope("obs.collective"):
+        wire = jnp.concatenate(parts, axis=1)                            # (n, T1)
+        recv = compat.all_to_all_rows(wire, axis_name)                   # (n, T1)
 
     # Phase 1 decode: this peer's chunk of each chunkable bucket's mean;
     # non-chunkable buckets decode their full mean here (every peer holds
     # every peer's tiled wire after the all-to-all).
-    mean_chunks, full_means, off = [], {}, 0
-    for b, flat in enumerate(flats):
-        rows_b = recv[:, off:off + widths[b]]
-        off += widths[b]
-        if codecs[b].chunkable:
-            mc = codecs[b].chunk_elems(cfgs[b], flat.size, n)
-            mean_chunks.append(codecs[b].decode_reduce(cfgs[b], rows_b, mc, use_pallas))
-        else:
-            full_means[b] = codecs[b].decode_reduce(cfgs[b], rows_b, flat.size,
-                                                    use_pallas)
-            mean_chunks.append(None)
+    with jax.named_scope("obs.decode"):
+        mean_chunks, full_means, off = [], {}, 0
+        for b, flat in enumerate(flats):
+            rows_b = recv[:, off:off + widths[b]]
+            off += widths[b]
+            if codecs[b].chunkable:
+                mc = codecs[b].chunk_elems(cfgs[b], flat.size, n)
+                mean_chunks.append(codecs[b].decode_reduce(cfgs[b], rows_b, mc, use_pallas))
+            else:
+                full_means[b] = codecs[b].decode_reduce(cfgs[b], rows_b, flat.size,
+                                                        use_pallas)
+                mean_chunks.append(None)
 
     # Phase 2: re-encode the mean chunks, one fused all-gather back (skipped
     # entirely when no bucket chunks — then phase 1 already produced every
     # full mean).
     parts2, widths2 = [], []
-    for b, ch in enumerate(mean_chunks):
-        if ch is None:
-            widths2.append(0)
-            continue
-        pln2 = codecs[b].plan(cfgs[b], ch, None, use_pallas)
-        parts2.append(codecs[b].encode(cfgs[b], ch, pln2, jax.random.fold_in(k2, b),
-                                       use_pallas))
-        widths2.append(parts2[-1].shape[0])
+    with jax.named_scope("obs.encode"):
+        for b, ch in enumerate(mean_chunks):
+            if ch is None:
+                widths2.append(0)
+                continue
+            pln2 = codecs[b].plan(cfgs[b], ch, None, use_pallas)
+            parts2.append(codecs[b].encode(cfgs[b], ch, pln2, jax.random.fold_in(k2, b),
+                                           use_pallas))
+            widths2.append(parts2[-1].shape[0])
     rows2 = None
     if parts2:
-        rows2 = compat.all_gather_stacked(jnp.concatenate(parts2), axis_name)  # (n, T2)
-    means, off = [], 0
-    for b, flat in enumerate(flats):
-        if mean_chunks[b] is None:
-            means.append(full_means[b])
-            continue
-        mc = mean_chunks[b].size
-        vals = codecs[b].decode_rows(cfgs[b], rows2[:, off:off + widths2[b]], mc,
-                                     use_pallas)                         # row j = chunk j
-        off += widths2[b]
-        means.append(vals.reshape(n * mc)[: flat.size])
+        with jax.named_scope("obs.collective"):
+            rows2 = compat.all_gather_stacked(jnp.concatenate(parts2), axis_name)  # (n, T2)
+    with jax.named_scope("obs.decode"):
+        means, off = [], 0
+        for b, flat in enumerate(flats):
+            if mean_chunks[b] is None:
+                means.append(full_means[b])
+                continue
+            mc = mean_chunks[b].size
+            vals = codecs[b].decode_rows(cfgs[b], rows2[:, off:off + widths2[b]], mc,
+                                         use_pallas)                     # row j = chunk j
+            off += widths2[b]
+            means.append(vals.reshape(n * mc)[: flat.size])
     return means, states
 
 

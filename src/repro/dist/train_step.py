@@ -46,6 +46,7 @@ from repro.adaptive.controller import AdaptiveConfig
 from repro.core import compressors
 from repro.core.compressors import CompressorConfig
 from repro.models import transformer
+from repro.obs import metrics as obs_metrics
 from repro.optim.optimizers import Optimizer
 
 from . import compat, sharded_codec as sc, sharding
@@ -88,6 +89,18 @@ class TrainStepConfig:
     (the default) it is computed from the already-flat mean buckets inside
     the sync region (one ``psum`` over the model axes) instead of
     re-reducing the leaf pytree in the auto region.
+
+    ``metrics_compression=True`` additionally emits a per-bucket
+    :class:`repro.obs.metrics.CompressionMetrics` pytree under
+    ``metrics["compression"]`` (leaves ``(n_dp, n_buckets)``, one row per
+    data peer), gated exactly like ``metrics_gnorm``: everything is
+    computed from tensors already resident inside the sync region (the
+    fused encode's residual, the one-pass stats, the plan), the
+    model-shard reduction rides the *same* vectorized ``psum`` as the
+    gnorm, and the traced collective count per sync mode is unchanged
+    (``analysis.count_collectives`` asserts this in ``tests/test_obs.py``).
+    Requires the bucketed codec; omitted (like the sync itself) on meshes
+    without data axes.
     """
 
     sync: str = "dsgd"
@@ -98,6 +111,7 @@ class TrainStepConfig:
     adaptive: AdaptiveConfig | None = None
     bits_plan: tuple[int, ...] | None = None
     metrics_gnorm: bool = True
+    metrics_compression: bool = False
 
     def __post_init__(self):
         if self.sync not in SYNC_MODES:
@@ -114,6 +128,8 @@ class TrainStepConfig:
                 raise ValueError("adaptive telemetry requires a compressed sync mode/method")
             if self.bucket_mb <= 0:
                 raise ValueError("adaptive telemetry requires the bucketed codec (bucket_mb > 0)")
+        if self.metrics_compression and self.bucket_mb <= 0:
+            raise ValueError("metrics_compression requires the bucketed codec (bucket_mb > 0)")
         if self.bits_plan is not None:
             if self.bucket_mb <= 0:
                 raise ValueError("bits_plan targets the bucketed codec (bucket_mb > 0)")
@@ -236,7 +252,11 @@ def _sync_leaf(ts: TrainStepConfig, g: jax.Array, key: jax.Array, dp: tuple) -> 
 def _sync_buckets(ts: TrainStepConfig, vals: list, key: jax.Array, dp: tuple,
                   ef=None, tstate=None):
     """Bucketed sync of a flat leaf list.
-    Returns (mean_leaves, resid_buckets, new_telemetry, mean_buckets).
+    Returns (mean_leaves, resid_buckets, new_telemetry, mean_buckets,
+    metric_sums) — ``metric_sums`` is the pre-psum
+    ``repro.obs.metrics.local_sums`` pair under
+    ``ts.metrics_compression`` (else ``None``); the caller reduces it over
+    the model axes together with the gnorm scalar.
 
     The bucket plan is derived at trace time from the *local* (post-shard)
     leaf sizes; each phase of the selected mode moves one fused wire tensor
@@ -301,9 +321,17 @@ def _sync_buckets(ts: TrainStepConfig, vals: list, key: jax.Array, dp: tuple,
                                                       cfg.use_pallas, bits, stats, aux)
     shapes = [v.shape for v in vals]
     mean_leaves = compressors.bucket_split(means, bp, shapes)
+    cm = None
+    if ts.metrics_compression:
+        # The fused encode's residual IS the realized quantization error of
+        # this peer's own transmission, so the metric sums cost no extra
+        # collective — the model-axis reduction is fused with the gnorm
+        # psum by the caller.
+        cm = obs_metrics.local_sums(ts, cfgs, buckets, stats, resids, ef,
+                                    compressed)
     if not ts.error_feedback:
         resids = None
-    return mean_leaves, resids, new_t, means
+    return mean_leaves, resids, new_t, means, cm
 
 
 def ef_bucket_spec(mesh) -> P:
@@ -332,12 +360,23 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
     arrays, :func:`init_ef_state`) alongside the grads; with ``ts.adaptive``
     the stacked per-client telemetry state follows it; with
     ``ts.metrics_gnorm`` the global gradient norm (computed from the flat
-    mean buckets, ``psum`` over the model axes) is the last output:
+    mean buckets, ``psum`` over the model axes) follows; with
+    ``ts.metrics_compression`` the per-bucket
+    :class:`~repro.obs.metrics.CompressionMetrics` pytree (leaves stacked
+    per data peer) is the last output:
     ``sync_fn(grads, key[, ef][, tstate]) ->
-    (mean[, new_ef][, new_tstate][, gnorm])``.
+    (mean[, new_ef][, new_tstate][, gnorm][, metrics])``.
+
+    Collective accounting: the compression metrics share ONE vectorized
+    ``psum`` over the model axes with the gnorm scalar, so enabling them
+    never changes the traced collective count; with both metrics off the
+    sync body is byte-identical to the metrics-free graph.
     """
     dp = sharding.manual_axes(mesh)
     model_axes = tuple(a for a in mesh.axis_names if a not in dp)
+    n_model = 1
+    for a in model_axes:
+        n_model *= mesh.shape[a]
 
     def in_spec(x, spec):
         return P(dp, *_auto_only_entries(spec, mesh))
@@ -360,21 +399,37 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
         if ts.bucket_mb > 0:
             t_in = None if tstate is None else jax.tree.map(lambda x: x[0], tstate)
             ef_in = None if ef is None else [e[0] for e in ef]
-            out, resid, new_t, gsrc = _sync_buckets(ts, vals, key, dp, ef_in, t_in)
+            out, resid, new_t, gsrc, cm = _sync_buckets(ts, vals, key, dp, ef_in, t_in)
         else:
             out = [_sync_leaf(ts, g, jax.random.fold_in(key, i), dp)
                    for i, g in enumerate(vals)]
-            resid, new_t, gsrc = None, None, out
+            resid, new_t, gsrc, cm = None, None, out, None
         result = [jax.tree.unflatten(treedef, out)]
         if ts.error_feedback:
             result.append(tuple(r[None] for r in resid))
         if ts.adaptive is not None:
             result.append(jax.tree.map(lambda x: x[None], new_t))
+        gsq = None
         if ts.metrics_gnorm:
             gsq = sum(jnp.sum(jnp.square(m.astype(jnp.float32))) for m in gsrc)
+        if cm is not None:
+            # One fused model-axis psum for the metric sums AND the gnorm
+            # scalar: the collective count matches the metrics-off graph.
+            sums, static = cm
+            vec = sums.reshape(-1)
+            if gsq is not None:
+                vec = jnp.concatenate([vec, gsq[None]])
             if model_axes:
-                gsq = jax.lax.psum(gsq, model_axes)
+                vec = jax.lax.psum(vec, model_axes)
+            if gsq is not None:
+                gsq, vec = vec[-1], vec[:-1]
+            cm = obs_metrics.finalize(vec.reshape(sums.shape), static, n_model)
+        elif gsq is not None and model_axes:
+            gsq = jax.lax.psum(gsq, model_axes)
+        if gsq is not None:
             result.append(jnp.sqrt(gsq))
+        if cm is not None:
+            result.append(jax.tree.map(lambda x: x[None], cm))
         return tuple(result) if len(result) > 1 else result[0]
 
     in_specs = [g_in, P()]
@@ -388,6 +443,9 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
         out_specs.append(t_spec)
     if ts.metrics_gnorm:
         out_specs.append(P())
+    if ts.metrics_compression:
+        out_specs.append(obs_metrics.CompressionMetrics(
+            *(P(dp) for _ in obs_metrics.CompressionMetrics._fields)))
     return compat.shard_map(
         sync, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=tuple(out_specs) if len(out_specs) > 1 else out_specs[0],
@@ -484,6 +542,16 @@ def make_train_step(
     ``ts.metrics_gnorm=False``).  ``pspecs`` is the parameter PartitionSpec
     tree the caller uses for ``device_put``.
 
+    Metrics contract (pinned by ``tests/test_obs.py``): ``metrics["loss"]``
+    is ALWAYS shape ``(max(n_dp, 1),)`` float32, under every sync mode;
+    ``metrics["gnorm"]`` has the same shape/dtype and is present iff
+    ``ts.metrics_gnorm``.  With ``ts.metrics_compression`` (and a mesh with
+    data axes) ``metrics["compression"]`` is a
+    :class:`repro.obs.metrics.CompressionMetrics` pytree with
+    ``(n_dp, n_buckets)`` leaves — row ``j`` is data peer ``j``'s own
+    encode, model-shard reduced inside the sync region at zero extra
+    collective cost (the reduction shares the gnorm psum).
+
     With ``ts.error_feedback`` the bucket-resident EF residual is an
     explicit extra pytree in the step signature — ``step_fn(params,
     opt_state, ef_state, batch, step) -> (params, opt_state, ef_state,
@@ -562,7 +630,7 @@ def make_train_step(
             # pin one client per data shard before the manual sync region
             grads = constrain_client_grads(grads)
             key = jax.random.fold_in(jax.random.key(_KEY_SEED), step)
-            new_ef, new_t, gnorm = ef_state, tstate, None
+            new_ef, new_t, gnorm, cmetrics = ef_state, tstate, None, None
             if sync_fn is not None:
                 args = [grads, key]
                 if ts.error_feedback:
@@ -572,7 +640,8 @@ def make_train_step(
                 if adaptive:
                     args.append(tstate)
                 res = sync_fn(*args)
-                n_extra = int(ts.error_feedback) + int(adaptive) + int(ts.metrics_gnorm)
+                n_extra = (int(ts.error_feedback) + int(adaptive)
+                           + int(ts.metrics_gnorm) + int(ts.metrics_compression))
                 if n_extra:
                     res = list(res)
                     g_mean = res.pop(0)
@@ -582,19 +651,24 @@ def make_train_step(
                         new_t = res.pop(0)
                     if ts.metrics_gnorm:
                         gnorm = res.pop(0)
+                    if ts.metrics_compression:
+                        cmetrics = res.pop(0)
                 else:
                     g_mean = res
             else:
                 g_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
             if ts.metrics_gnorm and gnorm is None:
                 gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g_mean)))
-            new_params, new_opt = opt.update(params, g_mean, opt_state, step)
+            with jax.named_scope("obs.optimizer"):
+                new_params, new_opt = opt.update(params, g_mean, opt_state, step)
             new_params = constrain(new_params, pspecs)
             new_opt = constrain(new_opt, o_specs)
         loss = jnp.mean(losses)
         metrics = {"loss": jnp.full((max(n_dp, 1),), loss, jnp.float32)}
         if ts.metrics_gnorm:
             metrics["gnorm"] = jnp.full((max(n_dp, 1),), gnorm, jnp.float32)
+        if cmetrics is not None:
+            metrics["compression"] = cmetrics
         return new_params, new_opt, new_ef, new_t, metrics
 
     if ts.error_feedback and adaptive:

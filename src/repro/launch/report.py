@@ -5,9 +5,9 @@ Usage:  PYTHONPATH=src python -m repro.launch.report [--dir runs/dryrun]
 from __future__ import annotations
 
 import argparse
-import contextlib
 import json
 import pathlib
+import sys
 
 RUNS = pathlib.Path(__file__).resolve().parents[3] / "runs" / "dryrun"
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
@@ -23,8 +23,10 @@ def load(dirpath: pathlib.Path, canonical: bool = True):
         is_canon = len(parts) == 3 and parts[2] in ("16x16", "2x16x16")
         if canonical != is_canon:
             continue
-        with contextlib.suppress(Exception):
+        try:
             recs.append(json.loads(f.read_text()))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping unreadable record {f}: {e}", file=sys.stderr)
     return recs
 
 

@@ -67,6 +67,11 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--obs-dir", default=None,
+                    help="write observability JSONL here; turns on in-graph "
+                         "per-bucket compression metrics (see repro.obs)")
+    ap.add_argument("--obs-every", type=int, default=1,
+                    help="steps between compression-metric events")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -85,11 +90,21 @@ def main(argv=None) -> int:
 
         acfg = AdaptiveConfig(wire_budget_mb=args.wire_budget_mb,
                               replan_every=args.replan_every)
+    obs_sink = obs_rec = drift_mon = None
+    if args.obs_dir:
+        from repro.obs import DriftMonitor, JsonlSink, SpanRecorder
+
+        if args.bucket_mb <= 0:
+            ap.error("--obs-dir requires the bucketed codec (--bucket-mb > 0)")
+        obs_sink = JsonlSink(os.path.join(args.obs_dir, "events.jsonl"))
+        obs_rec = SpanRecorder(sink=obs_sink)
+        drift_mon = DriftMonitor(sink=obs_sink)
     ts = TrainStepConfig(sync=args.sync,
                          compressor=CompressorConfig(method=args.method, bits=args.bits,
                                                      rank=args.rank,
                                                      approx_gmin=args.adaptive),
-                         bucket_mb=args.bucket_mb, error_feedback=args.ef, adaptive=acfg)
+                         bucket_mb=args.bucket_mb, error_feedback=args.ef, adaptive=acfg,
+                         metrics_compression=args.obs_dir is not None)
     batch0 = lm_batch(cfg, jnp.uint32(0), args.batch, args.seq)
     opt_state = opt.init(params)
     stepper = None
@@ -98,7 +113,7 @@ def main(argv=None) -> int:
 
         stepper = AdaptiveStepper(cfg, mesh, logical, opt, ts, batch0,
                                   opt_state_like=jax.eval_shape(lambda: opt_state),
-                                  params_like=params)
+                                  params_like=params, obs=obs_rec, drift=drift_mon)
         pspecs = stepper.pspecs
         print(f"adaptive: {len(stepper.sizes)} buckets, wire budget "
               f"{stepper.budget/2**20:.2f} MB/step, replan every {acfg.replan_every}")
@@ -121,24 +136,37 @@ def main(argv=None) -> int:
     ef_state = init_ef_state(params, mesh, pspecs, ts) if args.ef else None
     tstate = stepper.init_telemetry() if stepper is not None else None
 
+    import contextlib
+
     for i in range(start, start + args.steps):
         b = lm_batch(cfg, jnp.uint32(i), args.batch, args.seq)
-        if stepper is not None:
-            prev_bits = stepper.bits
-            params, opt_state, ef_state, tstate, m = stepper.step(
-                params, opt_state, ef_state, tstate, b, i)
-            if stepper.bits != prev_bits:
-                from repro.launch.report import adaptive_table
-                plan, tails = stepper.plan, stepper.tails
-                print(f"step {i}: replanned bits -> {plan.bits} "
-                      f"({plan.spend_bytes}/{plan.budget_bytes} B/step)")
-                print(adaptive_table(stepper.sizes, plan.bits, plan.alphas,
-                                     gammas=None if tails is None else tails.gamma,
-                                     rhos=None if tails is None else tails.rho))
-        elif args.ef:
-            params, opt_state, ef_state, m = step_fn(params, opt_state, ef_state, b, jnp.uint32(i))
-        else:
-            params, opt_state, m = step_fn(params, opt_state, b, jnp.uint32(i))
+        span = obs_rec.span("train.step", step=i) if obs_rec is not None else contextlib.nullcontext()
+        with span:
+            if stepper is not None:
+                prev_bits = stepper.bits
+                params, opt_state, ef_state, tstate, m = stepper.step(
+                    params, opt_state, ef_state, tstate, b, i)
+                if stepper.bits != prev_bits:
+                    from repro.launch.report import adaptive_table
+                    plan, tails = stepper.plan, stepper.tails
+                    print(f"step {i}: replanned bits -> {plan.bits} "
+                          f"({plan.spend_bytes}/{plan.budget_bytes} B/step)")
+                    print(adaptive_table(stepper.sizes, plan.bits, plan.alphas,
+                                         gammas=None if tails is None else tails.gamma,
+                                         rhos=None if tails is None else tails.rho))
+            elif args.ef:
+                params, opt_state, ef_state, m = step_fn(params, opt_state, ef_state, b, jnp.uint32(i))
+            else:
+                params, opt_state, m = step_fn(params, opt_state, b, jnp.uint32(i))
+        if obs_sink is not None and "compression" in m and i % max(args.obs_every, 1) == 0:
+            from repro.obs import metrics_event
+
+            comp = jax.device_get(m["compression"])
+            event = metrics_event(i, comp)
+            obs_sink.write(event)
+            if drift_mon is not None:
+                drift_mon.check_ratio([row["realized_mse"] for row in event["buckets"]],
+                                      [row["predicted_mse"] for row in event["buckets"]], step=i)
         if args.log_every and i % args.log_every == 0:
             gn = f" gnorm {float(m['gnorm'][0]):.3f}" if "gnorm" in m else ""
             print(f"step {i:5d} loss {float(m['loss'][0]):.4f}{gn}", flush=True)
@@ -146,6 +174,10 @@ def main(argv=None) -> int:
             host_p = jax.tree.map(lambda x: jax.device_get(x), (params, opt_state))
             save_checkpoint(args.ckpt_dir, i + 1, host_p)
             print(f"checkpointed step {i+1}")
+    if obs_sink is not None:
+        obs_sink.close()
+        print(f"obs: {obs_sink.n_written} events -> {obs_sink.path} "
+              f"(render with `python -m repro.obs report --dir {args.obs_dir}`)")
     return 0
 
 

@@ -1,0 +1,42 @@
+"""Compression observability: in-graph metrics, phase spans, sinks, drift.
+
+The sync region of ``dist.train_step`` optionally self-reports a
+:class:`~repro.obs.metrics.CompressionMetrics` pytree per bucket
+(``TrainStepConfig.metrics_compression``); this package holds that metric
+computation plus everything host-side: the JSONL event sinks
+(:mod:`repro.obs.sink`), the wall-clock/profiler span recorder
+(:mod:`repro.obs.trace`), the power-law drift monitor
+(:mod:`repro.obs.drift`) and the ``python -m repro.obs report`` CLI
+(:mod:`repro.obs.report`).
+
+Import note: :mod:`repro.obs.metrics` is imported by ``dist.train_step``,
+so nothing in this package may import from :mod:`repro.dist`.
+"""
+from .drift import DriftEvent, DriftMonitor, ObsDriftWarning
+from .metrics import CompressionMetrics
+from .sink import (
+    METRIC_FIELDS,
+    SCHEMA_VERSION,
+    EmaAggregator,
+    JsonlSink,
+    export_csv,
+    metrics_event,
+    read_events,
+)
+from .trace import SpanRecorder, span_event
+
+__all__ = [
+    "METRIC_FIELDS",
+    "SCHEMA_VERSION",
+    "CompressionMetrics",
+    "DriftEvent",
+    "DriftMonitor",
+    "EmaAggregator",
+    "JsonlSink",
+    "ObsDriftWarning",
+    "SpanRecorder",
+    "export_csv",
+    "metrics_event",
+    "read_events",
+    "span_event",
+]

@@ -1,0 +1,116 @@
+"""Drift monitor: structured warnings when the paper's error model breaks.
+
+The controller's α/bit allocation assumes the per-bucket gradient magnitude
+follows a power-law tail with index γ ∈ (3, 5] (paper §3; the Hill estimate
+in ``core.distributions.tail_from_histogram`` is *clipped* to
+``[GAMMA_MIN, GAMMA_MAX]``).  Two drift signals are watched:
+
+- **tail regime** (:meth:`DriftMonitor.check_tails`): a bucket's estimated
+  γ sitting on a clip rail means the raw Hill estimate left the power-law
+  regime the controller assumed — the fit railed, it did not converge.
+- **error ratio** (:meth:`DriftMonitor.check_ratio`): realized quantization
+  MSE exceeding the predicted E_TQ by more than ``ratio_threshold`` — the
+  fitted tail no longer describes the data the codec is quantizing.
+
+Each violation produces a :class:`DriftEvent` (kept on the monitor,
+optionally written to a JSONL sink as a ``"drift"`` event) and a Python
+:class:`ObsDriftWarning` via ``warnings.warn`` so library users can route
+or silence them with the stdlib machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import numpy as np
+
+from repro.core.distributions import GAMMA_MAX, GAMMA_MIN
+
+from .sink import SCHEMA_VERSION
+
+
+class ObsDriftWarning(UserWarning):
+    """Category for compression-drift warnings raised by :class:`DriftMonitor`."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    kind: str     # "tail_regime" | "error_ratio"
+    bucket: int
+    step: int
+    value: float  # the offending γ or realized/predicted ratio
+    lo: float
+    hi: float
+
+    def message(self) -> str:
+        if self.kind == "tail_regime":
+            return (f"bucket {self.bucket} step {self.step}: Hill tail index "
+                    f"gamma={self.value:.3f} railed outside the power-law regime "
+                    f"({self.lo:.2f}, {self.hi:.2f}) the controller assumes")
+        return (f"bucket {self.bucket} step {self.step}: realized/predicted "
+                f"quantization MSE ratio {self.value:.2f} exceeds {self.hi:.2f} "
+                f"— the heavy-tail fit no longer matches the gradients")
+
+    def to_event(self) -> dict:
+        return {"v": SCHEMA_VERSION, "kind": "drift", "drift": self.kind,
+                "bucket": self.bucket, "step": self.step,
+                "value": self.value, "lo": self.lo, "hi": self.hi,
+                "message": self.message()}
+
+
+class DriftMonitor:
+    """Consumes telemetry tail estimates and metrics rows; raises on drift.
+
+    ``gamma_margin`` is the rail-detection slack around the estimator's
+    ``[GAMMA_MIN, GAMMA_MAX]`` clip range; ``ratio_threshold`` the
+    realized/predicted MSE ratio above which a bucket is flagged.
+    ``warn=False`` suppresses ``warnings.warn`` (events are still recorded).
+    """
+
+    def __init__(self, sink=None, gamma_margin: float = 0.02,
+                 ratio_threshold: float = 4.0, warn: bool = True):
+        self.sink = sink
+        self.gamma_lo = GAMMA_MIN + gamma_margin
+        self.gamma_hi = GAMMA_MAX - gamma_margin
+        self.ratio_threshold = float(ratio_threshold)
+        self.warn = warn
+        self.events: list[DriftEvent] = []
+
+    def _emit(self, ev: DriftEvent) -> None:
+        self.events.append(ev)
+        if self.sink is not None:
+            self.sink.write(ev.to_event())
+        if self.warn:
+            warnings.warn(ev.message(), ObsDriftWarning, stacklevel=3)
+
+    def check_tails(self, tails, step: int = 0) -> list[DriftEvent]:
+        """``tails``: a stacked :class:`~repro.core.distributions.PowerLawTail`
+        (``adaptive.telemetry.estimate_tails`` output) or any array of per-
+        bucket γ estimates.  Flags buckets whose γ sits on a clip rail."""
+        gammas = np.asarray(getattr(tails, "gamma", tails), dtype=np.float64).reshape(-1)
+        new = []
+        for b, g in enumerate(gammas):
+            if g <= self.gamma_lo or g >= self.gamma_hi:
+                ev = DriftEvent("tail_regime", b, int(step), float(g),
+                                float(GAMMA_MIN), float(GAMMA_MAX))
+                self._emit(ev)
+                new.append(ev)
+        return new
+
+    def check_ratio(self, realized, predicted, step: int = 0) -> list[DriftEvent]:
+        """Flags buckets with ``realized > ratio_threshold * predicted``.
+        Buckets without a prediction (``predicted <= 0``: rank-based or
+        uncompressed) are skipped — there is no model to drift from."""
+        realized = np.asarray(realized, dtype=np.float64).reshape(-1)
+        predicted = np.asarray(predicted, dtype=np.float64).reshape(-1)
+        new = []
+        for b, (r, p) in enumerate(zip(realized, predicted)):
+            if p <= 0.0 or not np.isfinite(p) or not np.isfinite(r):
+                continue
+            ratio = r / p
+            if ratio > self.ratio_threshold:
+                ev = DriftEvent("error_ratio", b, int(step), float(ratio),
+                                0.0, self.ratio_threshold)
+                self._emit(ev)
+                new.append(ev)
+        return new

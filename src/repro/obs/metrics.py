@@ -1,0 +1,172 @@
+"""In-graph per-bucket compression metrics (the sync region's self-report).
+
+The paper's contribution is an *error model*: pick α and the codebook to
+minimize the predicted quantization error E_TQ.  This module computes, from
+tensors the bucketed sync already holds, everything needed to verify that
+model online:
+
+- the **realized** per-element quantization MSE of this peer's own encode —
+  the fused encode's EF residual is exactly ``corrected − C(corrected)``,
+  so ``Σ resid² / m`` costs nothing extra;
+- the **predicted** per-element E_TQ for the *same plan* —
+  ``tail_from_histogram`` / ``density_from_histogram`` over the one-pass
+  stats the codec already computed, fed to ``core.theory.e_tq_uniform`` /
+  ``e_tq_nonuniform`` (all jnp-traceable, no host round trip);
+- the solved α (the codec's own ``plan`` recomputed from the same stats —
+  XLA CSEs it with the encode's plan), the truncation clip fraction
+  ``mean(|g| > α)``, the incoming EF-residual norm, and the static wire
+  geometry (bits / rank / wire bytes per peer transmission).
+
+The split mirrors how the metrics cross the mesh: :func:`local_sums` emits
+per-model-shard *sums* plus a static geometry record; the caller reduces the
+``(B, N_REDUCED)`` sums with **one** ``psum`` over the model axes (fused
+with the ``metrics_gnorm`` scalar, so the traced collective count does not
+change) and :func:`finalize` normalizes them into a
+:class:`CompressionMetrics` pytree of ``(B,)`` leaves.  On meshes without
+model axes the psum is skipped and the whole pipeline is bitwise identical
+to the single-device replay in ``dist.reference``.
+
+Semantics notes (documented, not configurable):
+
+- ``realized_mse`` tracks the **worker-side encode** (the transmission the
+  EF state compensates).  The two-phase mode's phase-2 mean re-encode and
+  the hierarchical cross-pod exchange are not included.
+- On model-sharded meshes each shard plans and encodes its own local slice,
+  so ``alpha``/``predicted_mse``/``clip_frac`` are shard *means* and
+  ``realized_mse`` the global sum over the bucket's elements.
+- Uncompressed syncs (``dsgd``) report ``bits=32``, fp32 wire bytes, and
+  zeros elsewhere; rank-based codecs (``powersgd``) report their rank and
+  realized/EF terms but no α/predicted (the scalar-quantizer error model
+  does not apply).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import theory
+from repro.core.codecs import get_codec
+from repro.core.distributions import density_from_histogram, tail_from_histogram
+from repro.kernels.stats import bin_edges
+
+#: per-bucket reduced columns: resid_sq, clip_count, ef_sq, alpha, predicted
+N_REDUCED = 5
+
+#: methods whose predicted error uses the uniform-codebook E_TQ (Eq. 11);
+#: every other scalar quantizer gets the non-uniform form (Eq. 15).
+_UNIFORM_PRED = ("qsgd", "tqsgd", "dsgd")
+
+
+class CompressionMetrics(NamedTuple):
+    """Per-bucket compression metrics; every leaf is a ``(B,)`` array.
+
+    Through ``make_train_step`` the leaves come back stacked per data peer
+    as ``(n_dp, B)`` — row ``j`` is peer ``j``'s own encode (model-shard
+    reduced).  ``bits``/``rank``/``wire_bytes`` are trace-time constants.
+    """
+
+    bits: jax.Array           # (B,) int32 — wire bits (32 = uncompressed, 0 = rank-based)
+    rank: jax.Array           # (B,) int32 — factor rank (0 for scalar quantizers)
+    alpha: jax.Array          # (B,) f32 — solved truncation threshold (shard mean)
+    clip_frac: jax.Array      # (B,) f32 — fraction of elements with |g| > α
+    ef_norm: jax.Array        # (B,) f32 — ‖incoming EF residual‖₂
+    wire_bytes: jax.Array     # (B,) f32 — accounted bytes of one peer transmission
+    realized_mse: jax.Array   # (B,) f32 — Σ(corrected − C(corrected))² / m
+    predicted_mse: jax.Array  # (B,) f32 — per-element E_TQ for the same plan
+
+
+class MetricStatic(NamedTuple):
+    """Trace-time geometry carried around the psum (all Python int tuples)."""
+
+    bits: tuple[int, ...]
+    rank: tuple[int, ...]
+    wire_bytes: tuple[int, ...]
+    sizes: tuple[int, ...]  # local (per model shard) bucket element counts
+
+
+def local_sums(ts, cfgs: list, buckets: list, stats: list | None,
+               state_rows: list | None, ef: list | None,
+               compressed: bool) -> tuple[jax.Array, MetricStatic]:
+    """Per-bucket metric sums of *this peer's local shard*.
+
+    ``buckets`` are the EF-corrected flat buckets the codec encoded,
+    ``stats`` the matching one-pass statistics tuples, ``state_rows`` the
+    per-bucket EF/state rows the collective returned (residual prefix +
+    codec aux tail), ``ef`` the *incoming* residual rows.  Returns a
+    ``(B, N_REDUCED)`` f32 array of sums — additive over model shards, so
+    one psum recovers the bucket-global values — plus the static geometry.
+    """
+    use_pallas = ts.compressor.use_pallas
+    edges = bin_edges()
+    cols, bits_t, rank_t, wire_t, sizes_t = [], [], [], [], []
+    for b, g in enumerate(buckets):
+        flat = g.reshape(-1)
+        m = flat.size
+        cfg_b = cfgs[b]
+        codec = get_codec(cfg_b.method)
+        sizes_t.append(m)
+        if not compressed:
+            bits_t.append(32)
+            rank_t.append(0)
+            wire_t.append(4 * m)
+        elif codec.rank_based:
+            bits_t.append(0)
+            rank_t.append(int(cfg_b.rank))
+            wire_t.append(int(codec.wire_bytes(cfg_b, m)))
+        else:
+            bits_t.append(int(cfg_b.bits))
+            rank_t.append(0)
+            wire_t.append(int(codec.wire_bytes(cfg_b, m)))
+        zero = jnp.zeros((), jnp.float32)
+        resid_sq = zero
+        if compressed and state_rows is not None:
+            resid_sq = jnp.sum(jnp.square(state_rows[b][:m].astype(jnp.float32)))
+        ef_sq = zero
+        if ef is not None and ef[b] is not None:
+            ef_sq = jnp.sum(jnp.square(ef[b][:m].astype(jnp.float32)))
+        alpha = clip = pred = zero
+        if compressed and not codec.rank_based and stats is not None:
+            counts, log_sums, g_max = stats[b][0], stats[b][1], stats[b][2]
+            # Same plan the encode used (deterministic from the same stats,
+            # so XLA CSEs the recomputation — no second statistics sweep).
+            pln = codec.plan(cfg_b, flat, stats[b], use_pallas)
+            alpha = pln.alpha.astype(jnp.float32)
+            clip = jnp.sum((jnp.abs(flat) > alpha).astype(jnp.float32))
+            tail = tail_from_histogram(counts, log_sums, g_max, edges,
+                                       gmin_quantile=cfg_b.gmin_quantile)
+            if cfg_b.method in _UNIFORM_PRED:
+                pred = theory.e_tq_uniform(tail, alpha, cfg_b.bits)
+            else:
+                dens = density_from_histogram(counts, edges)
+                pred = theory.e_tq_nonuniform(tail, dens, alpha, cfg_b.bits)
+            pred = pred.astype(jnp.float32)
+        cols.append(jnp.stack([resid_sq, clip, ef_sq, alpha, pred]))
+    static = MetricStatic(bits=tuple(bits_t), rank=tuple(rank_t),
+                          wire_bytes=tuple(wire_t), sizes=tuple(sizes_t))
+    return jnp.stack(cols), static
+
+
+def finalize(sums: jax.Array, static: MetricStatic, n_model: int) -> CompressionMetrics:
+    """Normalize (possibly psum-reduced) ``(B, N_REDUCED)`` sums into metrics.
+
+    ``n_model`` is the number of model shards the sums were reduced over
+    (1 on a data-only mesh, where this is bitwise the local computation:
+    the divisors below are exact-by-1 in that case except the genuine
+    per-element normalizations, which the reference replay repeats
+    identically).
+    """
+    resid_sq, clip, ef_sq, alpha, pred = (sums[:, i] for i in range(N_REDUCED))
+    m_glob = jnp.asarray([m * n_model for m in static.sizes], jnp.float32)
+    inv_shards = jnp.float32(1.0 / n_model)
+    return CompressionMetrics(
+        bits=jnp.asarray(static.bits, jnp.int32),
+        rank=jnp.asarray(static.rank, jnp.int32),
+        alpha=alpha * inv_shards,
+        clip_frac=clip / m_glob,
+        ef_norm=jnp.sqrt(ef_sq),
+        wire_bytes=jnp.asarray(static.wire_bytes, jnp.float32),
+        realized_mse=resid_sq / m_glob,
+        predicted_mse=pred * inv_shards,
+    )

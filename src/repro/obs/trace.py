@@ -1,0 +1,70 @@
+"""Phase span recorder: wall-clock + ``jax.profiler`` trace annotations.
+
+Two complementary mechanisms cover the step's phases:
+
+- **Host spans** (:class:`SpanRecorder.span`) wrap host-visible phases —
+  the dispatched train step, the ``AdaptiveStepper`` replan, checkpoint and
+  sink flushes — with ``time.perf_counter`` wall clock *and* a
+  ``jax.profiler.TraceAnnotation``, so the same names line up in a captured
+  profiler trace.  Each closed span is aggregated in-process and (when a
+  sink is attached) written as a ``"span"`` JSONL event.
+- **In-graph scopes** — the encode / collective / decode bodies in
+  ``dist.sharded_codec`` and the optimizer update in ``dist.train_step``
+  run under ``jax.named_scope("obs.encode" | "obs.collective" |
+  "obs.decode" | "obs.optimizer")``.  A jitted step cannot be phase-timed
+  from the host, so these appear as named regions inside the profiler
+  trace / HLO rather than as wall-clock events.
+
+Note for span consumers: the first occurrence of a span typically includes
+compilation; :meth:`SpanRecorder.summary` reports ``max_s`` alongside the
+mean so compile spikes stay visible.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import jax
+
+from .sink import SCHEMA_VERSION
+
+
+def span_event(name: str, t_start: float, dur_s: float, step=None,
+               attrs: dict | None = None) -> dict:
+    ev = {"v": SCHEMA_VERSION, "kind": "span", "name": str(name),
+          "t_start": float(t_start), "dur_s": float(dur_s)}
+    if step is not None:
+        ev["step"] = int(step)
+    if attrs:
+        ev["attrs"] = dict(attrs)
+    return ev
+
+
+class SpanRecorder:
+    """Records named wall-clock spans; optionally streams them to a sink."""
+
+    def __init__(self, sink=None, clock=time.perf_counter):
+        self._sink = sink
+        self._clock = clock
+        # name -> [count, total_s, max_s]
+        self._agg: dict[str, list[float]] = {}
+
+    @contextlib.contextmanager
+    def span(self, name: str, step=None, **attrs):
+        t0 = self._clock()
+        with jax.profiler.TraceAnnotation(f"repro.obs/{name}"):
+            yield
+        dur = self._clock() - t0
+        agg = self._agg.setdefault(name, [0, 0.0, 0.0])
+        agg[0] += 1
+        agg[1] += dur
+        agg[2] = max(agg[2], dur)
+        if self._sink is not None:
+            self._sink.write(span_event(name, t0, dur, step, attrs))
+
+    def summary(self) -> dict[str, dict[str, float]]:
+        """Per-span aggregate: ``{name: {count, total_s, mean_s, max_s}}``."""
+        return {
+            name: {"count": int(c), "total_s": tot, "mean_s": tot / c, "max_s": mx}
+            for name, (c, tot, mx) in sorted(self._agg.items())
+        }

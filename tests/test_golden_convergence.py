@@ -69,7 +69,7 @@ def _run(sync: str, method: str, ef_on: bool, dp: tuple) -> list:
         leaves, treedef = jax.tree.flatten(grads)
         key = jax.random.fold_in(jax.random.key(0x5EED), i)
         if ef_on:
-            mean, ef2, _ = reference_sync_state(ts, leaves, dp, key, ef=ef)
+            mean, ef2, _, _ = reference_sync_state(ts, leaves, dp, key, ef=ef)
         else:
             mean, ef2 = reference_sync(ts, leaves, dp, key), None
         p2, s2 = opt.update(p, jax.tree.unflatten(treedef, mean), s, i)

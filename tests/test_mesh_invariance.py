@@ -83,7 +83,7 @@ def run_mesh(ts):
     def body(key, *stacked):
         vals = [x[0] for x in stacked]
         if ts.bucket_mb > 0:
-            out, _, _, _ = _sync_buckets(ts, vals, key, dp)
+            out, _, _, _, _ = _sync_buckets(ts, vals, key, dp)
         else:
             out = [_sync_leaf(ts, g, jax.random.fold_in(key, i), dp)
                    for i, g in enumerate(vals)]
@@ -141,8 +141,8 @@ def check_state(name, ts, exact):
         stacked, ef = stacked_and_ef[:len(leaves)], stacked_and_ef[len(leaves):]
         vals = [x[0] for x in stacked]
         t_in = jax.tree.map(lambda x: x[0], tstate)
-        out, resid, new_t, _ = _sync_buckets(ts, vals, key, dp,
-                                             [e[0] for e in ef], t_in)
+        out, resid, new_t, _, _ = _sync_buckets(ts, vals, key, dp,
+                                                [e[0] for e in ef], t_in)
         return (tuple(o[None] for o in out), tuple(r[None] for r in resid),
                 jax.tree.map(lambda x: x[None], new_t))
 
@@ -154,7 +154,7 @@ def check_state(name, ts, exact):
         axis_names=set(mesh.axis_names), check_vma=False)
     means, resids, new_t = jax.jit(smap)(skey, t0, *leaves, *ef)
 
-    w_means, w_resids, w_t = jax.jit(
+    w_means, w_resids, w_t, _ = jax.jit(
         lambda key, t, ls, e: reference.reference_sync_state(
             ts, list(ls), dp_sizes, key, ef=list(e), tstate=t)
     )(skey, t0, tuple(leaves), tuple(ef))
