@@ -24,6 +24,13 @@ Guards (keyed on the repo's case-naming conventions):
   the in-suite assert is the tight 1.1x check).
 - lowrank wire parity: ``wire_bytes_mixed_plan`` <=
   ``wire_bytes_tnqsgd_3bit`` — the rank search honored the byte budget.
+- elastic schedule: ``*live_fraction*`` cases are fractions in [0, 1].
+- elastic wire pro-rata: ``wire_live_<k>of<n>_ratio`` == k/n (to 1e-6) —
+  dead peers' zeroed wire rows cost nothing on the modeled interconnect.
+- elastic recovery: ``ef_backlog_drain_ratio`` < 1.0 — a rejoining peer's
+  stale-EF backlog shrinks once it participates again.  (The dead-peer
+  invariance case ``dead_peer_oracle_maxdiff`` rides the existing
+  equal-results maxdiff guard.)
 
 Usage: ``python -m benchmarks.check_bench BENCH_core.json [more.json ...]``
 (also runs as a script).  Exits non-zero listing every violation.
@@ -39,6 +46,9 @@ _RATIO_RE = re.compile(r"fused_vs_(unfused|seed)|mse_ratio_quant_over_powersgd")
 _MAXDIFF_RE = re.compile(r"(fused|oracle).*maxdiff|maxdiff.*(fused|oracle)")
 _MAXDIFF_TOL = 1e-5
 _PIPELINE_SLACK = 1.5
+_LIVE_FRAC_RE = re.compile(r"live_fraction")
+_WIRE_LIVE_RE = re.compile(r"wire_live_(\d+)of(\d+)_ratio")
+_WIRE_LIVE_TOL = 1e-6
 
 
 def _is_num(x) -> bool:
@@ -101,6 +111,25 @@ def check_guards(report, errors: list[str]) -> int:
                 if not (_is_num(d) and d <= _MAXDIFF_TOL):
                     errors.append(f"{sname}/{cname}: equal-results maxdiff "
                                   f"{d!r} exceeds {_MAXDIFF_TOL}")
+            if _LIVE_FRAC_RE.search(cname):
+                n += 1
+                if not (_is_num(d) and 0.0 <= d <= 1.0):
+                    errors.append(f"{sname}/{cname}: live fraction {d!r} "
+                                  f"outside [0, 1]")
+            m_wl = _WIRE_LIVE_RE.fullmatch(cname)
+            if m_wl:
+                n += 1
+                want = int(m_wl.group(1)) / int(m_wl.group(2))
+                if not (_is_num(d) and abs(d - want) <= _WIRE_LIVE_TOL):
+                    errors.append(f"{sname}/{cname}: pro-rata wire ratio "
+                                  f"{d!r} != {want} — dead peers' wire is "
+                                  f"being billed")
+            if cname == "ef_backlog_drain_ratio":
+                n += 1
+                if not (_is_num(d) and d < 1.0):
+                    errors.append(f"{sname}/{cname}: drain ratio {d!r} >= "
+                                  f"1.0 — the stale-EF backlog did not "
+                                  f"shrink on rejoin")
             # modeled-bytes pair: a "fused" case whose seed/unfused twin exists
             if "fused" in cname and "unfused" not in cname and "_vs_" not in cname:
                 for alt in ("unfused", "seed"):

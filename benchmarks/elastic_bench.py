@@ -1,0 +1,137 @@
+"""Elastic partial-participation suite: schedule statistics, pro-rata wire
+accounting, the fp16 small-bucket tier, and the three scripted chaos traces
+(flap / partition / solo-survivor) replayed through the reference codec with
+error feedback.  CSV rows: ``elastic,<case>,0,<derived>``.
+
+The derived values feed the elastic guards in ``benchmarks.check_bench``:
+
+- ``*live_fraction*`` cases must land in [0, 1];
+- ``wire_live_<k>of<n>_ratio`` must equal k/n exactly (the wire accounting
+  is pro-rata in the live count — dead peers' zeroed rows compress away);
+- ``ef_backlog_drain_ratio`` must be < 1.0 — a rejoining peer's stale-EF
+  backlog shrinks once it participates again;
+- ``dead_peer_oracle_maxdiff`` must be <= 1e-5 — perturbing a dead peer's
+  gradient cannot move the synced mean (its wire is masked to zero and an
+  all-zero wire decodes to exactly zero).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.compressors import CompressorConfig
+from repro.dist.collectives import wire_bytes_per_device
+
+
+def _schedule_rows(quick: bool) -> list[str]:
+    from repro.elastic import ElasticConfig, expected_live_fraction
+
+    rows = []
+    window = 100 if quick else 1000
+    for rate in (0.1, 0.25, 0.5):
+        cfg = ElasticConfig(rate=rate, seed=0xBE7)
+        frac = expected_live_fraction(cfg, 16, 0, window)
+        rows.append(f"elastic,schedule_live_fraction_rate{int(rate * 100)},0,{frac:.4f}")
+        # the counter hash realizes the configured rate to a few percent
+        assert abs(frac - (1.0 - rate)) < 0.08, (rate, frac)
+    return rows
+
+
+def _wire_rows() -> list[str]:
+    rows = []
+    n, shards = 1_000_000, 16
+    cfg = CompressorConfig(method="tnqsgd", bits=3)
+    full = wire_bytes_per_device(cfg, n, shards, "faithful")
+    for k in (1, 8, 15):
+        b = wire_bytes_per_device(cfg, n, shards, "faithful", live=k)
+        rows.append(f"elastic,wire_live_{k}of{shards}_ratio,0,{b / full:.6f}")
+        assert abs(b / full - k / shards) < 1e-9, (k, b, full)
+    # the size-adaptive fp16 tier: 2 bytes/element on the wire vs fp32 dsgd
+    fp16 = wire_bytes_per_device(CompressorConfig(method="fp16"), n, shards, "faithful")
+    fp32 = wire_bytes_per_device(CompressorConfig(method="dsgd"), n, shards, "dsgd")
+    rows.append(f"elastic,fp16_tier_vs_fp32_wire,0,{fp32 / fp16:.2f}")
+    return rows
+
+
+def _chaos_rows(quick: bool) -> list[str]:
+    """Replay the three scripted traces through the reference codec with EF.
+
+    Constant per-peer gradients make the stale-EF contract measurable in a
+    handful of steps: a dark peer's residual row accumulates one full
+    gradient per missed step, then drains once the trace brings it back.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.compressors import plan_buckets
+    from repro.dist import sharded_codec as sc
+    from repro.dist.reference import reference_sync_state
+    from repro.dist.train_step import TrainStepConfig
+    from repro.elastic import flap, live_mask, partition, solo_survivor
+
+    del quick  # the replays are a few host-mesh-free steps either way
+    n = 4
+    shapes = [(2048,), (257,)]
+    ts = TrainStepConfig(sync="faithful", bucket_mb=1.0 / 64.0,
+                         error_feedback=True,
+                         compressor=CompressorConfig(method="tnqsgd", bits=3))
+    key0 = jax.random.key(0xC4A5)
+    leaves = [
+        (jax.random.normal(jax.random.fold_in(key0, i), (n,) + s) * 0.05
+         ).astype(jnp.float32)
+        for i, s in enumerate(shapes)
+    ]
+    bp = plan_buckets([int(np.prod(s)) for s in shapes], ts.bucket_elements)
+    st = sc.bucket_state_sizes(ts.compressor, bp.sizes, ts.bits_plan)
+
+    rows = []
+    dark_steps, up_steps = 3, 2
+    traces = {
+        "flap": flap(n, peer=1, period=2),
+        "partition": partition(n, down=(0,), down_steps=dark_steps,
+                               up_steps=up_steps),
+        "solo_survivor": solo_survivor(n, survivor=2, steps=2),
+    }
+    for name, trace in traces.items():
+        cfg_el = trace.elastic()
+        ef = [jnp.zeros((n, m), jnp.float32) for m in st]
+        fracs, backlog, drained = [], None, None
+        for step in range(trace.n_steps):
+            lv = live_mask(cfg_el, step, n)
+            fracs.append(float(np.asarray(lv).mean()))
+            _, ef, _, _ = reference_sync_state(
+                ts, leaves, (n,), jax.random.fold_in(key0, 100 + step),
+                ef=ef, live=lv)
+            if name == "partition" and step == dark_steps - 1:
+                backlog = [float(jnp.linalg.norm(e[0])) for e in ef]
+        if name == "partition":
+            drained = [float(jnp.linalg.norm(e[0])) for e in ef]
+        rows.append(f"elastic,chaos_{name}_live_fraction,0,{np.mean(fracs):.4f}")
+        if name == "partition":
+            ratio = max(d / max(b, 1e-12) for d, b in zip(drained, backlog))
+            rows.append(f"elastic,ef_backlog_drain_ratio,0,{ratio:.4f}")
+            assert ratio < 1.0, (drained, backlog)
+
+    # dead-peer invariance oracle: under the solo-survivor mask, scaling the
+    # three dead peers' gradients must leave the synced means bit-identical
+    lv = jnp.asarray(solo_survivor(n, survivor=2).rows[0], jnp.float32)
+    ef = [jnp.zeros((n, m), jnp.float32) for m in st]
+    key = jax.random.fold_in(key0, 999)
+    means, _, _, _ = reference_sync_state(ts, leaves, (n,), key, ef=ef, live=lv)
+    poked = [l.at[0].mul(-5.0).at[1].mul(3.0).at[3].mul(-0.5) for l in leaves]
+    means2, _, _, _ = reference_sync_state(ts, poked, (n,), key, ef=ef, live=lv)
+    diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(means, means2))
+    rows.append(f"elastic,dead_peer_oracle_maxdiff,0,{diff:.2e}")
+    assert diff == 0.0, diff
+    return rows
+
+
+def main(quick: bool = False):
+    rows = []
+    rows.extend(_schedule_rows(quick))
+    rows.extend(_wire_rows())
+    rows.extend(_chaos_rows(quick))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

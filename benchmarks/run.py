@@ -40,14 +40,16 @@ def main(argv=None) -> int:
     quick = not args.full
 
     from benchmarks import (
-        adaptive_bench, collectives_bench, fig1_grad_density, fig3_accuracy, fig4_tradeoff,
-        kernel_bench, lowrank_bench, obs_bench, quant_error,
+        adaptive_bench, collectives_bench, elastic_bench, fig1_grad_density,
+        fig3_accuracy, fig4_tradeoff, kernel_bench, lowrank_bench, obs_bench,
+        quant_error,
     )
 
     suites = {"adaptive": adaptive_bench.main} if args.adaptive else {
         "quant_error": quant_error.main,
         "kernels": kernel_bench.main,
         "collectives": collectives_bench.main,
+        "elastic": elastic_bench.main,
         "lowrank": lowrank_bench.main,
         "obs": obs_bench.main,
         "fig1_grad_density": fig1_grad_density.main,

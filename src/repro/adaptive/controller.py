@@ -64,6 +64,11 @@ class AdaptiveConfig:
     switch_threshold: float = 0.02
     # Retained compiled steps in the runtime's cache (LRU beyond this).
     max_cached_steps: int = 8
+    # Elastic: the expected live fraction must move by more than this
+    # relative margin before the budget is re-based on it — a single peer
+    # flap otherwise thrashes the compiled-step cache through spurious
+    # budget (and hence bit-plan) changes.
+    live_hysteresis: float = 0.25
 
     def __post_init__(self):
         if not (1 <= self.min_bits <= self.max_bits <= 8):
@@ -76,6 +81,8 @@ class AdaptiveConfig:
             raise ValueError("switch_threshold must be >= 0")
         if self.max_cached_steps < 1:
             raise ValueError("max_cached_steps must be >= 1")
+        if not (0.0 <= self.live_hysteresis < 1.0):
+            raise ValueError("live_hysteresis must be in [0, 1)")
 
 
 class BitPlan(NamedTuple):
@@ -96,11 +103,21 @@ def _tail_rows(tails: PowerLawTail | Sequence[PowerLawTail]) -> list[PowerLawTai
     return list(tails)
 
 
-def budget_bytes(cfg: AdaptiveConfig, ccfg: CompressorConfig, sizes: Sequence[int]) -> int:
-    """Global wire budget in bytes/step over the fused bucket list."""
-    if cfg.wire_budget_mb > 0:
-        return int(cfg.wire_budget_mb * (1 << 20))
-    return int(wire_bytes(ccfg, list(sizes)))
+def budget_bytes(cfg: AdaptiveConfig, ccfg: CompressorConfig, sizes: Sequence[int],
+                 live_frac: float = 1.0) -> int:
+    """Global wire budget in bytes/step over the fused bucket list.
+
+    ``live_frac`` (elastic) is the expected fraction of peers contributing
+    per step: with fewer live peers the fleet puts proportionally fewer
+    bytes on the interconnect, so each surviving peer's budget grows by
+    ``1/live_frac`` — the controller re-spends the freed fleet bandwidth
+    on wider codebooks instead of leaving it idle.
+    """
+    if not 0.0 < live_frac <= 1.0:
+        raise ValueError(f"live_frac {live_frac} outside (0, 1]")
+    base = int(cfg.wire_budget_mb * (1 << 20)) if cfg.wire_budget_mb > 0 \
+        else int(wire_bytes(ccfg, list(sizes)))
+    return int(base / live_frac)
 
 
 def _solve_bucket(tail: PowerLawTail, dens: EmpiricalDensity | None, k: int,

@@ -57,6 +57,8 @@ class AdaptiveStepper:
     # stubbed-builder tests) still replan cleanly
     obs = None
     drift = None
+    _live_frac = 1.0
+    _n_dp = 1
 
     def __init__(self, cfg, mesh, logical, opt, ts: TrainStepConfig, batch0,
                  opt_state_like: Any = None, params_like: Any = None,
@@ -82,6 +84,14 @@ class AdaptiveStepper:
         self._cache: collections.OrderedDict[tuple[int, ...], Any] = collections.OrderedDict()
         self.plan: BitPlan | None = None
         self.tails = None  # last telemetry-estimated stacked PowerLawTail
+        # Elastic: budget re-base factor — the expected live fraction last
+        # adopted past ``live_hysteresis`` (1.0 = full participation).
+        self._live_frac = 1.0
+        self._n_dp = 1
+        from repro.dist import sharding
+
+        for a in sharding.manual_axes(mesh):
+            self._n_dp *= mesh.shape[a]
         # First build fixes pspecs and the bucket layout (uniform plan).
         step0, self.pspecs = self._build(None)
         self.sizes = tsmod.local_bucket_sizes(params_like, mesh, self.pspecs, ts)
@@ -107,20 +117,33 @@ class AdaptiveStepper:
 
     @property
     def budget(self) -> int:
-        return budget_bytes(self.ts.adaptive, self.ts.compressor, self.sizes)
+        return budget_bytes(self.ts.adaptive, self.ts.compressor, self.sizes,
+                            live_frac=self._live_frac)
 
-    def replan(self, tstate: Any) -> BitPlan:
+    def replan(self, tstate: Any, step: int = 0) -> BitPlan:
         """Host-side: merge peer telemetry, estimate tails/densities,
         re-solve bits, and adopt the new plan only past the hysteresis
         margin (the first replan away from the uniform bootstrap always
         adopts — there is nothing compiled worth protecting yet)."""
         if self.obs is not None:
             with self.obs.span("adaptive.replan"):
-                return self._replan(tstate)
-        return self._replan(tstate)
+                return self._replan(tstate, step)
+        return self._replan(tstate, step)
 
-    def _replan(self, tstate: Any) -> BitPlan:
+    def _replan(self, tstate: Any, step: int = 0) -> BitPlan:
         acfg = self.ts.adaptive
+        if getattr(self.ts, "elastic", None) is not None:
+            # Re-base the budget on the expected live fraction over the
+            # upcoming window — host-side replay of the same counter hash
+            # the compiled step evaluates, so no device round trip.  The
+            # relative hysteresis keeps a single flap from thrashing the
+            # compiled-step cache through a spurious budget change.
+            from repro.elastic.schedule import expected_live_fraction
+
+            frac = expected_live_fraction(self.ts.elastic, self._n_dp, step,
+                                          acfg.replan_every)
+            if abs(frac - self._live_frac) > acfg.live_hysteresis * self._live_frac:
+                self._live_frac = frac
         merged = telemetry.aggregate_peers(jax.device_get(tstate))
         if float(merged.steps) < acfg.warmup_steps:
             return self.plan if self.plan is not None else BitPlan(
@@ -147,7 +170,7 @@ class AdaptiveStepper:
     def step(self, params, opt_state, ef_state, tstate, batch, i: int):
         acfg = self.ts.adaptive
         if i and i % acfg.replan_every == 0:
-            self.replan(tstate)
+            self.replan(tstate, step=i)
         fn = self._step_for(self.bits)
         step = jnp.uint32(i)
         if self.ts.error_feedback:

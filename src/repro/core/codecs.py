@@ -194,6 +194,9 @@ class Codec:
     chunkable: bool = True
     #: the method's fidelity knob is ``cfg.rank`` (else ``cfg.bits``)
     rank_based: bool = False
+    #: fixed wire bits/element for plan-less passthrough codecs (``fp16``:
+    #: 16); ``None`` means the width is ``cfg.bits`` (the quantizers)
+    fixed_wire_bits: int | None = None
 
     # -- planning ----------------------------------------------------------
     def plan(self, cfg: CompressorConfig, flat: jax.Array, stat, use_pallas: bool):
@@ -322,6 +325,79 @@ class QuantizerCodec(Codec):
         return jnp.concatenate([words.reshape(n_chunks, wc), lv], axis=1), resid[: flat.size]
 
 
+class Fp16Codec(Codec):
+    """Raw half-precision passthrough: the size-adaptive small-bucket tier.
+
+    Small buckets (below ``TrainStepConfig.fp16_threshold`` elements) skip
+    quantization entirely and ship bitcast fp16 — the Hivemind
+    ``SizeAdaptiveCompression`` pattern: for tiny tensors the codebook
+    overhead (s+1 words) rivals the payload and full half-precision is both
+    cheaper to compute and lower-error.  The wire is two fp16 values packed
+    per uint32 word (low half = even element), so it rides the same fused
+    uint32 tensor as every other codec.  ``plan`` is ``None`` (nothing to
+    fit), the encode draws no RNG (rounding is deterministic
+    nearest-even), and the EF residual is the roundoff ``flat − f32(f16(
+    flat))``.  ``cfg.bits`` is ignored (see ``fixed_wire_bits``).
+    """
+
+    name = "fp16"
+    chunkable = True
+    rank_based = False
+    fixed_wire_bits = 16
+
+    def plan(self, cfg, flat, stat, use_pallas):
+        return None
+
+    def wire_words(self, cfg, n):
+        return (n + 1) // 2
+
+    def wire_bytes(self, cfg, n):
+        return 2 * n
+
+    @staticmethod
+    def _pack(flat: jax.Array) -> jax.Array:
+        h = flat.astype(jnp.float16)
+        if h.size % 2:
+            h = jnp.pad(h, (0, 1))
+        u = jax.lax.bitcast_convert_type(h, jnp.uint16).astype(jnp.uint32)
+        return u[0::2] | (u[1::2] << 16)
+
+    @staticmethod
+    def _unpack(rows: jax.Array, n: int) -> jax.Array:
+        lo = (rows & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+        hi = (rows >> 16).astype(jnp.uint16)
+        u = jnp.stack([lo, hi], axis=-1).reshape(rows.shape[:-1] + (-1,))
+        h = jax.lax.bitcast_convert_type(u, jnp.float16)
+        return h[..., :n].astype(jnp.float32)
+
+    def encode(self, cfg, flat, pln, key, use_pallas):
+        return self._pack(flat)
+
+    def encode_residual(self, cfg, flat, pln, key, use_pallas, aux=None):
+        wire = self._pack(flat)
+        resid = flat - flat.astype(jnp.float16).astype(jnp.float32)
+        return wire, resid, None
+
+    def decode_reduce(self, cfg, rows, n, use_pallas):
+        return jnp.mean(self._unpack(rows, n), axis=0)
+
+    def decode_rows(self, cfg, rows, n, use_pallas):
+        return self._unpack(rows, n)
+
+    def chunk_elems(self, cfg, n, n_chunks):
+        # chunks pad to 2 elements so packed chunk words slice cleanly
+        return (n + (-n) % (n_chunks * 2)) // n_chunks
+
+    def chunk_wire_words(self, cfg, n, n_chunks):
+        return self.chunk_elems(cfg, n, n_chunks) // 2
+
+    def encode_chunks(self, cfg, flat, pln, key, n_chunks, use_pallas):
+        padded = jnp.pad(flat, (0, (-flat.size) % (n_chunks * 2)))
+        words = self._pack(padded)
+        resid = flat - flat.astype(jnp.float16).astype(jnp.float32)
+        return words.reshape(n_chunks, -1), resid
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
@@ -375,6 +451,7 @@ def known_methods() -> tuple[str, ...]:
 for _m in METHODS:
     register_codec(QuantizerCodec(_m))
 del _m
+register_codec(Fp16Codec())
 
 
 # ---------------------------------------------------------------------------
@@ -438,6 +515,29 @@ def bucket_cfgs(
     if len(plan) != n_buckets:
         raise ValueError(f"bit plan has {len(plan)} entries for {n_buckets} buckets")
     return [bucket_cfg_entry(cfg, e) for e in plan]
+
+
+def size_adaptive_plan(
+    cfg: CompressorConfig, plan: Sequence | None, sizes: Sequence[int],
+    threshold: int,
+) -> Sequence | None:
+    """Apply the fp16 small-bucket tier to a per-bucket plan.
+
+    Buckets of at most ``threshold`` elements are overridden to the
+    ``fp16`` passthrough codec (the Hivemind ``SizeAdaptiveCompression``
+    pattern — see :class:`Fp16Codec`); larger buckets keep their ``plan``
+    entry (or ``cfg`` itself when ``plan`` is None).  ``threshold <= 0``
+    disables the tier and returns ``plan`` unchanged, so tier-off graphs
+    stay byte-identical.  Trace-time Python: the tier decision is static
+    per compiled step, like every other plan entry.
+    """
+    if threshold <= 0 or not any(int(m) <= threshold for m in sizes):
+        return plan
+    base = list(plan) if plan is not None else [cfg] * len(sizes)
+    if len(base) != len(sizes):
+        raise ValueError(f"bit plan has {len(base)} entries for {len(sizes)} buckets")
+    return tuple(("fp16", cfg.bits) if int(m) <= threshold else e
+                 for e, m in zip(base, sizes))
 
 
 def bucket_state_sizes(

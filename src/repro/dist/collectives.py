@@ -21,12 +21,26 @@ at any instant.
 
 The compression ratio vs fp32 is therefore ~``32 / bits`` for two_phase and
 faithful — independent of ``shards`` — matching the paper's wire model.
+
+Elastic accounting: every function accepts ``live`` (the number of peers
+actually contributing gradients this step).  ``wire_bytes_per_device``
+scales pro-rata by ``live / shards`` — dead peers ship a zeroed wire row
+whose bytes never traverse their links, and the two-phase relay is
+attributed to the contributions it carries; ``decode_hbm_bytes`` decodes
+``live`` meaningful rows; ``encode_hbm_bytes`` is *unchanged* by ``live``
+(the straggler contract: every peer's encode runs even when its wire is
+masked, so the encode-side HBM traffic is paid regardless).
 """
 from __future__ import annotations
 
-from repro.core.compressors import METHODS, CompressorConfig, wire_bytes
+from repro.core.compressors import METHODS, CompressorConfig
 
 MODES = ("dsgd", "two_phase", "hierarchical", "faithful")
+
+
+def _check_live(live, shards: int) -> None:
+    if live is not None and not 1 <= live <= shards:
+        raise ValueError(f"live peer count {live} outside [1, {shards}]")
 
 
 def _plan_entry(bits):
@@ -45,49 +59,66 @@ def _bucket_cfg(cfg: CompressorConfig, bits) -> CompressorConfig:
     return cfg if bits is None else bucket_cfg_entry(cfg, bits)
 
 
-def wire_bytes_per_device(cfg: CompressorConfig, n, shards: int, mode: str, bits=None) -> float:
+def wire_bytes_per_device(cfg: CompressorConfig, n, shards: int, mode: str, bits=None,
+                          live: int | None = None) -> float:
     """Per-device, per-hop wire bytes for one n-element gradient sync.
 
     ``n`` may be a sequence of per-bucket sizes with a matching sequence of
     per-bucket ``bits`` entries — plain bit widths or ``("method", value)``
     codec-plan entries (the adaptive fused wire format); the cost is then
-    the sum over buckets, each chunked per the mode.  Rank-based codecs put
-    an indivisible factor pair on the wire, so their two-phase cost is the
-    full wire (tiled all-to-all rows, no phase-2 refinement).
+    the sum over buckets, each chunked per the mode.  Codecs without
+    chunk-aligned wires (rank-based factor pairs) put an indivisible wire
+    on the all-to-all rows, so their two-phase cost is the full wire.
+
+    ``live`` (elastic): with ``k`` of ``shards`` peers contributing, each
+    link carries ``k/shards`` of the full-participation payload — dead
+    peers' zeroed rows never leave their HBM, and the two-phase phase-2
+    relay (structural, always on) is attributed pro-rata to the live
+    contributions it forwards.
     """
     if isinstance(n, list | tuple):
         bl = bits if isinstance(bits, list | tuple) and not _plan_entry(bits) \
             else [bits] * len(n)
         if len(bl) != len(n):
             raise ValueError(f"{len(bl)} bit-widths vs {len(n)} buckets")
-        return sum(wire_bytes_per_device(cfg, nb, shards, mode, b) for nb, b in zip(n, bl))
+        return sum(wire_bytes_per_device(cfg, nb, shards, mode, b, live)
+                   for nb, b in zip(n, bl))
     if mode not in MODES:
         raise ValueError(f"unknown sync mode {mode!r}; expected one of {MODES}")
     if shards < 1:
         raise ValueError("shards must be >= 1")
+    _check_live(live, shards)
+    frac = 1.0 if live is None else live / shards
     if mode == "dsgd" or cfg.method == "dsgd":
-        return 4.0 * n / shards
+        return frac * 4.0 * n / shards
     bcfg = _bucket_cfg(cfg, bits)
-    if bcfg.method not in METHODS:
-        from repro.core.codecs import get_codec
+    from repro.core.codecs import get_codec
 
-        full = float(get_codec(bcfg.method).wire_bytes(bcfg, n))
+    codec = get_codec(bcfg.method)
+    if not codec.chunkable:
+        full = float(codec.wire_bytes(bcfg, n))
         if mode == "two_phase":
-            return full          # full wire tiled into every all-to-all row
-        if mode == "faithful":
-            return full / shards
-        return full + full / shards
+            base = full          # full wire tiled into every all-to-all row
+        elif mode == "faithful":
+            base = full / shards
+        else:
+            base = full + full / shards
+        return frac * base
+    # analytic ceil chunk (the codec's actual chunk_elems pads a little
+    # further for pack alignment; the model ignores that sub-percent slack)
     chunk = -(-n // shards)
     if mode == "two_phase":
-        return float(wire_bytes(bcfg, chunk))
+        return frac * float(codec.wire_bytes(bcfg, chunk))
     if mode == "faithful":
-        return wire_bytes(bcfg, n) / shards
+        return frac * codec.wire_bytes(bcfg, n) / shards
     # hierarchical: intra-pod two-phase chunk + the pod-mean faithful
     # exchange across pods, spread over the pod's members.
-    return float(wire_bytes(bcfg, chunk)) + wire_bytes(bcfg, n) / shards
+    return frac * (float(codec.wire_bytes(bcfg, chunk))
+                   + codec.wire_bytes(bcfg, n) / shards)
 
 
-def decode_hbm_bytes(cfg: CompressorConfig, n, peers: int, fused: bool, bits=None) -> float:
+def decode_hbm_bytes(cfg: CompressorConfig, n, peers: int, fused: bool, bits=None,
+                     live: int | None = None) -> float:
     """HBM bytes one device moves to decode + average ``peers`` gathered
     n-element wire rows (the decode half of ``faithful`` / the reduce side of
     ``two_phase``).
@@ -101,7 +132,14 @@ def decode_hbm_bytes(cfg: CompressorConfig, n, peers: int, fused: bool, bits=Non
 
     Both include the per-peer codebook reads.  ``n``/``bits`` may be
     per-bucket sequences (the adaptive fused wire format); the cost sums.
+    ``live`` (elastic) overrides the row multiplier: only ``live`` of the
+    gathered rows carry meaningful payload, so
+    ``decode_hbm_bytes(cfg, n, peers, fused, live=k) ==
+    decode_hbm_bytes(cfg, n, k, fused)``.
     """
+    _check_live(live, peers)
+    if live is not None:
+        peers = live
     if isinstance(n, list | tuple):
         bl = bits if isinstance(bits, list | tuple) and not _plan_entry(bits) \
             else [bits] * len(n)
@@ -113,14 +151,15 @@ def decode_hbm_bytes(cfg: CompressorConfig, n, peers: int, fused: bool, bits=Non
     bcfg = _bucket_cfg(cfg, bits)
     # The registry is the single source of truth for wire geometry: one
     # (wire_words,) uint32 row per peer — packed codes + bitcast codebook
-    # for the quantizers, the bitcast factor pair for rank-based codecs
-    # (cross-checked against the traced collective operands in
-    # ``tests/test_analysis.py``).
+    # for the quantizers, the bitcast factor pair for rank-based codecs,
+    # packed half words for the fp16 tier (cross-checked against the traced
+    # collective operands in ``tests/test_analysis.py``).
     words = 4.0 * peers * get_codec(bcfg.method).wire_words(bcfg, n)
     if bcfg.method not in METHODS:
-        # Rank-based decode: read every peer's factor pair, reconstruct
-        # (fused keeps the per-peer (n,) reconstructions in VMEM; unfused
-        # writes + re-reads them before the mean).
+        # Registry codecs without an unpack-codes pass (rank-based factor
+        # reconstruction, the fp16 bitcast): read every peer's row,
+        # materialize the per-peer (n,) values (fused keeps them in VMEM;
+        # unfused writes + re-reads them before the mean).
         if fused:
             return words + 4.0 * n
         return words + 2 * 4.0 * peers * n + 4.0 * n
@@ -130,7 +169,8 @@ def decode_hbm_bytes(cfg: CompressorConfig, n, peers: int, fused: bool, bits=Non
 
 
 def encode_hbm_bytes(cfg: CompressorConfig, n, fused: bool, *, ef: bool = True,
-                     adaptive: bool = True, bits=None) -> float:
+                     adaptive: bool = True, bits=None,
+                     live: int | None = None) -> float:
     """HBM bytes one device moves to turn an n-element gradient bucket into
     wire words + next EF residual (the encode half of every sync mode).
 
@@ -160,7 +200,13 @@ def encode_hbm_bytes(cfg: CompressorConfig, n, fused: bool, *, ef: bool = True,
     subsampled sort — better statistics for strictly fewer bytes only once
     the EF/telemetry sweeps are in play).  ``n``/``bits`` may be per-bucket
     sequences (the heterogeneous adaptive wire); the cost sums.
+
+    ``live`` is accepted for signature symmetry but **does not change the
+    cost**: the elastic straggler contract keeps every peer's encode
+    running (masking happens on the wire tensor afterwards), so the
+    encode-side HBM traffic is paid whether or not the peer is live.
     """
+    del live  # encode always runs — see the docstring
     if isinstance(n, list | tuple):
         bl = bits if isinstance(bits, list | tuple) and not _plan_entry(bits) \
             else [bits] * len(n)
@@ -173,12 +219,25 @@ def encode_hbm_bytes(cfg: CompressorConfig, n, fused: bool, *, ef: bool = True,
     from repro.core.codecs import get_codec
 
     bcfg = _bucket_cfg(cfg, bits)
+    codec = get_codec(bcfg.method)
+    if bcfg.method not in METHODS and codec.chunkable:
+        # Plan-less passthrough (fp16): one cast+pack sweep — read g
+        # (+ the EF read/write when on), write the packed half words,
+        # write the cast residual.  One jitted graph, fused == unfused.
+        words = 4.0 * codec.wire_words(bcfg, n)
+        total = 4.0 * n
+        if ef:
+            total += 8.0 * n
+        total += words
+        if ef:
+            total += 4.0 * n
+        return total
     if bcfg.method not in METHODS:
         # Rank-based encode: EF-correct sweep, two power-iteration matmul
         # reads of the bucket, the factor-pair wire write, the own
         # reconstruction, and the residual write-back.  The factorization
         # is one jitted graph either way, so fused == unfused here.
-        words = 4.0 * get_codec(bcfg.method).wire_words(bcfg, n)
+        words = 4.0 * codec.wire_words(bcfg, n)
         total = 4.0 * n                      # stats/correct: read g
         if ef:
             total += 8.0 * n                 # ... read e, write corrected

@@ -34,10 +34,17 @@ import jax.numpy as jnp
 
 from repro.adaptive import telemetry as adaptive_telemetry
 from repro.core import compressors
+from repro.core.codecs import size_adaptive_plan
 from repro.core.compressors import CompressorConfig, plan
 from repro.obs import metrics as obs_metrics
 
 from . import sharded_codec as sc
+
+# Elastic replay note: every ``live=`` parameter below reuses the mesh
+# path's own masking helpers (``sc._mask_wire`` / ``sc._mask_resid`` /
+# ``sc._live_scale``) on the identical operands, so a k-of-n live subset
+# replays bit-for-bit — the chaos-harness contract
+# ``tests/test_mesh_invariance.py`` pins.
 
 
 def _fold(key: jax.Array, i: int) -> jax.Array:
@@ -145,7 +152,7 @@ def _peer_stats(cfg: CompressorConfig, buckets: list, use_pallas: bool,
 def bucketed_faithful_ring_mean(
     cfg: CompressorConfig, buckets: list, key, use_pallas: bool = False,
     bits: Sequence | None = None, stats: list | None = None,
-    aux: list | None = None,
+    aux: list | None = None, live: jax.Array | None = None,
 ) -> tuple[list, list]:
     """``sc.bucketed_faithful_ring_mean`` over stacked (n, m_b) buckets.
     ``aux[b]`` (optional) stacks the per-peer codec aux tails (n, extra_b).
@@ -157,6 +164,7 @@ def bucketed_faithful_ring_mean(
     cfgs = sc._bucket_cfgs(cfg, len(buckets), bits)
     codecs = [sc.get_codec(c.method) for c in cfgs]
     stats = _peer_stats(cfg, buckets, use_pallas, stats)
+    scale = None if live is None else sc._live_scale(live, n)
     means, states = [], []
     for b, sb in enumerate(buckets):
         wires, rows = [], []
@@ -166,32 +174,42 @@ def bucketed_faithful_ring_mean(
             w, r, a = codecs[b].encode_residual(
                 cfgs[b], flat, pln, jax.random.fold_in(keys[i], b), use_pallas,
                 aux=aux[b][i] if aux is not None and aux[b] is not None else None)
+            if live is not None:
+                w = sc._mask_wire(w, live[i])
+                r = sc._mask_resid(r, flat, live[i])
             wires.append(w)
             rows.append(sc._state_row(r, a))
         states.append(jnp.stack(rows))
-        means.append(codecs[b].decode_reduce(cfgs[b], jnp.stack(wires), sb.shape[1],
-                                             use_pallas))
+        mean_b = codecs[b].decode_reduce(cfgs[b], jnp.stack(wires), sb.shape[1],
+                                         use_pallas)
+        means.append(mean_b if scale is None else mean_b * scale)
     return means, states
 
 
 def bucketed_two_phase_mean(
     cfg: CompressorConfig, buckets: list, key, use_pallas: bool = False,
     bits: Sequence | None = None, stats: list | None = None,
-    aux: list | None = None,
+    aux: list | None = None, live: jax.Array | None = None,
 ) -> tuple[list, list]:
     """``sc.bucketed_two_phase_mean`` over stacked (n, m_b) buckets.
-    Returns ``(mean_buckets, state_stacked)``."""
+    Returns ``(mean_buckets, state_stacked)``.  With ``live``, phase 1
+    masks dead peers' contributions and renormalizes; phase 2 (the relay
+    of already-averaged chunks) runs unmasked — chunk ownership is
+    structural, mirroring the mesh body."""
     n = buckets[0].shape[0]
     cfgs = sc._bucket_cfgs(cfg, len(buckets), bits)
     codecs = [sc.get_codec(c.method) for c in cfgs]
     if n == 1:
         flats = [sb[0].astype(jnp.float32) for sb in buckets]
         return flats, [
-            sc._state_row(jnp.zeros_like(f),
-                          aux[b][0] if aux is not None and aux[b] is not None else None)[None]
+            sc._state_row(
+                jnp.zeros_like(f) if live is None
+                else sc._mask_resid(jnp.zeros_like(f), f, live[0]),
+                aux[b][0] if aux is not None and aux[b] is not None else None)[None]
             for b, f in enumerate(flats)]
     keys = [jax.random.split(_fold(k, j)) for j, k in enumerate(_in_keys(key, n))]
     stats = _peer_stats(cfg, buckets, use_pallas, stats)
+    scale = None if live is None else sc._live_scale(live, n)
     means, states = [], []
     for b, sb in enumerate(buckets):
         size = sb.shape[1]
@@ -202,20 +220,27 @@ def bucketed_two_phase_mean(
             ki = jax.random.fold_in(keys[i][0], b)
             if codecs[b].chunkable:
                 w, r = codecs[b].encode_chunks(cfgs[b], flat, pln, ki, n, use_pallas)
+                if live is not None:
+                    w = sc._mask_wire(w, live[i])
+                    r = sc._mask_resid(r, flat, live[i])
                 chunk_rows.append(w)
                 a = None
             else:
                 w, r, a = codecs[b].encode_residual(
                     cfgs[b], flat, pln, ki, use_pallas,
                     aux=aux[b][i] if aux is not None and aux[b] is not None else None)
+                if live is not None:
+                    w = sc._mask_wire(w, live[i])
+                    r = sc._mask_resid(r, flat, live[i])
                 wires.append(w)
             rows.append(sc._state_row(r, a))
         states.append(jnp.stack(rows))
         if not codecs[b].chunkable:
             # tiled all-to-all == all-gather: every peer decodes the same
             # stacked wires into the same full mean in phase 1
-            means.append(codecs[b].decode_reduce(cfgs[b], jnp.stack(wires), size,
-                                                 use_pallas))
+            fm = codecs[b].decode_reduce(cfgs[b], jnp.stack(wires), size,
+                                         use_pallas)
+            means.append(fm if scale is None else fm * scale)
             continue
         mc = codecs[b].chunk_elems(cfgs[b], size, n)
         chunks = [
@@ -224,6 +249,8 @@ def bucketed_two_phase_mean(
                 use_pallas)
             for j in range(n)
         ]
+        if scale is not None:
+            chunks = [ch * scale for ch in chunks]
         wires2 = [
             codecs[b].encode(cfgs[b], chunks[j],
                              codecs[b].plan(cfgs[b], chunks[j], None, use_pallas),
@@ -238,16 +265,20 @@ def bucketed_two_phase_mean(
 def bucketed_hierarchical_mean(
     cfg: CompressorConfig, buckets: list, n_pod: int, key, use_pallas: bool = False,
     bits: Sequence | None = None, stats: list | None = None,
-    aux: list | None = None,
+    aux: list | None = None, live: jax.Array | None = None,
 ) -> tuple[list, list]:
     """``sc.bucketed_hierarchical_mean``: intra-pod two-phase (keys folded by
     the *full* dp index), faithful pod-mean exchange across pods.  The EF
     state (residual + codec aux) is the intra-pod stage's; the cross-pod
-    stage runs aux-cold (mirroring the mesh path)."""
+    stage runs aux-cold (mirroring the mesh path).  With ``live``, each
+    stage renormalizes over its own live members: a pod is live iff any
+    member is, so pods weigh equally (as in the full-participation
+    mean-of-pod-means)."""
     n = buckets[0].shape[0]
     nd = n // n_pod
     k1, k2 = jax.random.split(key)
     stats = _peer_stats(cfg, buckets, use_pallas, stats)
+    mat = None if live is None else live.reshape(n_pod, nd)
     pod_means, pod_resids = [], []
     for p in range(n_pod):
         in_keys = [_fold(k1, p * nd + d) for d in range(nd)]
@@ -256,12 +287,15 @@ def bucketed_hierarchical_mean(
             aux_p = [a[p * nd:(p + 1) * nd] if a is not None else None for a in aux]
         m, r = bucketed_two_phase_mean(
             cfg, [sb[p * nd:(p + 1) * nd] for sb in buckets], in_keys, use_pallas,
-            bits, stats[p * nd:(p + 1) * nd], aux_p)
+            bits, stats[p * nd:(p + 1) * nd], aux_p,
+            live=None if mat is None else mat[p])
         pod_means.append(m)
         pod_resids.append(r)
     stacked = [jnp.stack([pod_means[p][b] for p in range(n_pod)])
                for b in range(len(buckets))]
-    means, _ = bucketed_faithful_ring_mean(cfg, stacked, k2, use_pallas, bits)
+    pod_live = None if mat is None else jnp.max(mat, axis=1)
+    means, _ = bucketed_faithful_ring_mean(cfg, stacked, k2, use_pallas, bits,
+                                           live=pod_live)
     resids = [jnp.concatenate([pod_resids[p][b] for p in range(n_pod)])
               for b in range(len(buckets))]
     return means, resids
@@ -273,7 +307,7 @@ def bucketed_hierarchical_mean(
 
 
 def reference_sync_state(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Array,
-                         ef=None, tstate=None):
+                         ef=None, tstate=None, live: jax.Array | None = None):
     """Full bucketed-sync replica over the bucket-resident state layout.
 
     Replays ``train_step._sync_buckets`` for every peer on one device:
@@ -303,9 +337,13 @@ def reference_sync_state(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Arr
     per_peer = [compressors.bucket_concat([x[j] for x in stacked_leaves], bp)
                 for j in range(n)]
     compressed = not (ts.sync == "dsgd" or cfg.method == "dsgd")
+    # Same size-adaptive tier rewrite as ``train_step._sync_buckets`` —
+    # small buckets ship raw fp16 when ``ts.fp16_threshold`` is set.
+    bits = size_adaptive_plan(cfg, ts.bits_plan, bp.sizes,
+                              getattr(ts, "fp16_threshold", 0))
     # Split each EF row into the residual prefix and the codec-opaque aux
     # tail (``state_extra``; empty for the quantizers — rows pass untouched).
-    cfgs = sc._bucket_cfgs(cfg, bp.n_buckets, ts.bits_plan)
+    cfgs = sc._bucket_cfgs(cfg, bp.n_buckets, bits)
     extras = [sc.get_codec(c.method).state_extra(c, m)
               for c, m in zip(cfgs, bp.sizes)]
     aux = None
@@ -335,18 +373,25 @@ def reference_sync_state(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Arr
     buckets = [jnp.stack([per_peer[j][b] for j in range(n)])
                for b in range(bp.n_buckets)]
     if not compressed:
-        means, resids = [jnp.mean(sb, axis=0) for sb in buckets], None
+        if live is None:
+            means = [jnp.mean(sb, axis=0) for sb in buckets]
+        else:
+            scale = sc._live_scale(live, n)
+            means = [jnp.mean(sb * live[:, None], axis=0) * scale
+                     for sb in buckets]
+        resids = None
     elif ts.sync == "faithful":
         means, resids = bucketed_faithful_ring_mean(cfg, buckets, key,
-                                                    cfg.use_pallas, ts.bits_plan, stats,
-                                                    aux)
+                                                    cfg.use_pallas, bits, stats,
+                                                    aux, live)
     elif ts.sync == "two_phase" or len(dp_sizes) == 1:
         means, resids = bucketed_two_phase_mean(cfg, buckets, key,
-                                                cfg.use_pallas, ts.bits_plan, stats, aux)
+                                                cfg.use_pallas, bits, stats, aux,
+                                                live)
     else:
         means, resids = bucketed_hierarchical_mean(cfg, buckets, n_pod, key,
-                                                   cfg.use_pallas, ts.bits_plan, stats,
-                                                   aux)
+                                                   cfg.use_pallas, bits, stats,
+                                                   aux, live)
     cm = None
     if ts.metrics_compression:
         rows = []
@@ -364,7 +409,8 @@ def reference_sync_state(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Arr
     return compressors.bucket_split(means, bp, shapes), resids, new_t, cm
 
 
-def reference_sync(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Array) -> list:
+def reference_sync(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Array,
+                   live: jax.Array | None = None) -> list:
     """Synced gradient mean as every peer of the mesh must compute it.
 
     ``stacked_leaves``: one (n, *leaf_shape) fp32 array per gradient leaf
@@ -381,7 +427,11 @@ def reference_sync(ts, stacked_leaves: list, dp_sizes: tuple, key: jax.Array) ->
     n_pod = n // dp_sizes[-1]
     shapes = [tuple(x.shape[1:]) for x in stacked_leaves]
     if ts.bucket_mb > 0:
-        return reference_sync_state(ts, stacked_leaves, dp_sizes, key)[0]
+        return reference_sync_state(ts, stacked_leaves, dp_sizes, key, live=live)[0]
+    if live is not None:
+        raise ValueError("elastic live masks require the bucketed codec "
+                         "(bucket_mb > 0); the per-leaf path has no live-set "
+                         "semantics")
     out = []
     for i, x in enumerate(stacked_leaves):
         ki = jax.random.fold_in(key, i)

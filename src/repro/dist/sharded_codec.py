@@ -289,6 +289,54 @@ def _bucket_aux(aux: list | None, b: int):
     return aux[b] if aux is not None else None
 
 
+# Elastic partial participation (``repro.elastic``): each bucketed body
+# optionally takes ``live``, a replicated (n,) float32 0/1 mask over the
+# collective's peers.  The semantics, identical across modes:
+#
+# - a dropped peer's encode still runs (the straggler-timeout contract: the
+#   codec path is side-effect-free), but its *wire* is zeroed before the
+#   collective — a zeroed row decodes to exactly 0.0 for every registered
+#   codec (uniform: α=0 ⇒ code·2α/s−α=0; codebook: all-zero levels look up
+#   0; low-rank: P=0,Q=0 ⇒ PQᵀ=0; fp16: bits 0 ⇒ 0.0) — so the decode-
+#   reduce mean is Σ_live/n and one multiply by ``n / max(n_live, 1)``
+#   renormalizes it to the live-peer mean;
+# - the dropped peer's EF row keeps the whole corrected bucket
+#   (``e ← g + e``, nothing transmitted), so the residual is recovered —
+#   not lost — when the peer rejoins;
+# - liveness itself is a replicated pure function of ``(seed, step)``
+#   (``elastic.schedule.live_mask``) — no mask collective, so the traced
+#   collective count per mode is unchanged (REPRO101 budgets hold).
+#
+# ``live=None`` (the default) skips every masking op: elastic-off graphs
+# stay byte-identical to the pre-elastic codec.
+
+
+def _self_live(live, axis_name, n: int):
+    """This peer's own liveness scalar from the replicated (n,) mask."""
+    if live is None:
+        return None
+    return live[compat.flat_axis_index(axis_name)] if n > 1 else live[0]
+
+
+def _live_scale(live: jax.Array, n: int) -> jax.Array:
+    """The ``n / max(n_live, 1)`` renormalization of a zero-filled mean."""
+    return jnp.float32(n) / jnp.maximum(jnp.sum(live), jnp.float32(1.0))
+
+
+def _mask_wire(wire: jax.Array, self_live) -> jax.Array:
+    """Zero a dropped peer's wire words (uint32 select; see above)."""
+    if self_live is None:
+        return wire
+    return jnp.where(self_live > 0, wire, jnp.zeros_like(wire))
+
+
+def _mask_resid(resid: jax.Array, flat: jax.Array, self_live) -> jax.Array:
+    """Dropped peers keep the whole corrected bucket as their EF residual."""
+    if self_live is None:
+        return resid
+    return jnp.where(self_live > 0, resid, flat)
+
+
 def bucketed_faithful_ring_mean(
     cfg: CompressorConfig,
     buckets: list,
@@ -298,6 +346,7 @@ def bucketed_faithful_ring_mean(
     bits: Sequence | None = None,
     stats: list | None = None,
     aux: list | None = None,
+    live: jax.Array | None = None,
 ) -> tuple[list, list]:
     """Faithful ring mean over a bucket list with ONE all-gather total.
 
@@ -313,6 +362,8 @@ def bucketed_faithful_ring_mean(
     n = compat.axis_size(axis_name)
     if n > 1:
         key = _peer_key(key, axis_name)
+    self_live = _self_live(live, axis_name, n)
+    scale = None if live is None else _live_scale(live, n)
     cfgs = _bucket_cfgs(cfg, len(buckets), bits)
     codecs = [get_codec(c.method) for c in cfgs]
     parts, states, sizes = [], [], []
@@ -326,7 +377,7 @@ def bucketed_faithful_ring_mean(
             wire, resid, aux_new = codecs[b].encode_residual(
                 cfgs[b], flat, pln, jax.random.fold_in(key, b), use_pallas,
                 aux=_bucket_aux(aux, b))
-            states.append(_state_row(resid, aux_new))
+            states.append(_state_row(_mask_resid(resid, flat, self_live), aux_new))
             parts.append(wire)
             sizes.append(flat.size)
     if n == 1:
@@ -335,19 +386,23 @@ def bucketed_faithful_ring_mean(
         # every multi-peer site uses (exact codebook lookup).
         with jax.named_scope("obs.decode"):
             means = [
-                codecs[b].decode_reduce(cfgs[b], parts[b][None], m, use_pallas)
+                codecs[b].decode_reduce(cfgs[b], _mask_wire(parts[b], self_live)[None],
+                                        m, use_pallas)
                 for b, m in enumerate(sizes)
             ]
+            if scale is not None:
+                means = [m * scale for m in means]
         return means, states
     with jax.named_scope("obs.collective"):
-        wire = jnp.concatenate(parts)
+        wire = _mask_wire(jnp.concatenate(parts), self_live)
         rows = compat.all_gather_stacked(wire, axis_name)                # (n, T)
     with jax.named_scope("obs.decode"):
         means, off = [], 0
         for b, m in enumerate(sizes):
             w = codecs[b].wire_words(cfgs[b], m)
-            means.append(codecs[b].decode_reduce(cfgs[b], rows[:, off:off + w], m,
-                                                 use_pallas))
+            mean_b = codecs[b].decode_reduce(cfgs[b], rows[:, off:off + w], m,
+                                             use_pallas)
+            means.append(mean_b if scale is None else mean_b * scale)
             off += w
     return means, states
 
@@ -361,6 +416,7 @@ def bucketed_two_phase_mean(
     bits: Sequence | None = None,
     stats: list | None = None,
     aux: list | None = None,
+    live: jax.Array | None = None,
 ) -> tuple[list, list]:
     """Two-phase compressed mean over a bucket list: ONE all-to-all (phase 1)
     plus ONE all-gather (phase 2) for every bucket together.
@@ -373,16 +429,28 @@ def bucketed_two_phase_mean(
     per-bucket plan entries (both phases use the bucket's width).  ``aux``
     threads codec warm state; returns ``(mean_buckets, state_rows)`` as in
     :func:`bucketed_faithful_ring_mean`.
+
+    Elastic note: dropout applies to *gradient contributions*, not to
+    transport — chunk ownership is structural, so phase 2 runs unmasked
+    (every peer, live or dropped, relays its chunk of the already-
+    renormalized live mean; a dropped peer only zeroes its phase-1 rows).
     """
     n = compat.axis_size(axis_name)
     flats = [g.reshape(-1).astype(jnp.float32) for g in buckets]
     cfgs = _bucket_cfgs(cfg, len(buckets), bits)
     codecs = [get_codec(c.method) for c in cfgs]
+    self_live = _self_live(live, axis_name, n)
     if n == 1:
         # Size-1 axis: nothing is transmitted (identity mean), so the EF
         # residual of this stage is exactly zero; codec aux passes through.
-        return flats, [_state_row(jnp.zeros_like(f), _bucket_aux(aux, b))
-                       for b, f in enumerate(flats)]
+        # A dropped solo member keeps the whole bucket as residual — the
+        # hierarchical caller excludes it at the cross-pod stage (pod_live).
+        return flats, [
+            _state_row(jnp.zeros_like(f) if self_live is None
+                       else jnp.where(self_live > 0, jnp.zeros_like(f), f),
+                       _bucket_aux(aux, b))
+            for b, f in enumerate(flats)]
+    scale = None if live is None else _live_scale(live, n)
     k1, k2 = jax.random.split(_peer_key(key, axis_name))
     parts, states, widths = [], [], []
     with jax.named_scope("obs.encode"):
@@ -401,11 +469,11 @@ def bucketed_two_phase_mean(
                 wire_b, resid, aux_new = codecs[b].encode_residual(
                     cfgs[b], flat, pln, kb, use_pallas, aux=_bucket_aux(aux, b))
                 rows_b = jnp.tile(wire_b[None], (n, 1))
-            states.append(_state_row(resid, aux_new))
+            states.append(_state_row(_mask_resid(resid, flat, self_live), aux_new))
             parts.append(rows_b)
             widths.append(rows_b.shape[1])
     with jax.named_scope("obs.collective"):
-        wire = jnp.concatenate(parts, axis=1)                            # (n, T1)
+        wire = _mask_wire(jnp.concatenate(parts, axis=1), self_live)     # (n, T1)
         recv = compat.all_to_all_rows(wire, axis_name)                   # (n, T1)
 
     # Phase 1 decode: this peer's chunk of each chunkable bucket's mean;
@@ -418,10 +486,11 @@ def bucketed_two_phase_mean(
             off += widths[b]
             if codecs[b].chunkable:
                 mc = codecs[b].chunk_elems(cfgs[b], flat.size, n)
-                mean_chunks.append(codecs[b].decode_reduce(cfgs[b], rows_b, mc, use_pallas))
+                ch = codecs[b].decode_reduce(cfgs[b], rows_b, mc, use_pallas)
+                mean_chunks.append(ch if scale is None else ch * scale)
             else:
-                full_means[b] = codecs[b].decode_reduce(cfgs[b], rows_b, flat.size,
-                                                        use_pallas)
+                fm = codecs[b].decode_reduce(cfgs[b], rows_b, flat.size, use_pallas)
+                full_means[b] = fm if scale is None else fm * scale
                 mean_chunks.append(None)
 
     # Phase 2: re-encode the mean chunks, one fused all-gather back (skipped
@@ -464,6 +533,7 @@ def bucketed_hierarchical_mean(
     bits: Sequence | None = None,
     stats: list | None = None,
     aux: list | None = None,
+    live: jax.Array | None = None,
 ) -> tuple[list, list]:
     """Two-phase inside the innermost data axis, faithful exchange of the
     pod means across the leading pod axes — 3 collectives total.
@@ -481,7 +551,20 @@ def bucketed_hierarchical_mean(
     pod_axes, data_axis = dp[:-1], dp[-1:]
     k1, k2 = jax.random.split(key)
     k1 = _peer_key(k1, dp)
+    live_sub = pod_live = None
+    if live is not None:
+        # Renormalization is per stage: the intra-pod mean over the pod's
+        # live members (this pod's row of the (n_pod, nd) mask), the
+        # cross-pod mean over live pods (a pod is live iff any member is).
+        # Pods weigh equally regardless of live count — the same mean-of-
+        # pod-means composition as full participation.
+        n_pod = compat.axis_size(pod_axes)
+        nd = compat.axis_size(data_axis)
+        mat = live.reshape(n_pod, nd)
+        live_sub = mat[compat.flat_axis_index(pod_axes)]
+        pod_live = jnp.max(mat, axis=1)
     means, states = bucketed_two_phase_mean(cfg, buckets, data_axis, k1, use_pallas,
-                                            bits, stats, aux)
-    means, _ = bucketed_faithful_ring_mean(cfg, means, pod_axes, k2, use_pallas, bits)
+                                            bits, stats, aux, live_sub)
+    means, _ = bucketed_faithful_ring_mean(cfg, means, pod_axes, k2, use_pallas, bits,
+                                           live=pod_live)
     return means, states

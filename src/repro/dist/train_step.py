@@ -44,7 +44,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.adaptive import telemetry as adaptive_telemetry
 from repro.adaptive.controller import AdaptiveConfig
 from repro.core import compressors
+from repro.core.codecs import size_adaptive_plan
 from repro.core.compressors import CompressorConfig
+from repro.elastic.schedule import ElasticConfig, live_mask
 from repro.models import transformer
 from repro.obs import metrics as obs_metrics
 from repro.optim.optimizers import Optimizer
@@ -112,6 +114,15 @@ class TrainStepConfig:
     bits_plan: tuple[int, ...] | None = None
     metrics_gnorm: bool = True
     metrics_compression: bool = False
+    #: deterministic partial participation (``repro.elastic``): the step
+    #: computes a per-step live mask in-graph and the sync renormalizes the
+    #: peer mean over the live count; dropped peers' EF rows keep
+    #: accumulating.  Adds ``metrics["live"]`` / ``metrics["live_count"]``.
+    elastic: ElasticConfig | None = None
+    #: size-adaptive compression tier: buckets of at most this many (local)
+    #: elements ship raw half precision through the registered ``fp16``
+    #: passthrough codec instead of the quantizer (0 = off).
+    fp16_threshold: int = 0
 
     def __post_init__(self):
         if self.sync not in SYNC_MODES:
@@ -130,6 +141,12 @@ class TrainStepConfig:
                 raise ValueError("adaptive telemetry requires the bucketed codec (bucket_mb > 0)")
         if self.metrics_compression and self.bucket_mb <= 0:
             raise ValueError("metrics_compression requires the bucketed codec (bucket_mb > 0)")
+        if self.elastic is not None and self.bucket_mb <= 0:
+            raise ValueError("elastic sync requires the bucketed codec (bucket_mb > 0)")
+        if self.fp16_threshold < 0:
+            raise ValueError("fp16_threshold must be >= 0 (0 disables the tier)")
+        if self.fp16_threshold > 0 and self.bucket_mb <= 0:
+            raise ValueError("fp16_threshold targets the bucketed codec (bucket_mb > 0)")
         if self.bits_plan is not None:
             if self.bucket_mb <= 0:
                 raise ValueError("bits_plan targets the bucketed codec (bucket_mb > 0)")
@@ -250,7 +267,7 @@ def _sync_leaf(ts: TrainStepConfig, g: jax.Array, key: jax.Array, dp: tuple) -> 
 
 
 def _sync_buckets(ts: TrainStepConfig, vals: list, key: jax.Array, dp: tuple,
-                  ef=None, tstate=None):
+                  ef=None, tstate=None, live=None):
     """Bucketed sync of a flat leaf list.
     Returns (mean_leaves, resid_buckets, new_telemetry, mean_buckets,
     metric_sums) — ``metric_sums`` is the pre-psum
@@ -275,15 +292,22 @@ def _sync_buckets(ts: TrainStepConfig, vals: list, key: jax.Array, dp: tuple,
     ``bucket_split`` runs once, on the final mean.  The flat mean buckets
     are also returned so the caller can derive ``gnorm`` without
     re-reducing the leaf pytree.
+
+    ``live`` (elastic partial participation) is the replicated (n,) 0/1
+    float mask over the dp peers; see the elastic block in
+    ``dist.sharded_codec`` for the masking/renormalization semantics.
     """
     cfg = ts.compressor
     bp = compressors.plan_buckets([v.size for v in vals], ts.bucket_elements)
     buckets = compressors.bucket_concat(vals, bp)
     compressed = not (ts.sync == "dsgd" or cfg.method == "dsgd")
+    # The size-adaptive fp16 tier rewrites the per-bucket plan before any
+    # geometry (EF row split, wire offsets) is derived from it.
+    bits = size_adaptive_plan(cfg, ts.bits_plan, bp.sizes, ts.fp16_threshold)
     # Split each bucket's EF row into the residual prefix and the codec-
     # opaque aux tail (``state_extra``; quantizer rows pass through whole,
     # keeping those graphs unchanged).
-    cfgs = sc._bucket_cfgs(cfg, bp.n_buckets, ts.bits_plan)
+    cfgs = sc._bucket_cfgs(cfg, bp.n_buckets, bits)
     extras = [sc.get_codec(c.method).state_extra(c, g.size)
               for c, g in zip(cfgs, buckets)]
     aux = None
@@ -306,19 +330,30 @@ def _sync_buckets(ts: TrainStepConfig, vals: list, key: jax.Array, dp: tuple,
         new_t = adaptive_telemetry.update_telemetry(
             tstate, buckets, decay=ts.adaptive.ema, use_pallas=cfg.use_pallas,
             stats=stats)
-    bits = ts.bits_plan
     if not compressed:
-        means = [jax.lax.pmean(b, dp) for b in buckets]
+        if live is None:
+            means = [jax.lax.pmean(b, dp) for b in buckets]
+        else:
+            # Uncompressed elastic dsgd: zero dead contributions inside the
+            # same per-bucket pmean, renormalize over the live count — the
+            # collective count (one pmean per bucket) is unchanged.
+            n = compat.axis_size(dp)
+            self_live = live[compat.flat_axis_index(dp)]
+            scale = jnp.float32(n) / jnp.maximum(jnp.sum(live), jnp.float32(1.0))
+            means = [jax.lax.pmean(b * self_live, dp) * scale for b in buckets]
         resids = None
     elif ts.sync == "faithful":
         means, resids = sc.bucketed_faithful_ring_mean(cfg, buckets, dp, key,
-                                                       cfg.use_pallas, bits, stats, aux)
+                                                       cfg.use_pallas, bits, stats, aux,
+                                                       live)
     elif ts.sync == "two_phase" or len(dp) == 1:
         means, resids = sc.bucketed_two_phase_mean(cfg, buckets, dp, key,
-                                                   cfg.use_pallas, bits, stats, aux)
+                                                   cfg.use_pallas, bits, stats, aux,
+                                                   live)
     else:
         means, resids = sc.bucketed_hierarchical_mean(cfg, buckets, dp, key,
-                                                      cfg.use_pallas, bits, stats, aux)
+                                                      cfg.use_pallas, bits, stats, aux,
+                                                      live)
     shapes = [v.shape for v in vals]
     mean_leaves = compressors.bucket_split(means, bp, shapes)
     cm = None
@@ -364,8 +399,13 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
     ``ts.metrics_compression`` the per-bucket
     :class:`~repro.obs.metrics.CompressionMetrics` pytree (leaves stacked
     per data peer) is the last output:
-    ``sync_fn(grads, key[, ef][, tstate]) ->
+    ``sync_fn(grads, key[, live][, ef][, tstate]) ->
     (mean[, new_ef][, new_tstate][, gnorm][, metrics])``.
+
+    Migration note (elastic): with ``ts.elastic`` set the replicated
+    ``(n_dp,)`` float live mask is a positional input directly after the
+    key — callers holding the raw sync fn must thread it like the key
+    (``make_train_step`` computes it in-graph from the step counter).
 
     Collective accounting: the compression metrics share ONE vectorized
     ``psum`` over the model axes with the gnorm scalar, so enabling them
@@ -389,7 +429,11 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
 
     def sync(stacked, key, *extras):
         idx = 0
-        ef = tstate = None
+        ef = tstate = live = None
+        if ts.elastic is not None:
+            # the replicated (n_dp,) live mask rides the signature like the
+            # key: computed in-graph by the caller (_step), no collective
+            live, idx = extras[idx], idx + 1
         if ts.error_feedback:
             ef, idx = extras[idx], idx + 1
         if ts.adaptive is not None:
@@ -399,7 +443,8 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
         if ts.bucket_mb > 0:
             t_in = None if tstate is None else jax.tree.map(lambda x: x[0], tstate)
             ef_in = None if ef is None else [e[0] for e in ef]
-            out, resid, new_t, gsrc, cm = _sync_buckets(ts, vals, key, dp, ef_in, t_in)
+            out, resid, new_t, gsrc, cm = _sync_buckets(ts, vals, key, dp, ef_in, t_in,
+                                                        live)
         else:
             out = [_sync_leaf(ts, g, jax.random.fold_in(key, i), dp)
                    for i, g in enumerate(vals)]
@@ -434,6 +479,8 @@ def _make_sync_fn(ts: TrainStepConfig, mesh, pspecs: Any, grads_like: Any):
 
     in_specs = [g_in, P()]
     out_specs = [g_out]
+    if ts.elastic is not None:
+        in_specs.append(P())  # the replicated live mask
     if ts.error_feedback:
         in_specs.append(ef_bucket_spec(mesh))
         out_specs.append(ef_bucket_spec(mesh))
@@ -631,8 +678,13 @@ def make_train_step(
             grads = constrain_client_grads(grads)
             key = jax.random.fold_in(jax.random.key(_KEY_SEED), step)
             new_ef, new_t, gnorm, cmetrics = ef_state, tstate, None, None
+            live = None
+            if ts.elastic is not None and sync_fn is not None:
+                live = live_mask(ts.elastic, step, n_dp)
             if sync_fn is not None:
                 args = [grads, key]
+                if live is not None:
+                    args.append(live)
                 if ts.error_feedback:
                     # bucket-resident EF state rides straight into the sync
                     # shard_map — no leaf-spec constraint round-trip
@@ -669,6 +721,9 @@ def make_train_step(
             metrics["gnorm"] = jnp.full((max(n_dp, 1),), gnorm, jnp.float32)
         if cmetrics is not None:
             metrics["compression"] = cmetrics
+        if live is not None:
+            metrics["live"] = live
+            metrics["live_count"] = jnp.full((max(n_dp, 1),), jnp.sum(live), jnp.float32)
         return new_params, new_opt, new_ef, new_t, metrics
 
     if ts.error_feedback and adaptive:
@@ -711,8 +766,10 @@ def init_ef_state(params_like: Any, mesh, pspecs: Any, ts: TrainStepConfig) -> A
     sizes = local_bucket_sizes(params_like, mesh, pspecs, ts)
     # Rank-based codecs carry extra per-shard state (e.g. the warm-started
     # powersgd Q factor) appended after the residual; quantizer buckets keep
-    # their exact pre-registry row width.
-    state_sizes = sc.bucket_state_sizes(ts.compressor, sizes, ts.bits_plan)
+    # their exact pre-registry row width.  The fp16 tier rewrite must be
+    # applied here too so the rows match what the sync region splits off.
+    plan = size_adaptive_plan(ts.compressor, ts.bits_plan, sizes, ts.fp16_threshold)
+    state_sizes = sc.bucket_state_sizes(ts.compressor, sizes, plan)
     dp = sharding.manual_axes(mesh)
     n = 1
     for a in dp:

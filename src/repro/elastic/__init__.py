@@ -1,0 +1,29 @@
+"""Elastic partial-participation sync: deterministic peer dropout.
+
+``repro.elastic`` owns the *who-is-live* half of elastic sync; the sync
+stack (``dist.train_step`` / ``dist.sharded_codec`` / ``dist.reference``)
+owns what a live mask *means* (zeroed wire contribution, live-count
+renormalization, stale-EF accumulation for dropped peers).
+
+- :mod:`repro.elastic.schedule` — :class:`ElasticConfig` and the
+  counter-hash :func:`live_mask`: a pure function of ``(seed, step,
+  peer_id)`` that every peer (and the single-device reference replay)
+  evaluates identically, traced or on host — no collective, no wall-clock.
+- :mod:`repro.elastic.chaos` — the fault-injection harness: scripted
+  :class:`ChaosTrace` dropout tables (flap / partition / solo-survivor
+  scenarios) with a JSON file format for the ``--chaos-trace`` launch flag.
+"""
+from .chaos import ChaosTrace, flap, load_trace, partition, save_trace, solo_survivor
+from .schedule import ElasticConfig, expected_live_fraction, live_mask
+
+__all__ = [
+    "ChaosTrace",
+    "ElasticConfig",
+    "expected_live_fraction",
+    "flap",
+    "live_mask",
+    "load_trace",
+    "partition",
+    "save_trace",
+    "solo_survivor",
+]

@@ -1,0 +1,121 @@
+"""Deterministic peer-dropout schedule (the ``PeerSchedule`` of elastic sync).
+
+The live mask for step ``t`` is a pure counter-based hash of ``(seed, t,
+peer_id)`` — the Philox/murmur-finalizer idiom: no RNG state, no wall
+clock, no collective.  Every peer of the mesh and the single-device
+reference replay evaluate the same ``uint32`` arithmetic and therefore
+agree on the mask bit-for-bit, which is what lets
+``tests/test_mesh_invariance.py`` pin k-of-n subsets against
+``dist.reference`` under the same mask.  The hash works identically on
+traced step counters (inside the jitted train step) and on Python ints
+(host-side replay, the adaptive controller's expected-participation
+window).
+
+Participation floor: a step whose hash (or trace row) leaves fewer than
+``min_live`` peers is replaced by the canonical fallback mask — the first
+``min_live`` peers live — so the sync never divides by an empty live set.
+The rule is itself deterministic and replayed identically everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# murmur3 finalizer constants: full-avalanche uint32 mixing, wrap-around
+# multiplies are the point (uint32 arithmetic is mod 2^32 in XLA and numpy).
+_C1 = 0x9E3779B9
+_C2 = 0x85EBCA6B
+_C3 = 0xC2B2AE35
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Partial-participation schedule for the sync stack.
+
+    ``rate`` is the per-peer per-step dropout probability realized by the
+    counter hash (0 disables hashing entirely: everyone is live).
+    ``trace`` replaces the hash with a scripted 0/1 table of shape
+    ``(T, n_peers)`` indexed by ``step % T`` — the fault-injection harness
+    (:mod:`repro.elastic.chaos`) builds these.  ``min_live`` is the
+    participation floor (see module docstring).
+    """
+
+    rate: float = 0.0
+    seed: int = 0x17E
+    trace: tuple[tuple[int, ...], ...] | None = None
+    min_live: int = 1
+
+    def __post_init__(self):
+        if not (0.0 <= self.rate <= 1.0):
+            raise ValueError(f"dropout rate must be in [0, 1], got {self.rate}")
+        if self.min_live < 1:
+            raise ValueError("min_live must be >= 1 (the sync needs a live peer)")
+        if self.trace is not None:
+            rows = tuple(tuple(int(v) for v in row) for row in self.trace)
+            if not rows or not rows[0]:
+                raise ValueError("chaos trace must be a non-empty (T, n) table")
+            width = len(rows[0])
+            for r, row in enumerate(rows):
+                if len(row) != width:
+                    raise ValueError(
+                        f"chaos trace row {r} has {len(row)} peers, row 0 has {width}")
+                if any(v not in (0, 1) for v in row):
+                    raise ValueError(f"chaos trace row {r} must be 0/1 entries")
+            object.__setattr__(self, "trace", rows)
+
+
+def _hash_mask(seed: int, step, n: int, rate: float) -> jax.Array:
+    """(n,) float32 0/1 mask from the counter hash; ``step`` int or traced."""
+    threshold = min(int(round(rate * (1 << 32))), (1 << 32) - 1)
+    if threshold == 0:
+        return jnp.ones((n,), jnp.float32)
+    step = jnp.asarray(step).astype(jnp.uint32)
+    peer = jnp.arange(n, dtype=jnp.uint32)
+    h = (jnp.uint32(seed & 0xFFFFFFFF) * jnp.uint32(_C1)) \
+        ^ (step * jnp.uint32(_C2)) ^ (peer * jnp.uint32(_C3))
+    h ^= h >> 16
+    h *= jnp.uint32(_C2)
+    h ^= h >> 13
+    h *= jnp.uint32(_C3)
+    h ^= h >> 16
+    return (h >= jnp.uint32(threshold)).astype(jnp.float32)
+
+
+def live_mask(cfg: ElasticConfig, step, n: int) -> jax.Array:
+    """The (n,) float32 live mask for ``step`` (1.0 = live, 0.0 = dropped).
+
+    ``step`` may be a Python int (host replay) or a traced integer scalar
+    (inside the jitted train step) — the arithmetic is identical.  The
+    participation floor replaces under-populated masks with the first
+    ``min_live`` peers (see module docstring).
+    """
+    if cfg.trace is not None:
+        table = jnp.asarray(cfg.trace, jnp.float32)
+        if table.shape[1] != n:
+            raise ValueError(
+                f"chaos trace is for {table.shape[1]} peers, mesh has {n}")
+        mask = table[jnp.asarray(step).astype(jnp.uint32) % table.shape[0]]
+    else:
+        mask = _hash_mask(cfg.seed, step, n, cfg.rate)
+    floor = min(cfg.min_live, n)
+    fallback = (jnp.arange(n) < floor).astype(jnp.float32)
+    return jnp.where(jnp.sum(mask) >= floor, mask, fallback)
+
+
+def expected_live_fraction(cfg: ElasticConfig | None, n: int,
+                           start_step: int, window: int) -> float:
+    """Mean live fraction over ``[start_step, start_step + window)``.
+
+    Host-side replay of the exact in-graph schedule — the adaptive
+    controller budgets the *upcoming* replan window against this, not the
+    static mesh size.  ``cfg=None`` (elastic off) is full participation.
+    """
+    if cfg is None or n <= 0:
+        return 1.0
+    window = max(int(window), 1)
+    total = 0.0
+    for s in range(int(start_step), int(start_step) + window):
+        total += float(jnp.mean(live_mask(cfg, s, n)))
+    return total / window

@@ -55,6 +55,17 @@ def main(argv=None) -> int:
                     help="bucketed-codec target bucket size; 0 = per-leaf codec")
     ap.add_argument("--ef", action="store_true",
                     help="error feedback on the worker-side compressor (not checkpointed)")
+    ap.add_argument("--dropout-rate", type=float, default=0.0,
+                    help="elastic: per-(step,peer) dropout probability under "
+                         "the deterministic counter-hash schedule (0 = full "
+                         "participation)")
+    ap.add_argument("--chaos-trace", default=None,
+                    help="elastic: scripted live-mask JSON trace "
+                         "(repro.elastic.save_trace format); overrides "
+                         "--dropout-rate")
+    ap.add_argument("--fp16-threshold", type=int, default=0,
+                    help="buckets of at most this many local elements ship "
+                         "raw fp16 instead of the quantizer (0 = off)")
     ap.add_argument("--adaptive", action="store_true",
                     help="online tail telemetry + wire-budget bit allocation per bucket")
     ap.add_argument("--wire-budget-mb", type=float, default=0.0,
@@ -90,6 +101,21 @@ def main(argv=None) -> int:
 
         acfg = AdaptiveConfig(wire_budget_mb=args.wire_budget_mb,
                               replan_every=args.replan_every)
+    ecfg = None
+    if args.chaos_trace:
+        from repro.elastic import load_trace
+
+        ecfg = load_trace(args.chaos_trace).elastic()
+        print(f"elastic: chaos trace {args.chaos_trace} "
+              f"({len(ecfg.trace)} steps, wraps modulo length)")
+    elif args.dropout_rate > 0.0:
+        from repro.elastic import ElasticConfig
+
+        ecfg = ElasticConfig(rate=args.dropout_rate)
+        print(f"elastic: scheduled dropout rate {args.dropout_rate}")
+    if ecfg is not None and args.bucket_mb <= 0:
+        ap.error("--dropout-rate/--chaos-trace require the bucketed codec "
+                 "(--bucket-mb > 0)")
     obs_sink = obs_rec = drift_mon = None
     if args.obs_dir:
         from repro.obs import DriftMonitor, JsonlSink, SpanRecorder
@@ -104,6 +130,7 @@ def main(argv=None) -> int:
                                                      rank=args.rank,
                                                      approx_gmin=args.adaptive),
                          bucket_mb=args.bucket_mb, error_feedback=args.ef, adaptive=acfg,
+                         elastic=ecfg, fp16_threshold=args.fp16_threshold,
                          metrics_compression=args.obs_dir is not None)
     batch0 = lm_batch(cfg, jnp.uint32(0), args.batch, args.seq)
     opt_state = opt.init(params)
@@ -167,9 +194,23 @@ def main(argv=None) -> int:
             if drift_mon is not None:
                 drift_mon.check_ratio([row["realized_mse"] for row in event["buckets"]],
                                       [row["predicted_mse"] for row in event["buckets"]], step=i)
+        lvs = ""
+        if ecfg is not None and "live_count" in m:
+            lv = jax.device_get(m["live"]).reshape(-1)
+            n_peers, n_live = int(lv.shape[0]), int(round(float(m["live_count"][0])))
+            lvs = f" live {n_live}/{n_peers}"
+            if n_live < n_peers and obs_sink is not None:
+                from repro.obs.sink import SCHEMA_VERSION
+
+                obs_sink.write({"v": SCHEMA_VERSION, "kind": "dropout",
+                                "step": i, "live": n_live, "n_peers": n_peers,
+                                "dropped": [p for p in range(n_peers)
+                                            if float(lv[p]) == 0.0]})
+            if drift_mon is not None:
+                drift_mon.check_participation(n_live / n_peers, step=i)
         if args.log_every and i % args.log_every == 0:
             gn = f" gnorm {float(m['gnorm'][0]):.3f}" if "gnorm" in m else ""
-            print(f"step {i:5d} loss {float(m['loss'][0]):.4f}{gn}", flush=True)
+            print(f"step {i:5d} loss {float(m['loss'][0]):.4f}{gn}{lvs}", flush=True)
         if args.ckpt_every and args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
             host_p = jax.tree.map(lambda x: jax.device_get(x), (params, opt_state))
             save_checkpoint(args.ckpt_dir, i + 1, host_p)

@@ -11,6 +11,10 @@ in ``core.distributions.tail_from_histogram`` is *clipped* to
 - **error ratio** (:meth:`DriftMonitor.check_ratio`): realized quantization
   MSE exceeding the predicted E_TQ by more than ``ratio_threshold`` — the
   fitted tail no longer describes the data the codec is quantizing.
+- **participation** (:meth:`DriftMonitor.check_participation`): the elastic
+  live fraction falling below ``participation_floor`` — the surviving
+  peers' renormalized mean is being computed from too small a sample for
+  the per-bucket statistics the controller fitted to stay representative.
 
 Each violation produces a :class:`DriftEvent` (kept on the monitor,
 optionally written to a JSONL sink as a ``"drift"`` event) and a Python
@@ -35,10 +39,10 @@ class ObsDriftWarning(UserWarning):
 
 @dataclasses.dataclass(frozen=True)
 class DriftEvent:
-    kind: str     # "tail_regime" | "error_ratio"
-    bucket: int
+    kind: str     # "tail_regime" | "error_ratio" | "participation"
+    bucket: int   # -1 for mesh-wide events (participation)
     step: int
-    value: float  # the offending γ or realized/predicted ratio
+    value: float  # the offending γ, realized/predicted ratio, or live fraction
     lo: float
     hi: float
 
@@ -47,6 +51,10 @@ class DriftEvent:
             return (f"bucket {self.bucket} step {self.step}: Hill tail index "
                     f"gamma={self.value:.3f} railed outside the power-law regime "
                     f"({self.lo:.2f}, {self.hi:.2f}) the controller assumes")
+        if self.kind == "participation":
+            return (f"step {self.step}: live fraction {self.value:.2f} fell "
+                    f"below the participation floor {self.lo:.2f} — the "
+                    f"renormalized mean is running on a thin live set")
         return (f"bucket {self.bucket} step {self.step}: realized/predicted "
                 f"quantization MSE ratio {self.value:.2f} exceeds {self.hi:.2f} "
                 f"— the heavy-tail fit no longer matches the gradients")
@@ -63,16 +71,20 @@ class DriftMonitor:
 
     ``gamma_margin`` is the rail-detection slack around the estimator's
     ``[GAMMA_MIN, GAMMA_MAX]`` clip range; ``ratio_threshold`` the
-    realized/predicted MSE ratio above which a bucket is flagged.
-    ``warn=False`` suppresses ``warnings.warn`` (events are still recorded).
+    realized/predicted MSE ratio above which a bucket is flagged;
+    ``participation_floor`` the elastic live fraction below which a step
+    is flagged.  ``warn=False`` suppresses ``warnings.warn`` (events are
+    still recorded).
     """
 
     def __init__(self, sink=None, gamma_margin: float = 0.02,
-                 ratio_threshold: float = 4.0, warn: bool = True):
+                 ratio_threshold: float = 4.0,
+                 participation_floor: float = 0.5, warn: bool = True):
         self.sink = sink
         self.gamma_lo = GAMMA_MIN + gamma_margin
         self.gamma_hi = GAMMA_MAX - gamma_margin
         self.ratio_threshold = float(ratio_threshold)
+        self.participation_floor = float(participation_floor)
         self.warn = warn
         self.events: list[DriftEvent] = []
 
@@ -114,3 +126,18 @@ class DriftMonitor:
                 self._emit(ev)
                 new.append(ev)
         return new
+
+    def check_participation(self, live_frac, step: int = 0) -> list[DriftEvent]:
+        """Flags a step whose elastic live fraction sits below the floor.
+
+        ``live_frac`` is ``live_count / n_peers`` for the step (any scalar
+        convertible); ``bucket`` is reported as ``-1`` — participation is a
+        mesh-wide property, not a per-bucket one.
+        """
+        frac = float(np.asarray(live_frac, dtype=np.float64).reshape(-1)[0])
+        if not np.isfinite(frac) or frac >= self.participation_floor:
+            return []
+        ev = DriftEvent("participation", -1, int(step), frac,
+                        self.participation_floor, 1.0)
+        self._emit(ev)
+        return [ev]

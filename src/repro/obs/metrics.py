@@ -116,7 +116,7 @@ def local_sums(ts, cfgs: list, buckets: list, stats: list | None,
             rank_t.append(int(cfg_b.rank))
             wire_t.append(int(codec.wire_bytes(cfg_b, m)))
         else:
-            bits_t.append(int(cfg_b.bits))
+            bits_t.append(int(codec.fixed_wire_bits or cfg_b.bits))
             rank_t.append(0)
             wire_t.append(int(codec.wire_bytes(cfg_b, m)))
         zero = jnp.zeros((), jnp.float32)
@@ -127,11 +127,14 @@ def local_sums(ts, cfgs: list, buckets: list, stats: list | None,
         if ef is not None and ef[b] is not None:
             ef_sq = jnp.sum(jnp.square(ef[b][:m].astype(jnp.float32)))
         alpha = clip = pred = zero
+        # Same plan the encode used (deterministic from the same stats, so
+        # XLA CSEs the recomputation — no second statistics sweep).  Plan-
+        # less passthrough codecs (fp16) have no α/E_TQ, like rank-based.
+        pln = None
         if compressed and not codec.rank_based and stats is not None:
-            counts, log_sums, g_max = stats[b][0], stats[b][1], stats[b][2]
-            # Same plan the encode used (deterministic from the same stats,
-            # so XLA CSEs the recomputation — no second statistics sweep).
             pln = codec.plan(cfg_b, flat, stats[b], use_pallas)
+        if pln is not None:
+            counts, log_sums, g_max = stats[b][0], stats[b][1], stats[b][2]
             alpha = pln.alpha.astype(jnp.float32)
             clip = jnp.sum((jnp.abs(flat) > alpha).astype(jnp.float32))
             tail = tail_from_histogram(counts, log_sums, g_max, edges,

@@ -179,6 +179,75 @@ def test_encode_hbm_bytes_model():
         encode_hbm_bytes(cfg, sizes, fused=True, bits=[2])
 
 
+def test_live_scales_wire_pro_rata():
+    """Elastic accounting: k of n live peers put k/n of the full payload on
+    each link, in every mode including the fp32 baseline."""
+    cfg = CompressorConfig(method="tnqsgd", bits=3)
+    for mode in MODES:
+        c = CompressorConfig(method="dsgd") if mode == "dsgd" else cfg
+        full = wire_bytes_per_device(c, N, SHARDS, mode)
+        for k in (1, SHARDS // 2, SHARDS - 1, SHARDS):
+            assert wire_bytes_per_device(c, N, SHARDS, mode, live=k) == pytest.approx(
+                full * k / SHARDS), (mode, k)
+    # heterogeneous buckets thread live through the per-bucket sum
+    sizes, bits = [400_000, 600_000], [2, 4]
+    assert wire_bytes_per_device(cfg, sizes, SHARDS, "faithful", bits, live=4) == \
+        pytest.approx(wire_bytes_per_device(cfg, sizes, SHARDS, "faithful", bits) * 4 / SHARDS)
+    for bad in (0, SHARDS + 1):
+        with pytest.raises(ValueError):
+            wire_bytes_per_device(cfg, N, SHARDS, "faithful", live=bad)
+
+
+def test_live_decode_encode_hbm():
+    """Decode reads only the live rows; encode always runs (straggler
+    contract), so live leaves its cost untouched."""
+    from repro.dist.collectives import encode_hbm_bytes
+
+    cfg = CompressorConfig(method="tnqsgd", bits=3)
+    peers = 16
+    for fused in (True, False):
+        for k in (1, 8, 15):
+            assert decode_hbm_bytes(cfg, N, peers, fused, live=k) == pytest.approx(
+                decode_hbm_bytes(cfg, N, k, fused)), (fused, k)
+        assert encode_hbm_bytes(cfg, N, fused=fused, live=1) == pytest.approx(
+            encode_hbm_bytes(cfg, N, fused=fused))
+    with pytest.raises(ValueError):
+        decode_hbm_bytes(cfg, N, peers, fused=True, live=peers + 1)
+
+
+def test_fp16_tier_accounting():
+    """The fp16 passthrough tier: 2 bytes/element wire, chunkable two-phase
+    cost, and a decode model without the unpack-codes round-trip."""
+    from repro.core.codecs import get_codec
+    from repro.dist.collectives import encode_hbm_bytes
+
+    cfg = CompressorConfig(method="tnqsgd", bits=3)
+    fp16 = get_codec("fp16")
+    bcfg = CompressorConfig(method="fp16")
+    assert fp16.wire_bytes(bcfg, N) == 2 * N
+    # two_phase ships a ceil chunk, faithful the sharded full wire
+    chunk = -(-N // SHARDS)
+    assert wire_bytes_per_device(cfg, N, SHARDS, "two_phase",
+                                 bits=("fp16", 3)) == pytest.approx(2.0 * chunk)
+    assert wire_bytes_per_device(cfg, N, SHARDS, "faithful",
+                                 bits=("fp16", 3)) == pytest.approx(2.0 * N / SHARDS)
+    # half-precision wire always beats fp32 and loses to <=8-bit quantizers
+    assert wire_bytes_per_device(cfg, N, SHARDS, "faithful", bits=("fp16", 3)) < \
+        4.0 * N / SHARDS
+    assert wire_bytes_per_device(cfg, N, SHARDS, "faithful") < \
+        wire_bytes_per_device(cfg, N, SHARDS, "faithful", bits=("fp16", 3))
+    # decode: per-peer packed half words, no int32 code tensor round-trip
+    peers = 16
+    words = 4.0 * peers * ((N + 1) // 2)
+    assert decode_hbm_bytes(cfg, N, peers, fused=True, bits=("fp16", 3)) == \
+        pytest.approx(words + 4.0 * N)
+    assert decode_hbm_bytes(cfg, N, peers, fused=False, bits=("fp16", 3)) == \
+        pytest.approx(words + 8.0 * peers * N + 4.0 * N)
+    # encode: one cast+pack sweep, identical fused/unfused
+    assert encode_hbm_bytes(cfg, N, fused=True, bits=("fp16", 3)) == pytest.approx(
+        encode_hbm_bytes(cfg, N, fused=False, bits=("fp16", 3)))
+
+
 def test_wire_bytes_per_device_heterogeneous():
     """Mode chunking applies per bucket for sequence inputs."""
     cfg = CompressorConfig(method="tnqsgd", bits=3)

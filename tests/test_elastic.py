@@ -1,0 +1,212 @@
+"""Unit pins for ``repro.elastic``: the deterministic peer schedule, the
+chaos-trace constructors and their JSON format, the fp16 passthrough codec,
+and the size-adaptive tier rewrite.
+
+The schedule is the replayability anchor of the whole elastic subsystem:
+``live_mask`` must be a pure counter-based function of ``(seed, step,
+peer)`` — identical traced and untraced, on every host — because the mesh
+step evaluates it in-graph while the reference replay and the adaptive
+controller's ``expected_live_fraction`` recompute it host-side.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.codecs import get_codec, size_adaptive_plan
+from repro.core.compressors import CompressorConfig
+from repro.elastic import (
+    ChaosTrace,
+    ElasticConfig,
+    expected_live_fraction,
+    flap,
+    live_mask,
+    load_trace,
+    partition,
+    save_trace,
+    solo_survivor,
+)
+
+
+# ---------------------------------------------------------------------------
+# schedule
+# ---------------------------------------------------------------------------
+
+
+def test_live_mask_deterministic_and_replayable():
+    cfg = ElasticConfig(rate=0.3, seed=7)
+    for step in (0, 1, 17, 100_000):
+        a = np.asarray(live_mask(cfg, step, 8))
+        b = np.asarray(live_mask(cfg, step, 8))
+        np.testing.assert_array_equal(a, b)
+        # traced == untraced (the mesh step jits it, the reference doesn't)
+        c = np.asarray(jax.jit(lambda s: live_mask(cfg, s, 8))(jnp.uint32(step)))
+        np.testing.assert_array_equal(a, c)
+        assert a.dtype == np.float32 and set(np.unique(a)) <= {0.0, 1.0}
+
+
+def test_live_mask_rate_extremes_and_floor():
+    n = 8
+    all_on = np.asarray(live_mask(ElasticConfig(rate=0.0), 3, n))
+    np.testing.assert_array_equal(all_on, np.ones(n, np.float32))
+    # rate ~1 drops everyone the hash can: the floor guarantees min_live
+    floored = np.asarray(live_mask(ElasticConfig(rate=1.0, min_live=2), 3, n))
+    assert floored.sum() == 2.0
+    np.testing.assert_array_equal(floored, (np.arange(n) < 2).astype(np.float32))
+    # min_live above n clamps to n
+    np.testing.assert_array_equal(
+        np.asarray(live_mask(ElasticConfig(rate=1.0, min_live=64), 3, n)),
+        np.ones(n, np.float32))
+
+
+def test_live_mask_rate_statistics():
+    cfg = ElasticConfig(rate=0.25, seed=11)
+    counts = [float(np.asarray(live_mask(cfg, s, 16)).sum()) for s in range(200)]
+    frac = sum(counts) / (200 * 16)
+    assert 0.70 <= frac <= 0.80, frac  # ~75% live at 25% dropout
+    # different steps produce different masks (the schedule is not static)
+    masks = {tuple(np.asarray(live_mask(cfg, s, 16)).tolist()) for s in range(50)}
+    assert len(masks) > 10
+
+
+def test_expected_live_fraction_matches_mask_replay():
+    cfg = ElasticConfig(rate=0.4, seed=3)
+    n, start, window = 8, 40, 20
+    want = np.mean([np.asarray(live_mask(cfg, s, n)).mean()
+                    for s in range(start, start + window)])
+    assert expected_live_fraction(cfg, n, start, window) == pytest.approx(want)
+    assert expected_live_fraction(None, n, 0, 10) == 1.0
+    assert expected_live_fraction(ElasticConfig(rate=0.0), n, 0, 10) == 1.0
+
+
+def test_elastic_config_validation():
+    with pytest.raises(ValueError):
+        ElasticConfig(rate=1.5)
+    with pytest.raises(ValueError):
+        ElasticConfig(rate=-0.1)
+    with pytest.raises(ValueError):
+        ElasticConfig(min_live=0)
+    with pytest.raises(ValueError):
+        ElasticConfig(trace=((1, 0), (1,)))  # ragged rows
+    with pytest.raises(ValueError):
+        ElasticConfig(trace=((2, 0),))       # non-binary entry
+
+
+# ---------------------------------------------------------------------------
+# chaos traces
+# ---------------------------------------------------------------------------
+
+
+def test_trace_mode_overrides_hash():
+    cfg = ElasticConfig(trace=((1, 0, 1), (0, 1, 1)))
+    np.testing.assert_array_equal(np.asarray(live_mask(cfg, 0, 3)), [1, 0, 1])
+    np.testing.assert_array_equal(np.asarray(live_mask(cfg, 1, 3)), [0, 1, 1])
+    # steps wrap modulo the trace length
+    np.testing.assert_array_equal(np.asarray(live_mask(cfg, 2, 3)), [1, 0, 1])
+    with pytest.raises(ValueError):
+        live_mask(cfg, 0, 4)  # trace width must match n
+
+
+def test_chaos_constructors():
+    f = flap(4, peer=1, period=2)
+    assert f.n_peers == 4 and f.n_steps == 4
+    assert [r[1] for r in f.rows] == [0, 0, 1, 1]  # down-first flapping
+    assert all(r[i] == 1 for r in f.rows for i in (0, 2, 3))
+
+    p = partition(4, down=2, down_steps=3, up_steps=1)
+    assert p.n_steps == 4
+    assert p.rows[0] == (0, 0, 1, 1) and p.rows[3] == (1, 1, 1, 1)
+    with pytest.raises(ValueError):
+        partition(4, down=4, down_steps=1)  # cannot take down every peer
+
+    s = solo_survivor(4, survivor=2, steps=2)
+    assert all(r == (0, 0, 1, 0) for r in s.rows)
+
+    # the ElasticConfig bridge carries min_live through
+    cfg = f.elastic(min_live=1)
+    assert cfg.trace == f.rows and cfg.min_live == 1
+
+
+def test_trace_json_round_trip(tmp_path):
+    t = partition(6, down=(0, 3), down_steps=2, up_steps=2)
+    path = tmp_path / "trace.json"
+    save_trace(t, path)
+    raw = json.loads(path.read_text())
+    assert raw["version"] == 1 and raw["n_peers"] == 6
+    got = load_trace(path)
+    assert got.rows == t.rows and got.name == t.name
+    # corrupt version is rejected
+    raw["version"] = 99
+    path.write_text(json.dumps(raw))
+    with pytest.raises(ValueError):
+        load_trace(path)
+
+
+# ---------------------------------------------------------------------------
+# fp16 passthrough codec + size-adaptive tier
+# ---------------------------------------------------------------------------
+
+
+def test_fp16_codec_round_trip():
+    c = get_codec("fp16")
+    cfg = CompressorConfig(method="fp16")
+    key = jax.random.key(0)
+    for m in (1, 2, 31, 999, 4096):
+        x = jax.random.normal(jax.random.fold_in(key, m), (m,), jnp.float32)
+        w = c.encode(cfg, x, c.plan(cfg, x, None, False), key, False)
+        assert w.dtype == jnp.uint32 and w.shape == (c.wire_words(cfg, m),)
+        half = x.astype(jnp.float16).astype(jnp.float32)
+        np.testing.assert_array_equal(np.asarray(c.decode_reduce(cfg, w[None], m, False)),
+                                      np.asarray(half))
+        # the elastic contract: an all-zero wire row decodes to exactly zero
+        z = c.decode_reduce(cfg, jnp.zeros_like(w)[None], m, False)
+        assert float(jnp.max(jnp.abs(z))) == 0.0
+        # EF residual is the cast error
+        _, r, aux = c.encode_residual(cfg, x, None, key, False)
+        assert aux is None
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(x - half))
+
+
+def test_fp16_chunks_match_full_encode():
+    c = get_codec("fp16")
+    cfg = CompressorConfig(method="fp16")
+    key = jax.random.key(1)
+    for m, n_chunks in ((999, 4), (1000, 2), (64, 8)):
+        x = jax.random.normal(jax.random.fold_in(key, m), (m,), jnp.float32)
+        rows, r = c.encode_chunks(cfg, x, None, key, n_chunks, False)
+        mc = c.chunk_elems(cfg, m, n_chunks)
+        assert mc % 2 == 0  # packed words never straddle a chunk boundary
+        assert rows.shape == (n_chunks, c.chunk_wire_words(cfg, m, n_chunks))
+        vals = c.decode_rows(cfg, rows, mc, False).reshape(-1)[:m]
+        np.testing.assert_array_equal(
+            np.asarray(vals), np.asarray(x.astype(jnp.float16).astype(jnp.float32)))
+        np.testing.assert_array_equal(
+            np.asarray(r), np.asarray(x - x.astype(jnp.float16).astype(jnp.float32)))
+
+
+def test_size_adaptive_plan():
+    cfg = CompressorConfig(method="tnqsgd", bits=3)
+    sizes = (100, 5000, 2048)
+    # threshold 0 or no small buckets: plan unchanged (None stays None)
+    assert size_adaptive_plan(cfg, None, sizes, 0) is None
+    assert size_adaptive_plan(cfg, (2, 3, 4), sizes, 0) == (2, 3, 4)
+    assert size_adaptive_plan(cfg, None, sizes, 50) is None
+    # small buckets flip to the fp16 tier, large keep their entries
+    got = size_adaptive_plan(cfg, (2, 3, 4), sizes, 1024)
+    assert got == (("fp16", 3), 3, 4)
+    # with no base plan the untouched entries inherit the base config
+    got = size_adaptive_plan(cfg, None, sizes, 2048)
+    assert got[0] == ("fp16", 3) and got[2] == ("fp16", 3) and got[1] == cfg
+    with pytest.raises(ValueError):
+        size_adaptive_plan(cfg, (2, 3), sizes, 1024)  # length mismatch
+
+
+def test_fp16_registered_and_configurable():
+    from repro.core.codecs import known_methods
+
+    assert "fp16" in known_methods()
+    # a CompressorConfig can name it directly (the bucket_cfg_entry path)
+    cfg = CompressorConfig(method="fp16")
+    assert get_codec(cfg.method).fixed_wire_bits == 16

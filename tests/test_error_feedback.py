@@ -1,6 +1,13 @@
-"""Error-feedback extension: residual re-injection cancels truncation bias."""
+"""Error-feedback extension: residual re-injection cancels truncation bias.
+
+The elastic tests at the bottom pin the stale-EF contract of partial
+participation: a dropped peer's residual accumulates its whole corrected
+gradient (nothing is transmitted), and on rejoin the backlog drains through
+one compressed transmission — no gradient mass is lost to the dropout.
+"""
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import CompressorConfig, sample_power_law
 from repro.core.error_feedback import compress_with_feedback, init_error
@@ -138,3 +145,148 @@ assert l_ef[-1] <= l_plain[-1] + 0.1, (l_ef, l_plain)
 print("OK")
 """)
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# elastic: stale-EF recovery and the solo-survivor degenerate live set
+# ---------------------------------------------------------------------------
+
+_LEAF_SHAPES = [(2048,), (999,), (64, 17)]
+
+
+def _elastic_setup(ts, n, seed=0):
+    """Stacked per-peer leaves + zeroed bucket-resident EF for ``ts``."""
+    from repro.core.compressors import plan_buckets
+    from repro.dist import sharded_codec as sc
+
+    key = jax.random.key(seed)
+    leaves = [
+        (jax.random.normal(jax.random.fold_in(key, i), (n,) + s) * 0.05
+         ).astype(jnp.float32)
+        for i, s in enumerate(_LEAF_SHAPES)
+    ]
+    bp = plan_buckets([int(np.prod(s)) for s in _LEAF_SHAPES], ts.bucket_elements)
+    st = sc.bucket_state_sizes(ts.compressor, bp.sizes, ts.bits_plan)
+    ef = [jnp.zeros((n, m), jnp.float32) for m in st]
+    return leaves, bp, ef
+
+
+def _bucket_rows(leaves, bp, peer):
+    """Peer ``peer``'s gradient in bucket layout (the EF state's layout)."""
+    from repro.core.compressors import bucket_concat
+
+    return bucket_concat([x[peer] for x in leaves], bp)
+
+
+def test_stale_ef_accumulates_and_drains_on_rejoin():
+    """Partition chaos: peer 0 dark for 3 steps, then the fleet rejoins.
+
+    While dark, peer 0's residual row must accumulate exactly k·g (its
+    corrected bucket each step — nothing transmitted); within one rejoin
+    step the backlog drains to ordinary quantization error.  The live
+    peers' mean meanwhile tracks *their* renormalized mean, not a mean
+    diluted by the dead peer's zeros.
+    """
+    from repro.dist.reference import reference_sync_state
+    from repro.dist.train_step import TrainStepConfig
+    from repro.elastic import partition
+
+    n, dark_steps = 4, 3
+    ts = TrainStepConfig(
+        sync="faithful", bucket_mb=1.0 / 64.0, error_feedback=True,
+        compressor=CompressorConfig(method="tnqsgd", bits=3))
+    leaves, bp, ef = _elastic_setup(ts, n)
+    trace = partition(n, down=(0,), down_steps=dark_steps, up_steps=1)
+    cfg_el = trace.elastic()
+    from repro.elastic import live_mask
+
+    g0 = _bucket_rows(leaves, bp, 0)
+    key = jax.random.key(42)
+    for step in range(dark_steps):
+        lv = live_mask(cfg_el, step, n)
+        means, ef, _, _ = reference_sync_state(
+            ts, leaves, (n,), jax.random.fold_in(key, step), ef=ef, live=lv)
+        # dead peer's residual is exactly (step+1) copies of its gradient
+        for b in range(bp.n_buckets):
+            np.testing.assert_allclose(
+                np.asarray(ef[b][0]), (step + 1) * np.asarray(g0[b]),
+                rtol=1e-5, atol=1e-8, err_msg=f"dark step {step} bucket {b}")
+        # the mean tracks the live peers' renormalized mean
+        from repro.core.compressors import bucket_concat
+
+        mean_b = bucket_concat(means, bp)
+        live_mean = [jnp.mean(jnp.stack(
+            [_bucket_rows(leaves, bp, p)[b] for p in range(1, n)]), axis=0)
+            for b in range(bp.n_buckets)]
+        for b in range(bp.n_buckets):
+            err = float(jnp.linalg.norm(mean_b[b] - live_mean[b])
+                        / jnp.linalg.norm(live_mean[b]))
+            assert err < 0.35, (step, b, err)
+
+    backlog = [float(jnp.linalg.norm(ef[b][0])) for b in range(bp.n_buckets)]
+    # rejoin: everyone live; peer 0 transmits C(3·g + g) and the backlog
+    # collapses to quantization error — the pinned recovery window is ONE
+    # step for a 3-step outage.
+    lv = live_mask(cfg_el, dark_steps, n)
+    assert float(jnp.sum(lv)) == n
+    means, ef, _, _ = reference_sync_state(
+        ts, leaves, (n,), jax.random.fold_in(key, dark_steps), ef=ef, live=lv)
+    for b in range(bp.n_buckets):
+        drained = float(jnp.linalg.norm(ef[b][0]))
+        assert drained < 0.5 * backlog[b], (b, drained, backlog[b])
+        # and the rejoin mean carries the backlog: peer 0's contribution is
+        # ~4x its per-step gradient, so the mean shifts toward g0
+        assert drained < backlog[b]
+
+
+def test_solo_survivor_every_sync_mode():
+    """k=1 live: the mean must be the survivor's own (compressed) gradient —
+    dead peers cannot move it, and their EF rows keep their full buckets."""
+    from repro.dist.reference import reference_sync_state
+    from repro.dist.train_step import TrainStepConfig
+    from repro.elastic import solo_survivor
+
+    n, survivor = 4, 2
+    lv = jnp.asarray(solo_survivor(n, survivor=survivor).rows[0], jnp.float32)
+    key = jax.random.key(7)
+    for sync, dp_sizes in (("dsgd", (n,)), ("two_phase", (n,)),
+                           ("faithful", (n,)), ("hierarchical", (2, 2))):
+        ts = TrainStepConfig(
+            sync=sync, bucket_mb=1.0 / 64.0, error_feedback=sync != "dsgd",
+            compressor=CompressorConfig(method="tnqsgd", bits=3))
+        leaves, bp, ef = _elastic_setup(ts, n, seed=3)
+        means, resids, _, _ = reference_sync_state(
+            ts, leaves, dp_sizes, key, ef=ef if sync != "dsgd" else None, live=lv)
+        gs = _bucket_rows(leaves, bp, survivor)
+        from repro.core.compressors import bucket_concat
+
+        mean_b = bucket_concat(means, bp)
+        for b in range(bp.n_buckets):
+            err = float(jnp.linalg.norm(mean_b[b] - gs[b]) / jnp.linalg.norm(gs[b]))
+            # loose sanity bar only — two_phase re-quantizes the mean in
+            # phase 2, doubling the noise; the bitwise pins below are the
+            # real contract
+            assert err < 0.5, (sync, b, err)
+        # dead peers cannot move the mean: perturb them, replay, compare
+        poked = [l.at[0].mul(-5.0).at[1].mul(3.0).at[3].mul(-0.5) if survivor != 0
+                 else l for l in leaves]
+        means2, _, _, _ = reference_sync_state(
+            ts, poked, dp_sizes, key, ef=ef if sync != "dsgd" else None, live=lv)
+        for a, b in zip(means, means2):
+            if sync == "dsgd":
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-7)
+            else:
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                              err_msg=f"{sync}: dead peer moved mean")
+        # stale-EF: every dead peer's residual row is its whole bucket
+        if resids is not None:
+            for b in range(bp.n_buckets):
+                for p in range(n):
+                    if p == survivor:
+                        continue
+                    np.testing.assert_allclose(
+                        np.asarray(resids[b][p]),
+                        np.asarray(_bucket_rows(leaves, bp, p)[b]),
+                        rtol=1e-6, atol=1e-8,
+                        err_msg=f"{sync}: peer {p} bucket {b} residual not stale")

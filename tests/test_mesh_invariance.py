@@ -254,8 +254,189 @@ if FULL:
                 ts_for("two_phase", bits_plan=mixed_plan, error_feedback=True,
                        adaptive=AdaptiveConfig(ema=0.9)), exact=False)
 
+# --- elastic: k-of-n live subsets must replay bit-for-bit under the same
+# mask, and a dead peer's gradient must be unable to move the mean (the
+# straggler contract: its encode runs, its wire contribution is zeroed).
+
+
+def masks_for(n):
+    ks = sorted({1, max(n // 2, 1), max(n - 1, 1)})
+    out = []
+    for k in ks:
+        m = [1.0] * k + [0.0] * (n - k)
+        out.append(tuple(m))
+        if k < n:  # a non-prefix subset too — liveness is not positional
+            out.append(tuple(reversed(m)))
+    return sorted(set(out))
+
+
+def run_mesh_live(ts, live, leaves_in):
+    def body(key, lv, *stacked):
+        vals = [x[0] for x in stacked]
+        out, _, _, _, _ = _sync_buckets(ts, vals, key, dp, live=lv)
+        return tuple(o[None] for o in out)
+
+    smap = jax.shard_map(
+        body, mesh=mesh, in_specs=(P(), P()) + (P(dp),) * len(leaves_in),
+        out_specs=tuple(P(dp) for _ in leaves_in),
+        axis_names=set(mesh.axis_names), check_vma=False)
+    return jax.jit(smap)(skey, jnp.asarray(live, jnp.float32), *leaves_in)
+
+
+def check_elastic(name, ts, live, exact):
+    got = run_mesh_live(ts, live, leaves)
+    want = jax.jit(lambda key, lv, *ls: tuple(
+        reference.reference_sync(ts, list(ls), dp_sizes, key, live=lv)))(
+        skey, jnp.asarray(live, jnp.float32), *leaves)
+    for leaf_i, (g, w) in enumerate(zip(got, want)):
+        assert_peer_rows(name, "leaf", leaf_i, np.asarray(g), w, exact)
+    print("OK", name)
+
+
+def check_state_elastic(name, ts, live, exact):
+    # EF + adaptive under a live mask: dropped peers' residual rows must
+    # accumulate the whole corrected bucket (stale-EF), live peers' rows
+    # must match full-participation semantics — both pinned against the
+    # reference replay of the same mask.
+    lv = jnp.asarray(live, jnp.float32)
+    st_sizes = sc.bucket_state_sizes(ts.compressor, BP.sizes, ts.bits_plan)
+    ef = [ef0[b] if st == BP.sizes[b] else
+          (jax.random.normal(jax.random.fold_in(key0, 200 + b), (n, st)) * 0.01
+           ).astype(jnp.float32)
+          for b, st in enumerate(st_sizes)]
+    t0 = jax.tree.map(lambda x: jnp.tile(x[None], (n,) + (1,) * x.ndim),
+                      init_telemetry(BP.n_buckets))
+
+    def body(key, lvr, tstate, *stacked_and_ef):
+        stacked, efr = stacked_and_ef[:len(leaves)], stacked_and_ef[len(leaves):]
+        vals = [x[0] for x in stacked]
+        t_in = jax.tree.map(lambda x: x[0], tstate)
+        out, resid, new_t, _, _ = _sync_buckets(ts, vals, key, dp,
+                                                [e[0] for e in efr], t_in, lvr)
+        return (tuple(o[None] for o in out), tuple(r[None] for r in resid),
+                jax.tree.map(lambda x: x[None], new_t))
+
+    t_spec = jax.tree.map(lambda _: P(dp), t0)
+    smap = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), t_spec) + (P(dp),) * (len(leaves) + len(ef)),
+        out_specs=(tuple(P(dp) for _ in leaves), tuple(P(dp) for _ in ef), t_spec),
+        axis_names=set(mesh.axis_names), check_vma=False)
+    means, resids, new_t = jax.jit(smap)(skey, lv, t0, *leaves, *ef)
+
+    w_means, w_resids, w_t, _ = jax.jit(
+        lambda key, lvr, t, ls, e: reference.reference_sync_state(
+            ts, list(ls), dp_sizes, key, ef=list(e), tstate=t, live=lvr)
+    )(skey, lv, t0, tuple(leaves), tuple(ef))
+
+    for leaf_i, (g, w) in enumerate(zip(means, w_means)):
+        assert_peer_rows(name, "leaf", leaf_i, np.asarray(g), w, exact)
+    for b, (r, w) in enumerate(zip(resids, w_resids)):
+        r, w = np.asarray(r), np.asarray(w)
+        if exact:
+            np.testing.assert_array_equal(r, w, err_msg=f"{name}: resid bucket {b}")
+        else:
+            np.testing.assert_allclose(r, w, atol=1e-6, rtol=1e-6,
+                                       err_msg=f"{name}: resid bucket {b}")
+    print("OK", name)
+
+
+# Full k-of-n sweep (k in {1, n/2, n-1}, prefix + reversed subsets) on the
+# cheap 2-peer mesh and the 1-D 4-peer mesh; the pod meshes (also n=4) run
+# the first two sorted masks — which include a fully-dead pod, the
+# hierarchical-specific renormalization case — keeping each subprocess
+# inside the tier-1 budget.
+elastic_masks = masks_for(n) if (FULL or (n == 4 and len(dp_sizes) == 1)) else (
+    masks_for(n)[:2] if n > 1 else [])
+for sync in ("dsgd", "two_phase", "hierarchical", "faithful"):
+    for mask in elastic_masks:
+        k = int(sum(mask))
+        check_elastic(f"elastic/{sync}/live{k}of{n}/{mask}", ts_for(sync), mask,
+                      exact=sync != "dsgd")
+
+# EF + adaptive under the mask (cheap meshes full, pods one hierarchical)
+el_state = ("faithful", "two_phase") if FULL else (
+    ("hierarchical",) if len(dp_sizes) > 1 else ())
+for sync in el_state:
+    for mask in elastic_masks[:3]:
+        k = int(sum(mask))
+        check_state_elastic(
+            f"elastic_state/{sync}/live{k}of{n}",
+            ts_for(sync, error_feedback=True, adaptive=AdaptiveConfig(ema=0.9)),
+            mask, exact=True)
+
+# the fp16 size-adaptive tier rides the same contract: the smallest bucket
+# (2257 elements) ships raw half precision on both sides
+if FULL:
+    for sync in ("two_phase", "faithful"):
+        check_elastic(f"elastic/{sync}/fp16_tier",
+                      ts_for(sync, fp16_threshold=2500), (1.0, 0.0), exact=True)
+        check(f"bucketed/{sync}/fp16_tier", ts_for(sync, fp16_threshold=2500),
+              exact=True)
+
+# straggler pin: perturbing a dead peer's gradient cannot move the mean —
+# its encode still runs (side-effect-free), its wire row is zeroed.
+if n > 1:
+    mask = (1.0,) * (n - 1) + (0.0,)
+    for sync in ("two_phase", "faithful"):
+        ts = ts_for(sync)
+        base = run_mesh_live(ts, mask, leaves)
+        poked = [l.at[n - 1].mul(-3.7) for l in leaves]
+        got = run_mesh_live(ts, mask, poked)
+        for leaf_i, (a, b) in enumerate(zip(base, got)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"straggler/{sync}: dead peer moved the mean (leaf {leaf_i})")
+        print("OK", f"straggler/{sync}")
+
 print("ALL_OK")
 """
+
+
+_COUNT_SCRIPT = """
+import dataclasses
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.analysis.jaxpr_lint import count_collectives
+from repro.core.compressors import CompressorConfig
+from repro.dist.train_step import TrainStepConfig, _make_sync_fn
+from repro.elastic import ElasticConfig
+
+mesh = jax.make_mesh((2, 2), ("pod", "data"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
+leaf_shapes = [(64, 48), (37, 61), (2048,), (999,)]
+grads_like = [jax.ShapeDtypeStruct((4,) + s, jnp.float32) for s in leaf_shapes]
+pspecs = [P() for _ in leaf_shapes]
+key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+live = jax.ShapeDtypeStruct((4,), jnp.float32)
+
+for sync in ("dsgd", "two_phase", "hierarchical", "faithful"):
+    base = TrainStepConfig(
+        sync=sync, bucket_mb=1.0 / 64.0,
+        compressor=CompressorConfig(method="tnqsgd", bits=3))
+    el = dataclasses.replace(base, elastic=ElasticConfig(rate=0.3))
+    fn_off = _make_sync_fn(base, mesh, pspecs, grads_like)
+    fn_on = _make_sync_fn(el, mesh, pspecs, grads_like)
+    c_off = count_collectives(jax.make_jaxpr(fn_off)(grads_like, key))
+    c_on = count_collectives(jax.make_jaxpr(fn_on)(grads_like, key, live))
+    assert c_on == c_off, (sync, dict(c_on), dict(c_off))
+    print("OK", sync, dict(c_on))
+print("ALL_OK")
+"""
+
+
+def test_elastic_keeps_collective_counts():
+    """The live mask is a replicated in-graph value: enabling elastic must
+    not add (or remove) a single traced collective in any sync mode."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_COUNT_SCRIPT)],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "ALL_OK" in r.stdout, r.stdout
 
 
 @pytest.mark.parametrize("shape,axes", MESHES, ids=MESH_IDS)
